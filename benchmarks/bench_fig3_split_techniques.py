@@ -1,0 +1,37 @@
+"""Paper Figure 3: Split-Last technique comparison (LP vs LPP vs BFS vs
+default) — relative runtime, modularity, fraction of disconnected
+communities."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import disconnected_fraction, gsl_lpa, modularity
+from benchmarks.common import emit, suite
+
+
+def run(quiet: bool = False) -> list[dict]:
+    rows = []
+    for gname, (g, desc) in suite().items():
+        base = None
+        for split in ("none", "lp", "lpp", "bfs_host"):
+            gsl_lpa(g, split=split)          # warmup (jit compile)
+            res = gsl_lpa(g, split=split)
+            t = res.total_seconds
+            if split == "none":
+                base = t
+            rows.append({
+                "bench": f"{gname}/{split}",
+                "seconds": t,
+                "rel_runtime": round(t / max(base, 1e-9), 3),
+                "split_seconds": round(res.split_seconds, 4),
+                "Q": round(float(modularity(g, jnp.asarray(res.labels))), 4),
+                "disc_frac": round(float(disconnected_fraction(
+                    g, jnp.asarray(res.labels))), 5),
+            })
+    if not quiet:
+        emit(rows, "fig3_split_techniques")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Paper Figure 4: GSL-LPA vs FLPA / igraph LPA / NetworKit PLP —
+runtime, speedup, modularity, disconnected fraction."""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import disconnected_fraction, gsl_lpa, modularity
+from repro.core.baselines import flpa_host, igraph_lpa_host, networkit_plp
+from benchmarks.common import emit, suite
+
+BASELINES = {
+    "flpa": flpa_host,
+    "igraph_lpa": igraph_lpa_host,
+    "networkit_plp": networkit_plp,
+}
+
+
+def run(quiet: bool = False) -> list[dict]:
+    rows = []
+    for gname, (g, desc) in suite().items():
+        gsl_lpa(g, split="lp")               # warmup (jit compile)
+        t0 = time.perf_counter()
+        res = gsl_lpa(g, split="lp")
+        t_gsl = time.perf_counter() - t0
+        rows.append({
+            "bench": f"{gname}/gsl-lpa", "seconds": t_gsl,
+            "Q": round(float(modularity(g, jnp.asarray(res.labels))), 4),
+            "disc_frac": round(float(disconnected_fraction(
+                g, jnp.asarray(res.labels))), 5),
+            "medges_per_s": round(g.num_edges / max(t_gsl, 1e-9) / 1e6, 2),
+        })
+        for bname, fn in BASELINES.items():
+            t0 = time.perf_counter()
+            lab = fn(g)
+            t = time.perf_counter() - t0
+            rows.append({
+                "bench": f"{gname}/{bname}", "seconds": t,
+                "Q": round(float(modularity(g, jnp.asarray(lab))), 4),
+                "disc_frac": round(float(disconnected_fraction(
+                    g, jnp.asarray(lab))), 5),
+                "speedup_vs_gsl": round(t / max(t_gsl, 1e-9), 2),
+            })
+    if not quiet:
+        emit(rows, "fig4_baselines")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

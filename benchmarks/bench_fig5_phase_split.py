@@ -1,0 +1,39 @@
+"""Paper Figure 5: phase split — label-propagation vs splitting runtime.
+
+Paper: 47% propagation / 53% splitting on average (SL-BFS on CPU).
+Ours uses SL-LP on the TPU path; the split phase is proportionally cheaper
+because min-label sweeps reuse the same vectorised machinery.
+"""
+from __future__ import annotations
+
+from repro.core import gsl_lpa
+from benchmarks.common import emit, suite
+
+
+def run(quiet: bool = False) -> list[dict]:
+    rows = []
+    tot_lpa = tot_split = 0.0
+    for gname, (g, desc) in suite().items():
+        gsl_lpa(g, split="lp")               # warmup (jit compile)
+        res = gsl_lpa(g, split="lp")
+        tot = max(res.total_seconds, 1e-9)
+        tot_lpa += res.lpa_seconds
+        tot_split += res.split_seconds
+        rows.append({
+            "bench": gname, "seconds": tot,
+            "lpa_frac": round(res.lpa_seconds / tot, 3),
+            "split_frac": round(res.split_seconds / tot, 3),
+            "lpa_iters": res.lpa_iterations,
+            "split_iters": res.split_iterations,
+        })
+    s = max(tot_lpa + tot_split, 1e-9)
+    rows.append({"bench": "mean", "seconds": s,
+                 "lpa_frac": round(tot_lpa / s, 3),
+                 "split_frac": round(tot_split / s, 3)})
+    if not quiet:
+        emit(rows, "fig5_phase_split")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

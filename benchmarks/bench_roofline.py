@@ -1,0 +1,198 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape x mesh).
+
+Sources (per DESIGN.md §7; hardware: TPU v5e — 197 TF/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI):
+
+  compute term    = FLOPs_per_device / peak_flops
+  memory term     = HBM_bytes_per_device / hbm_bw
+  collective term = wire_bytes_per_device / link_bw
+
+The compiled SPMD module is per-device, so ``cost_analysis()`` numbers are
+per-device already.  XLA counts while-loop bodies ONCE, so rolled-scan
+lowerings under-report FLOPs/bytes by ~n_layers; cells with an unrolled
+lowering (``*_unrolled.json``) use the compiled number (source=hlo), the
+rest use the analytic model below (source=analytic), cross-validated
+against the unrolled cells.  Collective bytes always come from the HLO
+parse (with the while-trip multiplier applied at dry-run time).
+
+MODEL_FLOPS convention: 6*N_active*T for training (8*N*T with full remat),
+2*N_active*T for prefill, 2*N_active*B for decode, plus explicit S^2
+attention terms — the ratio MODEL_FLOPS / HLO_FLOPs flags remat/redundancy
+waste.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import ARCHS, get_config, supported_shapes
+from repro.configs.base import SHAPES
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # B/s
+LINK_BW = 50e9           # B/s / link
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+# ---------------------------------------------------------------- FLOPs ----
+def attention_flops_fwd(cfg, b, s_q, s_kv):
+    """QK^T + PV for every attention layer (full rectangle, as compiled)."""
+    l_attn = sum(1 for mix, _ in cfg.layer_kinds() if mix == "attn")
+    per_layer = 4 * b * s_q * s_kv * cfg.n_heads * cfg.head_dim
+    if cfg.kind == "encdec":
+        # decoder self + cross; encoder self
+        enc = 4 * b * s_kv * s_kv * cfg.n_heads * cfg.head_dim \
+            * cfg.enc_layers
+        cross = 4 * b * s_q * cfg.cross_memory_len * cfg.n_heads \
+            * cfg.head_dim * cfg.n_layers
+        return per_layer * l_attn + enc + cross
+    return per_layer * l_attn
+
+
+def model_flops(cfg, shape: str) -> dict:
+    sp = SHAPES[shape]
+    b, s = sp.global_batch, sp.seq_len
+    n_act = cfg.active_param_count()
+    if sp.step == "train":
+        t = b * s
+        matmul = 6 * n_act * t
+        if cfg.remat == "full":
+            matmul = 8 * n_act * t          # + recompute forward
+        attn = attention_flops_fwd(cfg, b, s, s) * 4   # fwd+bwd+remat
+        return {"model_flops": 6 * n_act * t,          # canonical 6ND
+                "expected_hlo_flops": matmul + attn}
+    if sp.step == "prefill":
+        t = b * s
+        return {"model_flops": 2 * n_act * t,
+                "expected_hlo_flops": 2 * n_act * t
+                + attention_flops_fwd(cfg, b, s, s)}
+    # decode: one token, cache of s; enc-dec reads the (precomputed)
+    # cross memory, the encoder itself does NOT run
+    if cfg.kind == "encdec":
+        l_attn = cfg.n_layers
+        self_a = 4 * b * 1 * s * cfg.n_heads * cfg.head_dim * l_attn
+        cross = 4 * b * 1 * cfg.cross_memory_len * cfg.n_heads \
+            * cfg.head_dim * l_attn
+        return {"model_flops": 2 * n_act * b,
+                "expected_hlo_flops": 2 * n_act * b + self_a + cross}
+    return {"model_flops": 2 * n_act * b,
+            "expected_hlo_flops": 2 * n_act * b
+            + attention_flops_fwd(cfg, b, 1, s)}
+
+
+def analytic_hbm_bytes(cfg, shape: str, chips: int,
+                       state_bytes_per_dev: int) -> float:
+    """Per-device HBM traffic per step (roofline memory numerator).
+
+    train:   read params+opt, write params+opt (~2x state) + activation
+             spill (2 bytes x tokens x d x layers / chips, saved + reread)
+    prefill: read params + write KV cache
+    decode:  read params + read cache once (the classic decode roofline)
+    """
+    sp = SHAPES[shape]
+    b, s = sp.global_batch, sp.seq_len
+    if sp.step == "train":
+        act = 2 * b * s * cfg.d_model * cfg.n_layers * 2 * 2 / chips
+        return 2.0 * state_bytes_per_dev + act
+    if sp.step == "prefill":
+        return float(state_bytes_per_dev) \
+            + 2 * b * s * cfg.d_model * cfg.n_layers * 2 / chips
+    return float(state_bytes_per_dev)   # decode: params + cache read once
+
+
+# ------------------------------------------------------------ the table ----
+def load_cell(arch: str, shape: str, mesh: str) -> dict | None:
+    unrolled = DRYRUN_DIR / f"{arch}_{shape}_{mesh}_unrolled.json"
+    rolled = DRYRUN_DIR / f"{arch}_{shape}_{mesh}.json"
+    rec = None
+    if rolled.exists():
+        rec = json.loads(rolled.read_text())
+    if unrolled.exists():
+        u = json.loads(unrolled.read_text())
+        if rec is None:
+            rec = u
+        else:
+            rec["cost_analysis"] = u["cost_analysis"]
+            rec["unrolled"] = True
+    return rec
+
+
+def roofline_row(arch: str, shape: str, mesh: str = "pod") -> dict | None:
+    rec = load_cell(arch, shape, mesh)
+    if rec is None:
+        return None
+    cfg = get_config(arch)
+    chips = rec["chips"]
+    mf = model_flops(cfg, shape)
+    state_b = rec["meta"].get("analytic_state_bytes_per_device", 0)
+
+    if rec.get("unrolled"):
+        flops_dev = rec["cost_analysis"].get("flops", 0.0)
+        flops_src = "hlo_unrolled"
+    else:
+        flops_dev = mf["expected_hlo_flops"] / chips
+        flops_src = "analytic"
+    mem_dev = analytic_hbm_bytes(cfg, shape, chips, state_b)
+    wire_dev = rec["collectives"]["wire_bytes"].get("total", 0.0)
+    # CPU-backend float normalization upcasts bf16 tensors to f32, so the
+    # parsed HLO shows activation/gradient collectives at 2x their TPU
+    # width.  LM-cell traffic is bf16-dominated on TPU -> halve; the graph
+    # engine exchanges s32 labels (true 4B) -> no correction.
+    wire_dev *= 0.5
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = mem_dev / HBM_BW
+    t_coll = wire_dev / LINK_BW
+    dominant = max((t_compute, "compute"), (t_memory, "memory"),
+                   (t_coll, "collective"))[1]
+    bound = max(t_compute, t_memory, t_coll)
+    useful = mf["model_flops"] / chips / PEAK_FLOPS
+    return {
+        "arch": arch, "shape": shape, "mesh": mesh, "chips": chips,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": mf["model_flops"],
+        "hlo_flops_per_dev": flops_dev, "flops_source": flops_src,
+        "useful_ratio": mf["model_flops"] / max(flops_dev * chips, 1.0),
+        "roofline_fraction": useful / max(bound, 1e-30),
+        "state_bytes_per_dev": state_b,
+        "compile_seconds": rec.get("compile_seconds"),
+    }
+
+
+def run(quiet: bool = False, mesh: str = "pod") -> list[dict]:
+    rows = []
+    for arch, cfg in ARCHS.items():
+        for shape in supported_shapes(cfg):
+            r = roofline_row(arch, shape, mesh)
+            if r:
+                rows.append(r)
+    # the paper's own workload
+    g = DRYRUN_DIR / f"graph-lpa_graph_{mesh}.json"
+    if g.exists():
+        rec = json.loads(g.read_text())
+        wire = rec["collectives"]["wire_bytes"].get("total", 0.0)
+        flops = rec["cost_analysis"].get("flops", 0.0)
+        ba = rec["cost_analysis"].get("bytes accessed", 0.0)
+        rows.append({
+            "arch": "graph-lpa", "shape": "graph", "mesh": mesh,
+            "chips": rec["chips"],
+            "t_compute_s": flops / PEAK_FLOPS,
+            "t_memory_s": ba / HBM_BW,
+            "t_collective_s": wire / LINK_BW,
+            "dominant": "collective" if wire / LINK_BW >
+            max(flops / PEAK_FLOPS, ba / HBM_BW) else "memory",
+            "flops_source": "hlo",
+        })
+    if not quiet:
+        for r in rows:
+            print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},0.0,"
+                  f"tc={r['t_compute_s']:.3e};tm={r['t_memory_s']:.3e};"
+                  f"tx={r['t_collective_s']:.3e};dom={r['dominant']};"
+                  f"frac={r.get('roofline_fraction', 0):.3f};"
+                  f"src={r['flops_source']}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Shared benchmark infrastructure.
+
+The paper's Table-1 suite spans 25M..3.8B edges on a 64-thread Xeon; this
+container has one CPU core, so every graph class is represented by a
+scaled-down synthetic analogue with matching *structure* (degree profile /
+community shape).  Relative claims (technique ranking, phase split,
+disconnected fractions, GVE-vs-GSL overhead) are what transfer; absolute
+edges/s do not (benchmarked separately in §Perf via the dry-run roofline).
+"""
+from __future__ import annotations
+
+import time
+from functools import lru_cache
+
+import jax
+
+from repro.graphgen import (
+    erdos_renyi,
+    grid2d,
+    planted_partition,
+    rmat,
+)
+
+
+@lru_cache(maxsize=None)
+def suite():
+    """name -> (graph, class) — one analogue per Table-1 dataset class."""
+    return {
+        "web_rmat":    (rmat(12, 12, seed=1), "web (indochina-2004)"),
+        "social_rmat": (rmat(11, 24, seed=2), "social (com-Orkut)"),
+        "road_grid":   (grid2d(64), "road (asia_osm)"),
+        "kmer_sparse": (erdos_renyi(6000, 2.2, seed=3),
+                        "protein k-mer (kmer_A2a)"),
+        "planted":     (planted_partition(16, 64, 0.25, 0.002, seed=4)[0],
+                        "planted partition (quality ref)"),
+    }
+
+
+def timed(fn, *args, repeats: int = 3, **kw):
+    """Median wall time + last result (first call excluded = compile)."""
+    fn(*args, **kw)  # warmup/compile
+    times = []
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out) if hasattr(out, "block_until_ready") \
+            else None
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2], out
+
+
+def emit(rows: list[dict], name: str) -> None:
+    """Print benchmark rows as the harness CSV: name,us_per_call,derived."""
+    for r in rows:
+        us = r.get("seconds", 0.0) * 1e6
+        derived = ";".join(f"{k}={v}" for k, v in r.items()
+                           if k not in ("seconds", "bench"))
+        print(f"{name}/{r.get('bench', '')},{us:.1f},{derived}")

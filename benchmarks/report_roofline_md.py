@@ -1,0 +1,33 @@
+"""Render the §Roofline markdown table for EXPERIMENTS.md from dry-run JSONs.
+
+  PYTHONPATH=src:. python benchmarks/report_roofline_md.py [mesh]
+"""
+from __future__ import annotations
+
+import sys
+
+from benchmarks.bench_roofline import run
+
+
+def fmt(x, digits=3):
+    if x == 0:
+        return "0"
+    return f"{x:.{digits}e}"
+
+
+def main(mesh: str = "pod") -> None:
+    rows = run(quiet=True, mesh=mesh)
+    print(f"| arch | shape | t_compute (s) | t_memory (s) | t_collective (s)"
+          f" | dominant | roofline frac | useful ratio | flops src |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        print(f"| {r['arch']} | {r['shape']} | {fmt(r['t_compute_s'])} "
+              f"| {fmt(r['t_memory_s'])} | {fmt(r['t_collective_s'])} "
+              f"| **{r['dominant']}** "
+              f"| {r.get('roofline_fraction', 0):.3f} "
+              f"| {r.get('useful_ratio', 0):.2f} "
+              f"| {r['flops_source']} |")
+
+
+if __name__ == "__main__":
+    main(*(sys.argv[1:] or ["pod"]))

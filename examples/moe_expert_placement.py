@@ -1,0 +1,80 @@
+"""GSL-LPA as a framework feature: MoE expert placement from co-activation.
+
+Builds the expert co-activation graph from (simulated) router statistics of
+a 64-expert MoE, detects communities of frequently co-activated experts
+with GSL-LPA, and packs communities onto devices to minimise cross-device
+all-to-all traffic.  The paper's no-internally-disconnected-communities
+guarantee is what makes the packing sound: a disconnected 'community'
+would co-locate experts that never fire together, wasting HBM locality
+(DESIGN.md §4).
+
+    PYTHONPATH=src python examples/moe_expert_placement.py
+"""
+import numpy as np
+
+from repro.core import build_graph, gsl_lpa, gve_lpa, disconnected_fraction
+import jax.numpy as jnp
+
+
+def simulate_router_stats(n_experts=64, n_groups=8, tokens=20000, top_k=2,
+                          seed=0):
+    """Tokens pick experts with strong intra-group affinity."""
+    rng = np.random.default_rng(seed)
+    group_of = np.repeat(np.arange(n_groups), n_experts // n_groups)
+    co = np.zeros((n_experts, n_experts), dtype=np.int64)
+    for _ in range(tokens):
+        g = rng.integers(n_groups)
+        members = np.where(group_of == g)[0]
+        if rng.random() < 0.85:          # affinity pick
+            pair = rng.choice(members, size=top_k, replace=False)
+        else:                            # random pick
+            pair = rng.choice(n_experts, size=top_k, replace=False)
+        for a in pair:
+            for b in pair:
+                if a != b:
+                    co[a, b] += 1
+    return co, group_of
+
+
+def placement_cost(co, device_of):
+    """Cross-device co-activation volume (all-to-all bytes proxy)."""
+    cross = co * (device_of[:, None] != device_of[None, :])
+    return int(cross.sum()) // 2
+
+
+def main() -> None:
+    co, truth = simulate_router_stats()
+    e = np.argwhere(np.triu(co, 1) > 0)
+    w = co[e[:, 0], e[:, 1]].astype(np.float32)
+    g = build_graph(e, w, n=co.shape[0])
+
+    res = gsl_lpa(g, split="lp")
+    frac = float(disconnected_fraction(g, jnp.asarray(res.labels)))
+    print(f"expert co-activation graph: {g.num_edges} edges, "
+          f"{len(set(res.labels.tolist()))} communities, "
+          f"disconnected={frac:.0%}")
+
+    # pack communities onto 8 devices greedily by size
+    n_devices = 8
+    labels = res.labels
+    comm_ids, counts = np.unique(labels, return_counts=True)
+    order = np.argsort(-counts)
+    device_of = np.zeros(co.shape[0], dtype=np.int64)
+    load = np.zeros(n_devices, dtype=np.int64)
+    for c in comm_ids[order]:
+        d = int(np.argmin(load))
+        device_of[labels == c] = d
+        load[d] += int((labels == c).sum())
+
+    rng = np.random.default_rng(1)
+    random_placement = rng.permutation(co.shape[0]) % n_devices
+    cost_lpa = placement_cost(co, device_of)
+    cost_rand = placement_cost(co, random_placement)
+    print(f"cross-device co-activation: random={cost_rand}  "
+          f"gsl-lpa={cost_lpa}  ({1 - cost_lpa / cost_rand:.0%} less "
+          f"all-to-all traffic)")
+    assert cost_lpa < cost_rand
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Quickstart: GSL-LPA community detection in five lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gsl_lpa, gve_lpa, modularity, disconnected_fraction
+from repro.graphgen import karate_club, planted_partition
+
+
+def main() -> None:
+    # --- Zachary's karate club ---
+    g, truth = karate_club()
+    res = gsl_lpa(g, split="lp")          # propagation + Split-Last
+    q = float(modularity(g, jnp.asarray(res.labels)))
+    print(f"karate club: {len(set(res.labels.tolist()))} communities, "
+          f"Q={q:.3f}, {res.lpa_iterations} LPA iters, "
+          f"{res.split_iterations} split sweeps")
+
+    # --- planted partition: GSL-LPA vs plain parallel LPA (GVE-LPA) ---
+    g2, truth2 = planted_partition(12, 50, p_in=0.3, p_out=0.003, seed=7)
+    for name, fn in (("GVE-LPA (no split)", gve_lpa),
+                     ("GSL-LPA (split-last)", lambda g: gsl_lpa(g, split="lp"))):
+        r = fn(g2)
+        frac = float(disconnected_fraction(g2, jnp.asarray(r.labels)))
+        print(f"{name:22s} Q={float(modularity(g2, jnp.asarray(r.labels))):.3f} "
+              f"communities={len(set(r.labels.tolist()))} "
+              f"disconnected_frac={frac:.3%}  "
+              f"t={r.total_seconds * 1e3:.0f}ms")
+
+    # ground-truth recovery check
+    labels = res.labels
+    agree = np.mean([
+        (labels[i] == labels[j]) == (truth[i] == truth[j])
+        for i in range(0, 34, 3) for j in range(i + 1, 34, 3)])
+    print(f"karate pairwise agreement with factions: {agree:.2%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Assigned architecture configs (--arch <id>)."""
+from repro.configs.base import (  # noqa: F401
+    SHAPES,
+    ArchConfig,
+    ShapeSpec,
+    input_specs,
+    supported_shapes,
+)
+from repro.configs.registry import ARCHS, get_config, reduced_config  # noqa: F401

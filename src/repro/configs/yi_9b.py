@@ -1,0 +1,8 @@
+"""Yi-9B — llama-arch dense GQA [arXiv:2403.04652; hf]."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="yi-9b", family="dense",
+    n_layers=48, d_model=4096, n_heads=32, n_kv=4, d_ff=11008,
+    vocab=64000, head_dim=128, rope_theta=5000000.0,
+)

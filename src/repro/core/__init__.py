@@ -1,0 +1,17 @@
+"""The paper's primary contribution: GSL-LPA community detection in JAX."""
+from repro.core.graph import Graph, build_graph  # noqa: F401
+from repro.core.gsl import GslResult, gsl_lpa, gve_lpa  # noqa: F401
+from repro.core.lpa import LpaState, lpa_move, lpa_run  # noqa: F401
+from repro.core.modularity import modularity  # noqa: F401
+from repro.core.detect import (  # noqa: F401
+    disconnected_communities,
+    disconnected_communities_host,
+    disconnected_fraction,
+)
+from repro.core.split import (  # noqa: F401
+    compact_labels,
+    num_communities,
+    split_bfs_host,
+    split_lp,
+    split_lpp,
+)

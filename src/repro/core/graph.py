@@ -1,0 +1,155 @@
+"""Graph representation for the GSL-LPA engine.
+
+A ``Graph`` is an immutable pytree holding a padded CSR / edge-list hybrid:
+edges are stored *directed both ways* (undirected graph semantics, as in the
+paper) and sorted by source vertex, so the ``src`` array is the CSR expansion
+of ``row_ptr``.  Padding slots (up to ``m_pad``, a multiple of 128 for TPU
+alignment) carry ``src = dst = 0``, ``wgt = 0`` and ``edge_mask = False``.
+
+Host-side construction is numpy; the resulting arrays are device arrays.
+Static metadata (``n``, ``m_pad``, ``num_edges``) lives in pytree aux data so
+jitted functions specialise on shape, never on content.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_LANE = 128  # TPU lane alignment for padded edge arrays.
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("row_ptr", "src", "dst", "wgt", "edge_mask", "kdeg"),
+         meta_fields=("n", "m_pad", "num_edges"))
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Padded undirected graph (both edge directions materialised)."""
+    # --- static metadata ---
+    n: int          # number of vertices
+    m_pad: int      # padded directed edge count (multiple of 128)
+    num_edges: int  # actual directed edge count (2x undirected)
+    # --- arrays ---
+    row_ptr: jnp.ndarray   # (n + 1,) int32, CSR offsets into src/dst/wgt
+    src: jnp.ndarray       # (m_pad,) int32, edge sources (sorted)
+    dst: jnp.ndarray       # (m_pad,) int32, edge destinations
+    wgt: jnp.ndarray       # (m_pad,) float32, edge weights (0 on padding)
+    edge_mask: jnp.ndarray  # (m_pad,) bool, True for real edges
+    kdeg: jnp.ndarray      # (n,) float32, weighted degree K_i
+
+    @property
+    def total_weight(self) -> jnp.ndarray:
+        """Sum of directed edge weights == 2m in the paper's notation."""
+        return jnp.sum(self.wgt)
+
+    def degrees(self) -> jnp.ndarray:
+        return self.row_ptr[1:] - self.row_ptr[:-1]
+
+
+def build_graph(edges: np.ndarray, weights: np.ndarray | None = None,
+                n: int | None = None, symmetrize: bool = True) -> Graph:
+    """Build a :class:`Graph` from an undirected edge list.
+
+    Args:
+      edges: (E, 2) int array of endpoints.  Self loops are dropped
+        (``scanCommunities`` excludes i == j).  Duplicate edges are merged
+        with their weights summed.
+      weights: (E,) float array; defaults to unit weights (paper default).
+      n: vertex count; defaults to ``edges.max() + 1``.
+      symmetrize: materialise both directions (paper: undirected).
+    """
+    edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    if weights is None:
+        weights = np.ones(len(edges), dtype=np.float64)
+    weights = np.asarray(weights, dtype=np.float64).reshape(-1)
+    if n is None:
+        n = int(edges.max()) + 1 if len(edges) else 1
+
+    keep = edges[:, 0] != edges[:, 1]
+    edges, weights = edges[keep], weights[keep]
+    if symmetrize:
+        edges = np.concatenate([edges, edges[:, ::-1]], axis=0)
+        weights = np.concatenate([weights, weights], axis=0)
+
+    # Merge duplicates: sort by (src, dst), sum weights over runs.
+    key = edges[:, 0] * n + edges[:, 1]
+    order = np.argsort(key, kind="stable")
+    key, edges, weights = key[order], edges[order], weights[order]
+    uniq, inv = np.unique(key, return_inverse=True)
+    wsum = np.zeros(len(uniq), dtype=np.float64)
+    np.add.at(wsum, inv, weights)
+    usrc = (uniq // n).astype(np.int32)
+    udst = (uniq % n).astype(np.int32)
+
+    num_edges = len(uniq)
+    m_pad = max(_round_up(num_edges, _LANE), _LANE)
+    src = np.zeros(m_pad, dtype=np.int32)
+    dst = np.zeros(m_pad, dtype=np.int32)
+    wgt = np.zeros(m_pad, dtype=np.float32)
+    mask = np.zeros(m_pad, dtype=bool)
+    src[:num_edges], dst[:num_edges] = usrc, udst
+    wgt[:num_edges] = wsum.astype(np.float32)
+    mask[:num_edges] = True
+
+    row_ptr = np.zeros(n + 1, dtype=np.int64)
+    np.add.at(row_ptr[1:], usrc, 1)
+    row_ptr = np.cumsum(row_ptr).astype(np.int32)
+
+    kdeg = np.zeros(n, dtype=np.float64)
+    np.add.at(kdeg, usrc, wsum)
+
+    return Graph(
+        n=int(n), m_pad=int(m_pad), num_edges=int(num_edges),
+        row_ptr=jnp.asarray(row_ptr),
+        src=jnp.asarray(src), dst=jnp.asarray(dst), wgt=jnp.asarray(wgt),
+        edge_mask=jnp.asarray(mask), kdeg=jnp.asarray(kdeg, dtype=jnp.float32),
+    )
+
+
+def to_numpy_adj(graph: Graph) -> list[list[tuple[int, float]]]:
+    """Host adjacency list (for the BFS oracle / host split path)."""
+    src = np.asarray(graph.src)[: graph.num_edges]
+    dst = np.asarray(graph.dst)[: graph.num_edges]
+    wgt = np.asarray(graph.wgt)[: graph.num_edges]
+    adj: list[list[tuple[int, float]]] = [[] for _ in range(graph.n)]
+    for s, d, w in zip(src.tolist(), dst.tolist(), wgt.tolist()):
+        adj[s].append((d, w))
+    return adj
+
+
+def to_padded_neighbors(graph: Graph, d_max: int | None = None,
+                        ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Dense padded neighbor matrices for the Pallas tile path.
+
+    Returns (nbr, nw, nmask) with shapes (n_pad, d_max): neighbor vertex ids,
+    weights, and validity.  ``n_pad`` rounds n up to 8 (sublane), ``d_max``
+    rounds the max degree up to 128 (lane).  Pad neighbor ids point at the row
+    vertex itself with weight 0 (self edges are excluded by construction, so a
+    0-weight self slot can never win the argmax).
+    """
+    row_ptr = np.asarray(graph.row_ptr)
+    dst = np.asarray(graph.dst)[: graph.num_edges]
+    wgt = np.asarray(graph.wgt)[: graph.num_edges]
+    deg = row_ptr[1:] - row_ptr[:-1]
+    if d_max is None:
+        d_max = max(int(deg.max()) if len(deg) else 1, 1)
+    d_max = _round_up(d_max, _LANE)
+    n_pad = _round_up(graph.n, 8)
+
+    nbr = np.repeat(np.arange(n_pad, dtype=np.int32)[:, None], d_max, axis=1)
+    nw = np.zeros((n_pad, d_max), dtype=np.float32)
+    nmask = np.zeros((n_pad, d_max), dtype=bool)
+    for i in range(graph.n):
+        lo, hi = int(row_ptr[i]), int(row_ptr[i + 1])
+        k = min(hi - lo, d_max)
+        nbr[i, :k] = dst[lo:lo + k]
+        nw[i, :k] = wgt[lo:lo + k]
+        nmask[i, :k] = True
+    return nbr, nw, nmask

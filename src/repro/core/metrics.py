@@ -1,0 +1,52 @@
+"""Partition-quality metrics: NMI and ARI (ground-truth evaluation).
+
+Used to score recovered communities against planted SBM partitions —
+complements modularity (which needs no ground truth).  Pure numpy (host
+metric code; runs once per experiment, not in the hot loop).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _contingency(a: np.ndarray, b: np.ndarray):
+    a = np.asarray(a).ravel()
+    b = np.asarray(b).ravel()
+    assert a.shape == b.shape
+    _, ai = np.unique(a, return_inverse=True)
+    _, bi = np.unique(b, return_inverse=True)
+    na, nb = ai.max() + 1, bi.max() + 1
+    m = np.zeros((na, nb), dtype=np.int64)
+    np.add.at(m, (ai, bi), 1)
+    return m
+
+
+def normalized_mutual_info(a, b) -> float:
+    """NMI with arithmetic-mean normalisation (0..1)."""
+    m = _contingency(a, b)
+    n = m.sum()
+    pa = m.sum(1) / n
+    pb = m.sum(0) / n
+    pab = m / n
+    with np.errstate(divide="ignore", invalid="ignore"):
+        mi = np.nansum(pab * (np.log(pab)
+                              - np.log(pa[:, None] * pb[None, :])))
+        ha = -np.nansum(np.where(pa > 0, pa * np.log(pa), 0.0))
+        hb = -np.nansum(np.where(pb > 0, pb * np.log(pb), 0.0))
+    denom = 0.5 * (ha + hb)
+    return float(mi / denom) if denom > 1e-12 else 1.0
+
+
+def adjusted_rand_index(a, b) -> float:
+    """ARI (chance-corrected; 1 = identical partitions, ~0 = random)."""
+    m = _contingency(a, b)
+    n = m.sum()
+    comb = lambda x: x * (x - 1) / 2.0
+    sum_ij = comb(m).sum()
+    sum_a = comb(m.sum(1)).sum()
+    sum_b = comb(m.sum(0)).sum()
+    total = comb(np.asarray(n, dtype=np.float64))
+    expected = sum_a * sum_b / max(total, 1e-12)
+    max_index = 0.5 * (sum_a + sum_b)
+    denom = max_index - expected
+    return float((sum_ij - expected) / denom) if abs(denom) > 1e-12 else 1.0

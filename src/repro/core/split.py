@@ -1,0 +1,133 @@
+"""Split-Last (SL): separate internally-disconnected communities.
+
+Implements the paper's three techniques (Section 4):
+
+* ``split_lp``   — Algorithm 1, minimum-label Label Propagation (SL-LP).
+* ``split_lpp``  — Algorithm 1 with pruning (SL-LPP).
+* ``split_bfs_host`` — Algorithm 2, per-community BFS.  BFS worklists are
+  inherently sequential per component; this is the paper's preferred *CPU*
+  technique and is kept as the host execution path / test oracle.  On TPU the
+  production path is LP/LPP (see DESIGN.md §2 — the CPU ranking flips).
+
+Beyond-paper optimization: ``shortcut=True`` adds Shiloach-Vishkin pointer
+shortcutting (``L <- min(L, L[L])`` after each neighbor-min sweep).  Labels
+always point at a vertex in the same community and component, so adopting the
+label's label is sound; it collapses convergence from O(component diameter)
+to O(log diameter) sweeps.  Disabled by default for paper-faithful runs.
+"""
+from __future__ import annotations
+
+from collections import deque
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Graph, to_numpy_adj
+
+
+class SplitState(NamedTuple):
+    labels: jnp.ndarray     # (n,) int32 minimum-label per (community, component)
+    active: jnp.ndarray     # (n,) bool  pruning flags (LPP only; all-True for LP)
+    iterations: jnp.ndarray  # () int32
+    delta_n: jnp.ndarray    # () int32
+
+
+def _min_label_sweep(graph: Graph, comm: jnp.ndarray, labels: jnp.ndarray,
+                     active: jnp.ndarray, prune: bool, shortcut: bool):
+    """One sweep of Algorithm 1's loop body (lines 8-21), vectorised."""
+    n = graph.n
+    same = graph.edge_mask & (comm[graph.src] == comm[graph.dst])
+    # min over same-community neighbors; sentinel n elsewhere
+    cand = jnp.where(same, labels[graph.dst], n).astype(jnp.int32)
+    nbr_min = jax.ops.segment_min(cand, graph.src, num_segments=n)
+    new = jnp.minimum(labels, nbr_min.astype(labels.dtype))
+    if prune:
+        new = jnp.where(active, new, labels)
+    if shortcut:
+        new = jnp.minimum(new, new[new])  # pointer jump (beyond-paper)
+    changed = new != labels
+    delta_n = jnp.sum(changed.astype(jnp.int32))
+    if prune:
+        # reactivate same-community neighbors of changed vertices (line 20-21)
+        nxt_active = jax.ops.segment_max(
+            (changed[graph.dst] & same).astype(jnp.int32), graph.src,
+            num_segments=n) > 0
+    else:
+        nxt_active = active
+    return new, nxt_active, changed, delta_n
+
+
+@partial(jax.jit, static_argnames=("prune", "shortcut"))
+def split_lp(graph: Graph, comm: jnp.ndarray, prune: bool = False,
+             shortcut: bool = False) -> SplitState:
+    """Algorithm 1: SL-LP (``prune=False``) / SL-LPP (``prune=True``).
+
+    Returns labels where each vertex carries the minimum vertex id reachable
+    within (its community x its connected component) — i.e. one unique label
+    per component per community, which is exactly the split partition.
+    """
+    n = graph.n
+    comm = comm.astype(jnp.int32)
+    state = SplitState(labels=jnp.arange(n, dtype=jnp.int32),
+                       active=jnp.ones(n, dtype=bool),
+                       iterations=jnp.int32(0), delta_n=jnp.int32(n))
+
+    def cond(s: SplitState):
+        return s.delta_n > 0
+
+    def body(s: SplitState):
+        new, nxt_active, _, dn = _min_label_sweep(
+            graph, comm, s.labels, s.active, prune, shortcut)
+        return SplitState(new, nxt_active, s.iterations + 1, dn)
+
+    return jax.lax.while_loop(cond, body, state)
+
+
+def split_lpp(graph: Graph, comm: jnp.ndarray, shortcut: bool = False):
+    return split_lp(graph, comm, prune=True, shortcut=shortcut)
+
+
+def split_bfs_host(graph: Graph, comm: np.ndarray) -> np.ndarray:
+    """Algorithm 2: per-community BFS splitting (host / oracle path).
+
+    Sequential-per-component frontier BFS with the paper's semantics: each
+    still-unvisited vertex seeds a BFS restricted to its community; all
+    reached vertices adopt the seed's id as their new community label.
+    """
+    adj = to_numpy_adj(graph)
+    comm = np.asarray(comm)
+    n = graph.n
+    out = np.arange(n, dtype=np.int32)
+    visited = np.zeros(n, dtype=bool)
+    for i in range(n):
+        if visited[i]:
+            continue
+        visited[i] = True
+        q = deque([i])
+        while q:
+            u = q.popleft()
+            out[u] = i
+            for v, _w in adj[u]:
+                if not visited[v] and comm[v] == comm[i]:
+                    visited[v] = True
+                    q.append(v)
+    return out
+
+
+def compact_labels(labels: jnp.ndarray) -> jnp.ndarray:
+    """Relabel communities to a dense [0, K) range (jit-able, any values)."""
+    sort_lab = jnp.sort(labels)
+    is_new = jnp.concatenate([jnp.ones((1,), bool),
+                              sort_lab[1:] != sort_lab[:-1]])
+    rank_at_pos = jnp.cumsum(is_new.astype(jnp.int32)) - 1
+    idx = jnp.searchsorted(sort_lab, labels, side="left")
+    return rank_at_pos[idx].astype(jnp.int32)
+
+
+def num_communities(labels: jnp.ndarray) -> jnp.ndarray:
+    sort_lab = jnp.sort(labels)
+    is_new = jnp.concatenate([jnp.ones((1,), bool), sort_lab[1:] != sort_lab[:-1]])
+    return jnp.sum(is_new.astype(jnp.int32))

@@ -1,0 +1,2 @@
+from repro.ft.preemption import PreemptionHandler  # noqa: F401
+from repro.ft.straggler import StragglerMonitor  # noqa: F401

@@ -1,0 +1,110 @@
+"""Pallas TPU flash attention with block-triangular causal skipping.
+
+The XLA-level chunked attention (models/attention.py) computes the full
+causal *rectangle* and masks — a 2x FLOPs tax on attention that §Roofline
+lists as the top compute lever for the prefill/train cells.  This kernel
+iterates KV blocks per query block and *predicates away* blocks entirely
+above the causal diagonal (`pl.when`): the MXU executes only the lower
+block triangle (+ the masked diagonal blocks).
+
+Layout: grid (B, H, Sq/bq, Skv/bk), innermost = KV blocks.  The online-
+softmax state (m, l, acc) lives in revisited output blocks whose index map
+ignores the KV grid dim — TPU grids iterate sequentially, so accumulation
+across the innermost dimension is well-defined (and interpret mode matches).
+GQA maps query head h to KV head h // (H / K) inside the index maps.
+
+VMEM per step: q/k/v blocks (bq|bk x hd) + (bq, bk) scores + f32 acc
+(bq x hd) — ~1.3 MB at bq=bk=256, hd=128: far under budget, so ops.py picks
+larger bq for small models.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref, *,
+                  block_q: int, block_k: int, scale: float, causal: bool):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # causal block skip: KV block strictly above the diagonal does nothing
+    run = (ki * block_k <= qi * block_q + block_q - 1) if causal else True
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)               # (bk, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (bq, bk)
+        if causal:
+            q_pos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            k_pos = ki * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+        m_old = m_ref[0, 0]                               # (bq, 1)
+        l_old = l_ref[0, 0]
+        m_new = jnp.maximum(m_old, jnp.max(s, axis=1, keepdims=True))
+        corr = jnp.exp(m_old - m_new)                     # (bq, 1)
+        p = jnp.exp(s - m_new)                            # (bq, bk)
+        l_new = l_old * corr + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p, v_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (bq, hd)
+        acc_ref[0, 0] = acc_ref[0, 0] * corr + pv
+        m_ref[0, 0] = m_new
+        l_ref[0, 0] = l_new
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           block_q: int = 256, block_k: int = 256,
+                           interpret: bool = False):
+    """q: (B, H, Sq, hd); k/v: (B, K, Skv, hd).  Returns (B, H, Sq, hd).
+
+    Sq % block_q == 0 and Skv % block_k == 0 (ops.py pads).
+    """
+    b, h, sq, hd = q.shape
+    kk, skv = k.shape[1], k.shape[2]
+    g = h // kk
+    assert h % kk == 0 and sq % block_q == 0 and skv % block_k == 0
+    grid = (b, h, sq // block_q, skv // block_k)
+    scale = 1.0 / (hd ** 0.5)
+
+    q_spec = pl.BlockSpec((1, 1, block_q, hd),
+                          lambda bi, hi, qi, ki: (bi, hi, qi, 0))
+    kv_spec = pl.BlockSpec((1, 1, block_k, hd),
+                           lambda bi, hi, qi, ki: (bi, hi // g, ki, 0))
+    acc_spec = pl.BlockSpec((1, 1, block_q, hd),
+                            lambda bi, hi, qi, ki: (bi, hi, qi, 0))
+    ml_spec = pl.BlockSpec((1, 1, block_q, 1),
+                           lambda bi, hi, qi, ki: (bi, hi, qi, 0))
+
+    kernel = functools.partial(_flash_kernel, block_q=block_q,
+                               block_k=block_k, scale=scale, causal=causal)
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=(acc_spec, ml_spec, ml_spec),
+        out_shape=(
+            jax.ShapeDtypeStruct((b, h, sq, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, sq, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, sq, 1), jnp.float32),
+        ),
+        interpret=interpret,
+    )(q, k, v)
+    return (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)

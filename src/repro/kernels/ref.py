@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the Pallas kernels (bit-exact semantics)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_SENTINEL = jnp.int32(2147483647)
+
+
+def _hash(labels: jnp.ndarray, seed: jnp.ndarray) -> jnp.ndarray:
+    x = labels.astype(jnp.uint32) * jnp.uint32(2654435761)
+    x ^= seed.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)
+    x ^= x >> 16
+    x *= jnp.uint32(0x7FEB352D)
+    x ^= x >> 15
+    return x.astype(jnp.int32) & jnp.int32(0x7FFFFFFF)
+
+
+def label_argmax_ref(nbr_lab: jnp.ndarray, nbr_w: jnp.ndarray,
+                     nbr_mask: jnp.ndarray, cur: jnp.ndarray,
+                     seed: jnp.ndarray):
+    """Oracle for ``label_argmax_pallas`` (same tie-break chain)."""
+    w = jnp.where(nbr_mask, nbr_w, 0.0)
+    eq = (nbr_lab[:, :, None] == nbr_lab[:, None, :]).astype(w.dtype)
+    scores = jnp.einsum("bj,bjk->bk", w, eq)
+    scores = jnp.where(nbr_mask, scores, -1.0)
+
+    best_w = jnp.max(scores, axis=1, keepdims=True)
+    is_best = nbr_mask & (scores >= best_w) & (best_w > 0)
+    h = _hash(nbr_lab, jnp.asarray(seed, jnp.int32))
+    best_h = jnp.max(jnp.where(is_best, h, -1), axis=1, keepdims=True)
+    pick = is_best & (h == best_h)
+    best_lab = jnp.min(jnp.where(pick, nbr_lab, _SENTINEL), axis=1)
+
+    cur_w = jnp.sum(jnp.where(nbr_lab == cur[:, None], w, 0.0), axis=1)
+    return best_lab, jnp.maximum(best_w[:, 0], 0.0), cur_w
+
+
+def min_label_ref(nbr_lab: jnp.ndarray, nbr_comm: jnp.ndarray,
+                  nbr_mask: jnp.ndarray, self_lab: jnp.ndarray,
+                  self_comm: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for ``min_label_pallas``."""
+    ok = nbr_mask & (nbr_comm == self_comm[:, None])
+    cand = jnp.where(ok, nbr_lab, _SENTINEL)
+    return jnp.minimum(self_lab.astype(jnp.int32), jnp.min(cand, axis=1))

@@ -1,0 +1,343 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks device count at first init.
+"""Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) cell.
+
+For each cell this driver AOT-compiles the appropriate step function against
+pure ShapeDtypeStructs (no allocation), then extracts:
+  * compiled.memory_analysis()  — per-device bytes (argument/output/temp/peak)
+  * compiled.cost_analysis()    — HLO FLOPs + bytes accessed
+  * collective bytes            — parsed from optimized HLO text, summed per
+                                  op kind (all-gather/all-reduce/...)
+and writes one JSON per cell into experiments/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-9b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all            # every cell, both meshes
+  python -m repro.launch.dryrun --arch graph-lpa --mesh multipod
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, get_config, input_specs, supported_shapes
+from repro.configs.base import SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as T
+from repro.train import steps as S
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_CALL_RE = re.compile(
+    r"=\s+(?:\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"\b(f64|f32|f16|bf16|s64|u64|s32|u32|s16|u16|s8|u8|"
+                       r"pred|f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str, loop_trips: int = 1) -> dict:
+    """Per-device collective traffic from optimized HLO text.
+
+    CPU HLO prints operand *references* without shapes, so sizes come from
+    the result tuple (left of '='), scaled to on-the-wire bytes per device
+    with ring-algorithm formulas over the replica-group size S:
+      all-reduce       2 * size * (S-1)/S
+      all-gather       result * (S-1)/S      (result = S x operand)
+      reduce-scatter   result * (S-1)        (~input * (S-1)/S)
+      all-to-all       size * (S-1)/S
+      collective-permute  size
+    Async -start/-done pairs are counted once (at the -start).
+
+    XLA cost/text inspection sees while bodies once; collectives inside a
+    computation whose name marks it as a loop body are multiplied by
+    ``loop_trips`` (= the layer-scan trip count for rolled lowerings;
+    pass 1 for unrolled lowerings or loop-free programs).
+    """
+    totals: dict[str, float] = {}
+    wire: dict[str, float] = {}
+    counts: dict[str, int] = {}
+    in_body = False
+    depth = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # computation headers look like: %name (args) -> type {  /  ENTRY ...
+        if stripped.endswith("{") and ("(" in stripped):
+            name = stripped.split(" ", 1)[0].lower()
+            in_body = ("body" in name) or ("while" in name)
+            depth = 1
+            mult = loop_trips if in_body else 1
+        m = _COLL_CALL_RE.search(line)
+        if m is not None:
+            kind = m.group(1)
+            lhs = line[: m.end()]
+            res_bytes = sum(_shape_bytes(d, dims)
+                            for d, dims in _SHAPE_RE.findall(lhs))
+            g = _GROUPS_RE.search(line)
+            if g:
+                s = int(g.group(2))
+            else:
+                gl = _GROUPS_LIST_RE.search(line)
+                s = gl.group(1).count(",") + 1 if gl else 1
+            if s <= 1:
+                factor = 0.0
+            elif kind == "all-reduce":
+                factor = 2.0 * (s - 1) / s
+            elif kind == "all-gather":
+                factor = (s - 1) / s
+            elif kind == "reduce-scatter":
+                factor = float(s - 1)
+            elif kind == "all-to-all":
+                factor = (s - 1) / s
+            else:  # collective-permute
+                factor = 1.0
+            mult = loop_trips if in_body else 1
+            totals[kind] = totals.get(kind, 0) + res_bytes * mult
+            wire[kind] = wire.get(kind, 0) + res_bytes * factor * mult
+            counts[kind] = counts.get(kind, 0) + 1
+    totals["total"] = sum(totals.values())
+    wire["total"] = sum(wire.values())
+    return {"bytes": totals, "wire_bytes": wire, "counts": counts,
+            "loop_trips_applied": loop_trips}
+
+
+def _analytic_bytes_per_device(shardings, abstracts, mesh) -> int:
+    total = 0
+    for sh, ab in zip(jax.tree.leaves(shardings), jax.tree.leaves(abstracts)):
+        size = int(np.prod(ab.shape)) * jnp.dtype(ab.dtype).itemsize
+        nshards = 1
+        if hasattr(sh, "spec"):
+            for axis in jax.tree.leaves(tuple(sh.spec)):
+                if axis is not None:
+                    nshards *= mesh.shape[axis]
+        total += size // max(nshards, 1)
+    return total
+
+
+def _lower_cell(arch: str, shape: str, mesh, unroll: bool = True):
+    """Returns (lowered, meta) for one cell.
+
+    unroll=True unrolls the layer-group scan so XLA cost analysis sees every
+    layer's FLOPs and collectives (while bodies are otherwise counted once).
+    """
+    import dataclasses
+    cfg = get_config(arch)
+    if unroll:
+        cfg = dataclasses.replace(cfg, scan_unroll=cfg.n_groups)
+    sp = SHAPES[shape]
+    batch_abs = input_specs(cfg, shape)
+    meta: dict = {"params": cfg.param_count(),
+                  "active_params": cfg.active_param_count(),
+                  "step": sp.step, "seq_len": sp.seq_len,
+                  "global_batch": sp.global_batch}
+
+    if sp.step == "train":
+        step, rules, psh, osh = S.make_train_step(cfg, mesh, shape)
+        params_abs = S.state_shardings(cfg, mesh, shape)[3]
+        opt_abs = S.abstract_opt_state(cfg, params_abs)
+        bsh = S.batch_shardings(cfg, mesh, shape, batch_abs)
+        params_abs = jax.tree.map(
+            lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+            params_abs, psh)
+        opt_abs = jax.tree.map(
+            lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+            opt_abs, osh)
+        batch_abs = jax.tree.map(
+            lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+            batch_abs, bsh)
+        lowered = step.lower(params_abs, opt_abs, batch_abs,
+                             jax.ShapeDtypeStruct((), jnp.int32))
+        state_bytes = (_analytic_bytes_per_device(psh, params_abs, mesh)
+                       + _analytic_bytes_per_device(osh, opt_abs, mesh))
+        meta["analytic_state_bytes_per_device"] = state_bytes
+    elif sp.step == "prefill":
+        step, rules, psh, csh = S.make_prefill_step(cfg, mesh, shape)
+        params_abs = S.state_shardings(cfg, mesh, shape)[3]
+        bsh = S.batch_shardings(cfg, mesh, shape, batch_abs)
+        params_abs = jax.tree.map(
+            lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+            params_abs, psh)
+        batch_abs = jax.tree.map(
+            lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+            batch_abs, bsh)
+        lowered = step.lower(params_abs, batch_abs)
+        meta["analytic_state_bytes_per_device"] = (
+            _analytic_bytes_per_device(psh, params_abs, mesh))
+    else:  # decode
+        step, rules, psh, csh = S.make_decode_step(cfg, mesh, shape)
+        params_abs = S.state_shardings(cfg, mesh, shape)[3]
+        caches_abs = T.init_decode_caches(cfg, sp.global_batch, sp.seq_len,
+                                          abstract=True)
+        params_abs = jax.tree.map(
+            lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+            params_abs, psh)
+        caches_abs = jax.tree.map(
+            lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+            caches_abs, csh)
+        lowered = step.lower(params_abs, caches_abs, batch_abs)
+        meta["analytic_state_bytes_per_device"] = (
+            _analytic_bytes_per_device(psh, params_abs, mesh)
+            + _analytic_bytes_per_device(csh, caches_abs, mesh))
+    return lowered, meta
+
+
+def _lower_graph_cell(mesh, n: int = 1 << 26, d_max: int = 64,
+                      exchange_every: int = 1):
+    """The paper's own workload at pod scale: distributed LPA iteration."""
+    from repro.core.distributed import graph_input_specs, make_lpa_step
+    from repro.parallel.rules import data_axes  # noqa: F401
+
+    n_dev = int(np.prod(mesh.devices.shape))
+    n_pad = ((n + n_dev * 8 - 1) // (n_dev * 8)) * (n_dev * 8)
+    step = make_lpa_step(mesh, n, n_pad, d_max,
+                         exchange_every=exchange_every, mode="ref")
+    specs = graph_input_specs(n_pad, d_max)
+    lowered = step.lower(specs["nbr"], specs["nw"], specs["nmask"],
+                         specs["labels"], specs["active"],
+                         specs["iteration"])
+    meta = {"step": "graph_lpa", "n_vertices": n, "d_max": d_max,
+            "n_pad": n_pad, "exchange_every": exchange_every,
+            "directed_edges_modeled": n * d_max}
+    return lowered, meta
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str,
+             out_dir: Path = OUT_DIR, exchange_every: int = 1,
+             unroll: bool = False) -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    n_chips = int(np.prod(mesh.devices.shape))
+    t0 = time.time()
+    if arch == "graph-lpa":
+        lowered, meta = _lower_graph_cell(mesh,
+                                          exchange_every=exchange_every)
+    else:
+        lowered, meta = _lower_cell(arch, shape, mesh, unroll=unroll)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cost = dict(compiled.cost_analysis() or {})
+    cost = {k: float(v) for k, v in cost.items()
+            if isinstance(v, (int, float)) and not isinstance(v, bool)}
+    try:
+        ma = compiled.memory_analysis()
+        mem = {k: int(getattr(ma, k)) for k in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes") if hasattr(ma, k)}
+    except Exception as e:  # noqa: BLE001
+        mem = {"error": str(e)}
+    # rolled lowerings keep the layer scan as a while loop: collectives in
+    # the body execute once per group -> multiply by the scan trip count
+    if arch == "graph-lpa" or not unroll:
+        trips = 1
+        if arch != "graph-lpa":
+            trips = get_config(arch).n_groups
+        coll = collective_bytes(compiled.as_text(), loop_trips=trips)
+    else:
+        coll = collective_bytes(compiled.as_text(), loop_trips=1)
+    rec_unrolled = bool(unroll and arch != "graph-lpa")
+
+    rec = {
+        "arch": arch, "shape": shape, "mesh": mesh_kind, "chips": n_chips,
+        "meta": meta, "cost_analysis": cost, "memory_analysis": mem,
+        "collectives": coll, "unrolled": rec_unrolled,
+        "lower_seconds": round(t_lower, 2),
+        "compile_seconds": round(t_compile, 2),
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = f"_x{exchange_every}" if arch == "graph-lpa" and \
+        exchange_every != 1 else ""
+    if rec_unrolled:
+        suffix += "_unrolled"
+    fname = out_dir / f"{arch}_{shape}_{mesh_kind}{suffix}.json"
+    fname.write_text(json.dumps(rec, indent=1))
+    print(f"[dryrun] {arch} {shape} {mesh_kind}: "
+          f"flops={cost.get('flops', float('nan')):.3e} "
+          f"wire={coll['wire_bytes'].get('total', 0):.3e}B "
+          f"compile={t_compile:.1f}s -> {fname.name}", flush=True)
+    return rec
+
+
+def all_cells() -> list[tuple[str, str]]:
+    cells = []
+    for arch, cfg in ARCHS.items():
+        for shape in supported_shapes(cfg):
+            cells.append((arch, shape))
+    cells.append(("graph-lpa", "graph"))
+    return cells
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--exchange-every", type=int, default=1)
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--unroll", action="store_true",
+                    help="unroll the layer scan: full-fidelity cost "
+                         "analysis, ~60x slower compile (hillclimb cells)")
+    args = ap.parse_args()
+
+    if args.all:
+        todo = [(a, s, m) for a, s in all_cells()
+                for m in (("pod", "multipod") if args.both_meshes
+                          else (args.mesh,))]
+    else:
+        assert args.arch, "--arch required without --all"
+        shapes = ([args.shape] if args.shape else
+                  (supported_shapes(get_config(args.arch))
+                   if args.arch != "graph-lpa" else ["graph"]))
+        todo = [(args.arch, s, m) for s in shapes
+                for m in (("pod", "multipod") if args.both_meshes
+                          else (args.mesh,))]
+
+    failures = []
+    for arch, shape, mesh_kind in todo:
+        suffix = ""
+        fname = OUT_DIR / f"{arch}_{shape}_{mesh_kind}{suffix}.json"
+        if args.skip_existing and fname.exists():
+            print(f"[dryrun] skip existing {fname.name}", flush=True)
+            continue
+        try:
+            run_cell(arch, shape, mesh_kind,
+                     exchange_every=args.exchange_every,
+                     unroll=args.unroll)
+        except Exception:  # noqa: BLE001
+            print(f"[dryrun] FAILED {arch} {shape} {mesh_kind}", flush=True)
+            traceback.print_exc()
+            failures.append((arch, shape, mesh_kind))
+    if failures:
+        print(f"[dryrun] {len(failures)} failures: {failures}", flush=True)
+        raise SystemExit(1)
+    print("[dryrun] all cells OK", flush=True)
+
+
+if __name__ == "__main__":
+    main()

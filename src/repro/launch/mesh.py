@@ -1,0 +1,19 @@
+"""Production mesh construction (function, not module constant: importing
+this module never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod; multi-pod adds the leading 'pod' axis (512)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=axis_types)
+
+
+def make_host_mesh(shape=(4, 2), axes=("data", "model")):
+    """Small mesh for CPU multi-device tests (XLA host device count)."""
+    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=axis_types)

@@ -1,0 +1,67 @@
+"""Dry-run sweep driver: one subprocess per cell (memory isolation — a
+cell failure or leak never takes down the sweep; jit caches don't
+accumulate across cells).
+
+  PYTHONPATH=src python -m repro.launch.sweep [--mesh pod|multipod|both]
+"""
+import argparse
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[3]
+OUT = REPO / "experiments" / "dryrun"
+
+
+def cells():
+    from repro.configs import ARCHS, supported_shapes
+    out = []
+    for arch, cfg in ARCHS.items():
+        for shape in supported_shapes(cfg):
+            out.append((arch, shape))
+    out.append(("graph-lpa", "graph"))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="both",
+                    choices=["pod", "multipod", "both"])
+    ap.add_argument("--skip-existing", action="store_true", default=True)
+    ap.add_argument("--force", dest="skip_existing", action="store_false")
+    args = ap.parse_args()
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+
+    todo = [(a, s, m) for a, s in cells() for m in meshes]
+    failures = []
+    t0 = time.time()
+    for i, (arch, shape, mesh) in enumerate(todo):
+        fname = OUT / f"{arch}_{shape}_{mesh}.json"
+        if args.skip_existing and fname.exists():
+            print(f"[sweep {i+1}/{len(todo)}] skip {fname.name}", flush=True)
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--mesh", mesh]
+        if arch != "graph-lpa":
+            cmd += ["--shape", shape]
+        env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+        env.pop("XLA_FLAGS", None)   # dryrun sets its own
+        t1 = time.time()
+        proc = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                              timeout=3600)
+        status = "OK" if proc.returncode == 0 else "FAIL"
+        print(f"[sweep {i+1}/{len(todo)}] {arch} {shape} {mesh}: {status} "
+              f"({time.time()-t1:.0f}s)", flush=True)
+        if proc.returncode != 0:
+            failures.append((arch, shape, mesh))
+            print(proc.stderr[-1500:], flush=True)
+    print(f"[sweep] done in {time.time()-t0:.0f}s; "
+          f"failures: {failures or 'none'}", flush=True)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,126 @@
+"""End-to-end training driver (reduced configs run for real on CPU; full
+configs are exercised via the dry-run).
+
+Wires together: config -> data pipeline -> jitted train step -> checkpoint
+manager -> preemption handler -> straggler monitor.  ``--resume`` restores
+params/optimizer/data state from the latest checkpoint (elastic: works on a
+different device count than the run that wrote it).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch yi-9b --reduced \
+      --steps 50 --ckpt-dir /tmp/ckpt --save-every 20 [--resume]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config, reduced_config
+from repro.configs.base import SHAPES, ShapeSpec
+from repro.data import SyntheticLMDataset
+from repro.ft import PreemptionHandler, StragglerMonitor
+from repro.models import transformer as T
+from repro.models.common import init_from_specs
+from repro.train import steps as S
+
+
+def build_small_shape(cfg, seq_len: int, global_batch: int) -> str:
+    """Register an ad-hoc shape for CPU-scale runs."""
+    name = f"cpu_{seq_len}x{global_batch}"
+    SHAPES[name] = ShapeSpec(name, seq_len, global_batch, "train")
+    return name
+
+
+def run(arch: str, reduced: bool = True, steps: int = 50,
+        seq_len: int = 128, global_batch: int = 8,
+        ckpt_dir: str | None = None, save_every: int = 20,
+        resume: bool = False, seed: int = 0, mesh=None,
+        log_every: int = 10, preempt: PreemptionHandler | None = None,
+        peak_lr: float = 1e-3):
+    cfg = reduced_config(arch) if reduced else get_config(arch)
+    if mesh is None:
+        ndev = len(jax.devices())
+        axis_types = (jax.sharding.AxisType.Auto,) * 2
+        mesh = jax.make_mesh((ndev, 1), ("data", "model"),
+                             axis_types=axis_types)
+    shape = build_small_shape(cfg, seq_len, global_batch)
+
+    step_fn, rules, psh, osh = S.make_train_step(
+        cfg, mesh, shape, peak_lr=peak_lr, warmup=5,
+        total_steps=max(steps, 100), donate=False)
+    params = init_from_specs(T.model_specs(cfg), jax.random.PRNGKey(seed))
+    opt_state = S.init_opt_state(cfg, params)
+
+    data = SyntheticLMDataset(vocab=cfg.vocab, seq_len=seq_len,
+                              global_batch=global_batch, seed=seed)
+    mgr = CheckpointManager(ckpt_dir, keep=3) if ckpt_dir else None
+    start_step = 0
+    if resume and mgr and mgr.latest_step() is not None:
+        state = {"params": params, "opt": opt_state}
+        restored, ck_step, extra = mgr.restore(state)
+        params, opt_state = restored["params"], restored["opt"]
+        data.restore(extra["data"])
+        start_step = ck_step
+        print(f"[train] resumed from step {ck_step}", flush=True)
+
+    preempt = (preempt or PreemptionHandler()).install()
+    monitor = StragglerMonitor()
+    losses = []
+    t_start = time.time()
+    final_step = start_step
+    for step in range(start_step, steps):
+        monitor.step_start()
+        batch = {k: jnp.asarray(v) for k, v in data.next_batch().items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch,
+                                             jnp.int32(step))
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        monitor.step_end(step)
+        final_step = step + 1
+        if step % log_every == 0 or step == steps - 1:
+            print(f"[train] step {step} loss {loss:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"lr {float(metrics['lr']):.2e}", flush=True)
+        want_ckpt = mgr and ((step + 1) % save_every == 0
+                             or step == steps - 1 or preempt.should_stop)
+        if want_ckpt:
+            mgr.save(step + 1, {"params": params, "opt": opt_state},
+                     extra={"data": data.state(), "loss": loss},
+                     blocking=False)
+        if preempt.should_stop:
+            print(f"[train] preempted at step {step}; checkpointed",
+                  flush=True)
+            break
+    if mgr:
+        mgr.wait()
+    dt = time.time() - t_start
+    print(f"[train] done: {final_step - start_step} steps in {dt:.1f}s; "
+          f"loss {losses[0]:.4f} -> {losses[-1]:.4f}", flush=True)
+    return {"losses": losses, "final_step": final_step,
+            "params": params, "monitor": monitor}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--save-every", type=int, default=20)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    a = ap.parse_args()
+    run(a.arch, a.reduced, a.steps, a.seq_len, a.global_batch,
+        a.ckpt_dir, a.save_every, a.resume, a.seed)
+
+
+if __name__ == "__main__":
+    main()

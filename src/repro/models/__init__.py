@@ -1,0 +1,1 @@
+"""LM substrate: composable model definitions (pure functions + specs)."""

@@ -1,0 +1,263 @@
+"""GQA attention: chunked (flash-style) training path + KV-cache serving.
+
+Training/prefill use an online-softmax scan over KV chunks so the (S, S)
+score matrix is never materialised — peak activation is O(S * chunk) per
+head instead of O(S^2), which is what lets 32k prefill fit HBM.  The causal
+rectangle is still computed in full (masked); the strict lower-triangle
+saving needs a Pallas flash kernel and is tracked as a §Perf item.
+
+Decode is a single-token query against a (B, S_max, K, hd) cache with
+``dynamic_update_slice`` in-place-able updates (XLA donates the buffer).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, beinsum
+from repro.models.layers import apply_rope, rope_frequencies
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    """KV cache; optionally int8-quantised (k/v int8 + per-(token, head)
+    bf16 scales — halves serving HBM; §Perf serving lever)."""
+    k: jnp.ndarray       # (B, S_max, K, hd)  bf16 or int8
+    v: jnp.ndarray       # (B, S_max, K, hd)
+    length: jnp.ndarray  # () int32 — tokens currently in cache
+    k_scale: jnp.ndarray | None = None   # (B, S_max, K, 1) bf16 (int8 mode)
+    v_scale: jnp.ndarray | None = None
+
+
+def quantize_kv(x: jnp.ndarray):
+    """Symmetric per-(token, head) int8: (B, S, K, hd) -> (q8, scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.bfloat16)
+
+
+def attention_specs(d: int, n_heads: int, n_kv: int, head_dim: int,
+                    qkv_bias: bool = False) -> dict:
+    s = {
+        "wq": ParamSpec((d, n_heads, head_dim), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, n_kv, head_dim), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, n_kv, head_dim), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((n_heads, head_dim, d), ("heads", "head_dim", "embed")),
+    }
+    if qkv_bias:
+        s["bq"] = ParamSpec((n_heads, head_dim), ("heads", "head_dim"),
+                            init="zeros")
+        s["bk"] = ParamSpec((n_kv, head_dim), ("kv_heads", "head_dim"),
+                            init="zeros")
+        s["bv"] = ParamSpec((n_kv, head_dim), ("kv_heads", "head_dim"),
+                            init="zeros")
+    return s
+
+
+def mask_padded_heads(params: dict, real_h: int | None,
+                      real_k: int | None) -> dict:
+    """Zero-mask TP-padding heads (configs/base.py ``n_heads_padded``).
+
+    With zero wq/wk/wv/wo slices the padded heads produce zero output and
+    receive zero gradients — the model is exactly the logical architecture.
+    """
+    p = dict(params)
+    h = p["wq"].shape[1]
+    if real_h is not None and real_h < h:
+        mh = (jnp.arange(h) < real_h).astype(p["wq"].dtype)
+        p["wq"] = p["wq"] * mh[None, :, None]
+        p["wo"] = p["wo"] * mh[:, None, None]
+        if "bq" in p:
+            p["bq"] = p["bq"] * mh[:, None]
+    k = p["wk"].shape[1]
+    if real_k is not None and real_k < k:
+        mk = (jnp.arange(k) < real_k).astype(p["wk"].dtype)
+        p["wk"] = p["wk"] * mk[None, :, None]
+        p["wv"] = p["wv"] * mk[None, :, None]
+        if "bk" in p:
+            p["bk"] = p["bk"] * mk[:, None]
+            p["bv"] = p["bv"] * mk[:, None]
+    return p
+
+
+def _project_qkv(params, x, positions, rope_theta):
+    """x: (B, S, d) -> q (B,S,H,hd), k/v (B,S,K,hd), RoPE applied."""
+    q = beinsum("bsd,dhk->bshk", x, params["wq"])
+    k = beinsum("bsd,dhk->bshk", x, params["wk"])
+    v = beinsum("bsd,dhk->bshk", x, params["wv"])
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    if rope_theta is not None:
+        cos, sin = rope_frequencies(q.shape[-1], positions, rope_theta)
+        q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def chunked_attention(q, k, v, q_positions, kv_positions, *, causal: bool,
+                      chunk: int = 512, window: int | None = None,
+                      kv_valid_len=None, k_scale=None, v_scale=None):
+    """Online-softmax attention over KV chunks.
+
+    q: (B, Sq, H, hd); k/v: (B, Skv, K, hd) with H = K * G.
+    Returns (B, Sq, H, hd).  Masks: causal (q_pos >= kv_pos), optional
+    sliding window, optional kv_valid_len (ragged cache).  With
+    k_scale/v_scale (int8 cache), chunks are dequantised in-loop — the
+    (B, S, K, hd) fp tensors never materialise.
+    """
+    b, sq, h, hd = q.shape
+    skv, kk = k.shape[1], k.shape[2]
+    g = h // kk
+    assert h % kk == 0
+    scale = 1.0 / (hd ** 0.5)
+    qg = q.reshape(b, sq, kk, g, hd).astype(jnp.float32) * scale
+
+    n_chunks = skv // chunk if skv % chunk == 0 else -(-skv // chunk)
+    pad = n_chunks * chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, (0, pad),
+                               constant_values=2**30)
+        if k_scale is not None:
+            k_scale = jnp.pad(k_scale, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v_scale = jnp.pad(v_scale, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, chunk, kk, hd)
+    vc = v.reshape(b, n_chunks, chunk, kk, hd)
+    pc = kv_positions.reshape(n_chunks, chunk)
+    quant = k_scale is not None
+    if quant:
+        ksc = k_scale.reshape(b, n_chunks, chunk, kk, 1)
+        vsc = v_scale.reshape(b, n_chunks, chunk, kk, 1)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        if quant:
+            k_i, v_i, p_i, ks_i, vs_i = xs
+            k_i = k_i.astype(jnp.float32) * ks_i.astype(jnp.float32)
+            v_i = v_i.astype(jnp.float32) * vs_i.astype(jnp.float32)
+        else:
+            k_i, v_i, p_i = xs      # (B, chunk, K, hd), ..., (chunk,)
+        logits = jnp.einsum("bqkgh,bckh->bqkgc", qg,
+                            k_i.astype(jnp.float32))   # (B,Sq,K,G,chunk)
+        mask = jnp.ones((sq, chunk), bool)
+        if causal:
+            mask &= q_positions[:, None] >= p_i[None, :]
+        if window is not None:
+            mask &= q_positions[:, None] - p_i[None, :] < window
+        if kv_valid_len is not None:
+            mask &= (p_i < kv_valid_len)[None, :]
+        mask &= (p_i < 2**30)[None, :]                 # chunk padding
+        logits = jnp.where(mask[None, :, None, None, :], logits, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bqkgc,bckh->bqkgh", p, v_i.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, sq, kk, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, kk, g), jnp.float32)
+    acc0 = jnp.zeros((b, sq, kk, g, hd), jnp.float32)
+    xs = (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), pc)
+    if quant:
+        xs = xs + (jnp.moveaxis(ksc, 1, 0), jnp.moveaxis(vsc, 1, 0))
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), xs)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def attention_train(params, x, positions, *, n_heads, n_kv, head_dim,
+                    rope_theta=10000.0, causal=True, chunk=512,
+                    window=None):
+    """Full-sequence attention (training / encoder)."""
+    q, k, v = _project_qkv(params, x, positions, rope_theta)
+    out = chunked_attention(q, k, v, positions, positions, causal=causal,
+                            chunk=chunk, window=window)
+    return beinsum("bshk,hkd->bsd", out, params["wo"])
+
+
+def attention_prefill(params, x, positions, s_max, *, rope_theta=10000.0,
+                      chunk=512, window=None, quantize: bool = False):
+    """Causal prefill: returns (output, populated KVCache of size s_max)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(params, x, positions, rope_theta)
+    out = chunked_attention(q, k, v, positions, positions, causal=True,
+                            chunk=chunk, window=window)
+    # pad (not DUS-into-zeros): keeps the cache init data-dependent so XLA
+    # constant folding can never materialise an s_max-sized literal
+    grow = ((0, 0), (0, s_max - s), (0, 0), (0, 0))
+    if quantize:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        cache = KVCache(k=jnp.pad(kq, grow), v=jnp.pad(vq, grow),
+                        length=jnp.int32(s),
+                        k_scale=jnp.pad(ks, grow), v_scale=jnp.pad(vs, grow))
+    else:
+        cache = KVCache(k=jnp.pad(k, grow), v=jnp.pad(v, grow),
+                        length=jnp.int32(s))
+    return beinsum("bshk,hkd->bsd", out, params["wo"]), cache
+
+
+def attention_decode(params, x, cache: KVCache, *, rope_theta=10000.0,
+                     window=None):
+    """One-token decode against the (optionally int8) cache.  x: (B, 1, d)."""
+    from repro.parallel.api import shard_hint
+    pos = cache.length[None]                                # (1,)
+    q, k, v = _project_qkv(params, x, pos, rope_theta)
+    quant = cache.k_scale is not None
+    ks = vs = None
+    if quant:
+        k, ks = quantize_kv(k)
+        v, vs = quantize_kv(v)
+        ks = jax.lax.dynamic_update_slice_in_dim(cache.k_scale, ks,
+                                                 cache.length, 1)
+        vs = jax.lax.dynamic_update_slice_in_dim(cache.v_scale, vs,
+                                                 cache.length, 1)
+        ks = shard_hint(ks, "batch", "seq_kv", "kv_heads", None)
+        vs = shard_hint(vs, "batch", "seq_kv", "kv_heads", None)
+    kc = jax.lax.dynamic_update_slice_in_dim(cache.k, k, cache.length, 1)
+    vc = jax.lax.dynamic_update_slice_in_dim(cache.v, v, cache.length, 1)
+    # pin the cache layout: without this GSPMD reshards the cache onto the
+    # query's kv-head split inside attention and then all-gathers the WHOLE
+    # cache (in f32, via a fused upcast) to honor the output sharding —
+    # 2 x 25.8 GB/step on the yi-9b decode_32k cell (§Perf iteration 1)
+    kc = shard_hint(kc, "batch", "seq_kv", "kv_heads", "head_dim")
+    vc = shard_hint(vc, "batch", "seq_kv", "kv_heads", "head_dim")
+    s_max = kc.shape[1]
+    kv_pos = jnp.arange(s_max, dtype=jnp.int32)
+    out = chunked_attention(
+        q, kc, vc, pos, kv_pos, causal=True,
+        chunk=min(2048, s_max), window=window,
+        kv_valid_len=cache.length + 1, k_scale=ks, v_scale=vs)
+    y = beinsum("bshk,hkd->bsd", out, params["wo"])
+    return y, KVCache(k=kc, v=vc, length=cache.length + 1,
+                      k_scale=ks, v_scale=vs)
+
+
+# ------------------------------------------------------ cross-attention ----
+def cross_attention_specs(d: int, n_heads: int, n_kv: int, head_dim: int):
+    return attention_specs(d, n_heads, n_kv, head_dim)
+
+
+def cross_attention(params, x, memory_k, memory_v, memory_valid_len=None):
+    """Decoder->encoder attention; memory_k/v: (B, Sm, K, hd) precomputed."""
+    q = beinsum("bsd,dhk->bshk", x, params["wq"])
+    sm = memory_k.shape[1]
+    out = chunked_attention(
+        q, memory_k, memory_v,
+        jnp.zeros((x.shape[1],), jnp.int32),
+        jnp.arange(sm, dtype=jnp.int32), causal=False,
+        chunk=min(2048, sm), kv_valid_len=memory_valid_len)
+    return beinsum("bshk,hkd->bsd", out, params["wo"])
+
+
+def project_memory(params, memory):
+    """Precompute cross-attention K/V from encoder output (B, Sm, d)."""
+    k = beinsum("bsd,dhk->bshk", memory, params["wk"])
+    v = beinsum("bsd,dhk->bshk", memory, params["wv"])
+    return k, v

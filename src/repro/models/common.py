@@ -1,0 +1,88 @@
+"""Parameter plumbing for the LM substrate (flax-free, eval_shape-friendly).
+
+Every module exposes ``specs(cfg) -> pytree[ParamSpec]``; parameters are
+materialised from specs (``init_from_specs``) or abstracted for the dry-run
+(``abstract_from_specs`` — pure ShapeDtypeStructs, no allocation).  Each
+ParamSpec carries *logical* sharding axes ('embed', 'heads', 'ff', 'vocab',
+'expert', ...) which ``repro.parallel.rules`` maps onto the physical mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[Any, ...]            # logical axis name (or None) per dim
+    init: str = "normal"             # normal | zeros | ones
+    scale: float = 0.02
+    dtype: Any = jnp.bfloat16
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_from_specs(specs, key: jax.Array):
+    """Materialise parameters (deterministic per-leaf fold_in of the path)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    params = []
+    for i, s in enumerate(leaves):
+        k = jax.random.fold_in(key, i)
+        if s.init == "zeros":
+            v = jnp.zeros(s.shape, s.dtype)
+        elif s.init == "ones":
+            v = jnp.ones(s.shape, s.dtype)
+        else:
+            v = (jax.random.normal(k, s.shape, jnp.float32) * s.scale
+                 ).astype(s.dtype)
+        params.append(v)
+    return jax.tree.unflatten(treedef, params)
+
+
+def abstract_from_specs(specs):
+    """ShapeDtypeStruct tree for .lower() — never touches a device."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs,
+        is_leaf=_is_spec)
+
+
+def logical_axes(specs):
+    """Pytree of logical-axis tuples mirroring the param tree."""
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=_is_spec)
+
+
+def stack_specs(specs, n: int, axis_name=None):
+    """Prepend a stacking dimension (scan-over-layers) to every spec."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, (axis_name,) + s.axes,
+                            s.init, s.scale, s.dtype),
+        specs, is_leaf=_is_spec)
+
+
+def round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def beinsum(expr: str, *ops):
+    """einsum with bf16 partial sums when every operand is bf16.
+
+    TP-sharded contractions lower to partial dots + all-reduce of the
+    *accumulator* dtype; XLA's default f32 accumulation makes every
+    activation/gradient all-reduce 2x larger on the wire.  bf16 partial
+    sums at TP boundaries are the standard trade (used for the §Perf
+    collective-term iteration; the logits/router paths keep f32 — see the
+    call sites).
+    """
+    if all(getattr(o, "dtype", None) == jnp.bfloat16 for o in ops):
+        return jnp.einsum(expr, *ops,
+                          preferred_element_type=jnp.bfloat16)
+    return jnp.einsum(expr, *ops)

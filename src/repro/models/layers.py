@@ -1,0 +1,102 @@
+"""Shared neural layers: norms, RoPE, MLPs, embeddings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, beinsum
+
+
+# ---------------------------------------------------------------- norms ----
+def rmsnorm_specs(d: int) -> dict:
+    return {"scale": ParamSpec((d,), ("embed",), init="ones")}
+
+
+def rms_norm(params, x, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_specs(d: int) -> dict:
+    return {"scale": ParamSpec((d,), ("embed",), init="ones"),
+            "bias": ParamSpec((d,), ("embed",), init="zeros")}
+
+
+def layer_norm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ----------------------------------------------------------------- RoPE ----
+def rope_frequencies(head_dim: int, positions: jnp.ndarray,
+                     theta: float = 10000.0):
+    """(..., S) positions -> (..., S, head_dim/2) cos/sin tables."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    inv_freq = 1.0 / (theta ** exponent)                   # (hd/2,)
+    angles = positions.astype(jnp.float32)[..., None] * inv_freq
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """x: (B, S, H, hd); cos/sin: (B, S, hd/2) or (S, hd/2)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    if cos.ndim == 2:
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    else:
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- MLPs ----
+def swiglu_specs(d: int, ff: int) -> dict:
+    return {"gate": ParamSpec((d, ff), ("embed", "ff")),
+            "up": ParamSpec((d, ff), ("embed", "ff")),
+            "down": ParamSpec((ff, d), ("ff", "embed"))}
+
+
+def swiglu(params, x):
+    g = beinsum("bsd,df->bsf", x, params["gate"])
+    u = beinsum("bsd,df->bsf", x, params["up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return beinsum("bsf,fd->bsd", h, params["down"])
+
+
+def gelu_mlp_specs(d: int, ff: int, bias: bool = True) -> dict:
+    s = {"up": ParamSpec((d, ff), ("embed", "ff")),
+         "down": ParamSpec((ff, d), ("ff", "embed"))}
+    if bias:
+        s["up_b"] = ParamSpec((ff,), ("ff",), init="zeros")
+        s["down_b"] = ParamSpec((d,), ("embed",), init="zeros")
+    return s
+
+
+def gelu_mlp(params, x):
+    h = beinsum("bsd,df->bsf", x, params["up"])
+    if "up_b" in params:
+        h = h + params["up_b"]
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    y = beinsum("bsf,fd->bsd", h, params["down"])
+    if "down_b" in params:
+        y = y + params["down_b"]
+    return y
+
+
+# ----------------------------------------------------------- embeddings ----
+def embedding_specs(vocab_padded: int, d: int) -> dict:
+    return {"table": ParamSpec((vocab_padded, d), ("vocab", "embed"),
+                               scale=1.0)}
+
+
+def embed(params, tokens):
+    return params["table"][tokens]
+
+
+def unembed(params, x):
+    """Logits over the (padded) vocab; callers mask padded ids in the loss."""
+    return jnp.einsum("bsd,vd->bsv", x, params["table"])

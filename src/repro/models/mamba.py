@@ -1,0 +1,145 @@
+"""Mamba (selective SSM) block — the Jamba hybrid's sequence mixer.
+
+Training uses a chunked associative scan: the (B, chunk, d_inner, d_state)
+decay/increment intermediates exist only per chunk (VMEM-friendly, sharded
+on d_inner over 'model'), with the hidden state carried across chunks.
+Decode is the O(1) recurrence h' = exp(dt*A) h + dt*B x.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, beinsum
+
+
+class MambaState(NamedTuple):
+    h: jnp.ndarray       # (B, d_inner, d_state) fp32 SSM state
+    conv: jnp.ndarray    # (B, d_conv - 1, d_inner) causal-conv tail
+
+
+def mamba_specs(d: int, d_inner: int, d_state: int, d_conv: int,
+                dt_rank: int) -> dict:
+    return {
+        "in_proj": ParamSpec((d, 2 * d_inner), ("embed", "ff")),
+        "conv_w": ParamSpec((d_conv, d_inner), (None, "ff"), scale=0.1),
+        "conv_b": ParamSpec((d_inner,), ("ff",), init="zeros"),
+        "x_proj": ParamSpec((d_inner, dt_rank + 2 * d_state), ("ff", None)),
+        "dt_proj": ParamSpec((dt_rank, d_inner), (None, "ff")),
+        "dt_bias": ParamSpec((d_inner,), ("ff",), init="zeros"),
+        "a_log": ParamSpec((d_inner, d_state), ("ff", None), init="ones"),
+        "d_skip": ParamSpec((d_inner,), ("ff",), init="ones"),
+        "out_proj": ParamSpec((d_inner, d), ("ff", "embed")),
+    }
+
+
+def _causal_conv(params, x, tail=None):
+    """Depthwise causal conv1d via shift-adds.  x: (B, S, d_inner)."""
+    d_conv = params["conv_w"].shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], d_conv - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    y = sum(params["conv_w"][j] * xp[:, j:j + x.shape[1]]
+            for j in range(d_conv))
+    new_tail = xp[:, -(d_conv - 1):] if d_conv > 1 else tail
+    return y + params["conv_b"], new_tail
+
+
+def _ssm_inputs(params, x_conv, d_state, dt_rank):
+    """Project conv output to (dt, B, C) selective-scan inputs."""
+    proj = jnp.einsum("bsi,io->bso", x_conv, params["x_proj"])
+    dt_r, b_mat, c_mat = jnp.split(
+        proj, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_r, params["dt_proj"]).astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32))
+    return dt, b_mat.astype(jnp.float32), c_mat.astype(jnp.float32)
+
+
+def mamba_train(params, x, *, d_state: int, dt_rank: int, chunk: int = 64,
+                return_state: bool = False):
+    """x: (B, S, d) -> (B, S, d).  S must be a multiple of ``chunk``."""
+    b, s, _ = x.shape
+    xz = beinsum("bsd,de->bse", x, params["in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_conv, conv_tail = _causal_conv(params, x_in)
+    x_conv = jax.nn.silu(x_conv.astype(jnp.float32)).astype(x.dtype)
+    dt, b_mat, c_mat = _ssm_inputs(params, x_conv, d_state, dt_rank)
+
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))      # (di, ds)
+    xf = x_conv.astype(jnp.float32)
+    d_inner = xf.shape[-1]
+    # pad S to a chunk multiple with dt=0 steps (decay=1, inc=0: state inert)
+    s_pad = -(-s // chunk) * chunk
+    if s_pad != s:
+        pad = ((0, 0), (0, s_pad - s), (0, 0))
+        dt, b_mat, c_mat, xf = (jnp.pad(v, pad)
+                                for v in (dt, b_mat, c_mat, xf))
+    n_chunks = s_pad // chunk
+
+    def chunk_body(h, inputs):
+        dt_c, b_c, c_c, x_c = inputs      # (B, ck, ...) slices
+        decay = jnp.exp(dt_c[..., None] * a)               # (B,ck,di,ds)
+        inc = (dt_c * x_c)[..., None] * b_c[:, :, None, :]  # (B,ck,di,ds)
+
+        def combine(p, q):
+            return (p[0] * q[0], q[0] * p[1] + q[1])
+
+        dcum, hs = jax.lax.associative_scan(combine, (decay, inc), axis=1)
+        hs = hs + dcum * h[:, None]                        # fold carry in
+        y_c = jnp.einsum("bcis,bcs->bci", hs, c_c)
+        return hs[:, -1], y_c
+
+    reshape = lambda v: v.reshape(b, n_chunks, chunk, *v.shape[2:]).swapaxes(0, 1)
+    h0 = jnp.zeros((b, d_inner, d_state), jnp.float32)
+    h_final, ys = jax.lax.scan(chunk_body, h0,
+                               (reshape(dt), reshape(b_mat), reshape(c_mat),
+                                reshape(xf)))
+    y = ys.swapaxes(0, 1).reshape(b, s_pad, d_inner)[:, :s]
+    xf = xf[:, :s]
+    y = y + xf * params["d_skip"].astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = beinsum("bsi,id->bsd", y.astype(x.dtype), params["out_proj"])
+    if return_state:
+        return out, MambaState(h=h_final,
+                               conv=conv_tail.astype(jnp.bfloat16))
+    return out
+
+
+def mamba_prefill(params, x, *, d_state: int, dt_rank: int, chunk: int = 64):
+    """Prefill: full-sequence output + state for subsequent decode."""
+    return mamba_train(params, x, d_state=d_state, dt_rank=dt_rank,
+                       chunk=chunk, return_state=True)
+
+
+def mamba_init_state(params, batch: int) -> MambaState:
+    d_inner = params["dt_bias"].shape[0]
+    d_state = params["a_log"].shape[1]
+    d_conv = params["conv_w"].shape[0]
+    return MambaState(
+        h=jnp.zeros((batch, d_inner, d_state), jnp.float32),
+        conv=jnp.zeros((batch, d_conv - 1, d_inner), jnp.bfloat16))
+
+
+def mamba_decode(params, x, state: MambaState, *, d_state: int,
+                 dt_rank: int):
+    """One-token step.  x: (B, 1, d) -> (B, 1, d) + new state."""
+    xz = beinsum("bsd,de->bse", x, params["in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_conv, new_tail = _causal_conv(params, x_in.astype(state.conv.dtype),
+                                    tail=state.conv)
+    x_conv = jax.nn.silu(x_conv.astype(jnp.float32)).astype(x.dtype)
+    dt, b_mat, c_mat = _ssm_inputs(params, x_conv, d_state, dt_rank)
+
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    xf = x_conv.astype(jnp.float32)[:, 0]                  # (B, di)
+    dt0, b0, c0 = dt[:, 0], b_mat[:, 0], c_mat[:, 0]
+    decay = jnp.exp(dt0[..., None] * a)                    # (B, di, ds)
+    h = decay * state.h + (dt0 * xf)[..., None] * b0[:, None, :]
+    y = jnp.einsum("bis,bs->bi", h, c0)
+    y = y + xf * params["d_skip"].astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32)[:, 0])
+    out = beinsum("bi,id->bd", y.astype(x.dtype), params["out_proj"])
+    return out[:, None], MambaState(h=h, conv=new_tail)

@@ -1,0 +1,148 @@
+"""Mixture-of-Experts with sort-based capacity dispatch (MegaBlocks-style).
+
+The naive one-hot dispatch tensor (T, E, C) is infeasible at Arctic scale
+(1M tokens x 128 experts); instead token->expert assignments are sorted by
+expert id, positions within each expert computed with a segment trick, and
+tokens scattered into a dense (E, C, d) buffer (unique slots -> efficient
+XLA scatter).  Expert FFNs are one batched einsum over the expert axis;
+tokens overflowing an expert's capacity are dropped (standard top-k MoE
+semantics) and their combine weight zeroed.
+
+Supports: top-k softmax routing with renormalisation, padded expert count
+(e.g. Qwen2-MoE's 60 routed experts padded to 64 for TP divisibility —
+padded experts are masked to -inf in the router), shared experts
+(Qwen2-MoE) and a parallel dense residual branch (Arctic) at the caller.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, beinsum
+from repro.parallel.api import shard_hint
+
+
+def moe_specs(d: int, ff: int, n_experts_padded: int) -> dict:
+    e = n_experts_padded
+    return {
+        "router": ParamSpec((d, e), ("embed", None), scale=0.02,
+                            dtype=jnp.float32),
+        "gate": ParamSpec((e, d, ff), ("expert", "embed", "ff")),
+        "up": ParamSpec((e, d, ff), ("expert", "embed", "ff")),
+        "down": ParamSpec((e, ff, d), ("expert", "ff", "embed")),
+    }
+
+
+def _data_shards() -> int:
+    """Data-parallel shard count from the active MeshRules (1 when unset)."""
+    from repro.parallel.api import active_rules
+    rules = active_rules()
+    if rules is None:
+        return 1
+    ax = rules.mapping.get("batch")
+    if not ax:
+        return 1
+    n = 1
+    for a in (ax if isinstance(ax, tuple) else (ax,)):
+        n *= rules.mesh.shape[a]
+    return int(n)
+
+
+def moe_apply(params, x, *, n_experts: int, n_experts_padded: int,
+              top_k: int, capacity_factor: float = 1.25):
+    """x: (B, S, d) -> (B, S, d).  Static shapes throughout.
+
+    Dispatch is *hierarchical / shard-local* (§Perf iteration on the MoE
+    cells): every data shard sorts only its own tokens and scatters them
+    into its private capacity slice of the (E, dp, C_loc, d) buffer.  All
+    scatter/gather index math is batched over the shard axis, so GSPMD
+    partitions it locally — the naive global scatter instead lowers to a
+    full (E, C, d) buffer all-reduce over the data axis (~2.5 GB/device per
+    MoE layer on Jamba train_4k).  Cross-shard traffic only remains where
+    it is information-theoretically required: moving expert outputs back to
+    the token's shard (combine).
+    """
+    b, s, d = x.shape
+    t = b * s
+    e = n_experts_padded
+    dp = _data_shards()
+    if t % dp:
+        dp = 1
+    t_loc = t // dp
+    ll = t_loc * top_k                                     # entries per shard
+    xt = x.reshape(t, d)
+
+    # ---- routing (fp32) ----
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        params["router"])
+    if n_experts < e:  # mask padded experts
+        pad_mask = jnp.arange(e) >= n_experts
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, expert_idx = jax.lax.top_k(probs, top_k)       # (T, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # ---- shard-local sort-based dispatch ----
+    cap = int(max(8, -(-t_loc * top_k * capacity_factor // e)))
+    flat_e = expert_idx.reshape(dp, ll).astype(jnp.int32)
+    order = jnp.argsort(flat_e, axis=1, stable=True)       # (dp, L)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    # first index of each expert's run within the shard row
+    run_start = jax.vmap(
+        lambda row: jnp.searchsorted(row, row, side="left"))(sorted_e)
+    pos = jnp.arange(ll, dtype=jnp.int32)[None, :] - run_start
+    keep = pos < cap
+    slot = jnp.where(keep, sorted_e * cap + pos, e * cap)  # (dp, L)
+
+    token_in_row = order // top_k                          # (dp, L)
+    x_rows = xt.reshape(dp, t_loc, d)
+    gathered = jnp.take_along_axis(x_rows, token_in_row[..., None], axis=1)
+
+    buf0 = jnp.zeros((dp, e * cap + 1, d), x.dtype)
+    buf = jax.vmap(lambda bb, ii, uu: bb.at[ii].set(
+        uu, mode="drop", unique_indices=True))(buf0, slot, gathered)
+    buf = buf[:, :-1].reshape(dp, e, cap, d)
+    # reshard shard-major -> expert-major (the "all-to-all" boundary)
+    buf = jnp.swapaxes(buf, 0, 1)                          # (E, dp, cap, d)
+    buf = shard_hint(buf, "expert", "batch", None, "embed")
+
+    # ---- expert FFNs (SwiGLU), one batched einsum over experts ----
+    g = beinsum("escd,edf->escf", buf, params["gate"])
+    u = beinsum("escd,edf->escf", buf, params["up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    out_buf = beinsum("escf,efd->escd", h, params["down"])
+    out_buf = shard_hint(out_buf, "expert", "batch", None, "embed")
+
+    # ---- combine (back to shard-major, gather per shard row) ----
+    out_rows = jnp.swapaxes(out_buf, 0, 1).reshape(dp, e * cap, d)
+    out_rows = shard_hint(out_rows, "batch", None, "embed")
+    picked = jnp.take_along_axis(
+        out_rows, jnp.minimum(slot, e * cap - 1)[..., None], axis=1)
+    picked = jnp.where(keep[..., None], picked, 0.0)
+    unsorted = jax.vmap(lambda z, ii, uu: z.at[ii].set(
+        uu, unique_indices=True))(
+        jnp.zeros((dp, ll, d), x.dtype), order, picked)
+    y = jnp.einsum("tkd,tk->td", unsorted.reshape(t, top_k, d),
+                   gates.astype(x.dtype))
+    return y.reshape(b, s, d)
+
+
+# ------------------------------------------------- shared experts (Qwen) ---
+def shared_expert_specs(d: int, ff_shared: int) -> dict:
+    return {
+        "gate": ParamSpec((d, ff_shared), ("embed", "ff")),
+        "up": ParamSpec((d, ff_shared), ("embed", "ff")),
+        "down": ParamSpec((ff_shared, d), ("ff", "embed")),
+        "gate_proj": ParamSpec((d, 1), ("embed", None), dtype=jnp.float32),
+    }
+
+
+def shared_expert_apply(params, x):
+    g = beinsum("bsd,df->bsf", x, params["gate"])
+    u = beinsum("bsd,df->bsf", x, params["up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    y = beinsum("bsf,fd->bsd", h, params["down"])
+    gate = jax.nn.sigmoid(
+        jnp.einsum("bsd,do->bso", x.astype(jnp.float32),
+                   params["gate_proj"]))
+    return y * gate.astype(x.dtype)

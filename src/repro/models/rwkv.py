@@ -1,0 +1,137 @@
+"""RWKV6 "Finch" block: attention-free time mix with data-dependent decay.
+
+The defining Finch feature — per-channel, per-token decay
+``w_t = exp(-exp(w0 + tanh(x W_a) W_b))`` — is kept; token-shift mixing uses
+the static (v5-style) interpolation coefficients.  The WKV recurrence over
+per-head (hd x hd) state runs as a lax.scan over time (state fp32); a
+chunked Pallas WKV kernel is the known real-hardware optimisation and is
+tracked as a §Perf item, but the recurrence itself is O(S) compute either
+way.  Decode is the O(1) state update — why this arch runs ``long_500k``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, beinsum
+
+
+class RwkvState(NamedTuple):
+    wkv: jnp.ndarray     # (B, H, hd, hd) fp32
+    shift_t: jnp.ndarray  # (B, d) last token input (time mix)
+    shift_c: jnp.ndarray  # (B, d) last token input (channel mix)
+
+
+def rwkv_time_specs(d: int, n_heads: int, lora_r: int = 64) -> dict:
+    hd = d // n_heads
+    return {
+        "mu_r": ParamSpec((d,), ("embed",), scale=0.5),
+        "mu_k": ParamSpec((d,), ("embed",), scale=0.5),
+        "mu_v": ParamSpec((d,), ("embed",), scale=0.5),
+        "mu_g": ParamSpec((d,), ("embed",), scale=0.5),
+        "mu_w": ParamSpec((d,), ("embed",), scale=0.5),
+        "wr": ParamSpec((d, n_heads, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, n_heads, hd), ("embed", "heads", "head_dim")),
+        "wv": ParamSpec((d, n_heads, hd), ("embed", "heads", "head_dim")),
+        "wg": ParamSpec((d, n_heads, hd), ("embed", "heads", "head_dim")),
+        "wo": ParamSpec((n_heads, hd, d), ("heads", "head_dim", "embed")),
+        # data-dependent decay (the Finch contribution)
+        "w0": ParamSpec((d,), ("embed",), init="zeros"),
+        "w_a": ParamSpec((d, lora_r), ("embed", None)),
+        "w_b": ParamSpec((lora_r, d), (None, "embed")),
+        "bonus_u": ParamSpec((n_heads, hd), ("heads", "head_dim"),
+                             scale=0.5),
+        "ln_scale": ParamSpec((d,), ("embed",), init="ones"),
+    }
+
+
+def rwkv_channel_specs(d: int, ff: int) -> dict:
+    return {
+        "mu_k": ParamSpec((d,), ("embed",), scale=0.5),
+        "mu_r": ParamSpec((d,), ("embed",), scale=0.5),
+        "wk": ParamSpec((d, ff), ("embed", "ff")),
+        "wr": ParamSpec((d, d), ("embed", None)),
+        "wv": ParamSpec((ff, d), ("ff", "embed")),
+    }
+
+
+def _shift(x, last=None):
+    """Token shift: x_{t-1} (zeros / carried state at t=0)."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    else:
+        last = last[:, None]
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu
+
+
+def _decay(params, xw):
+    """w_t in (0,1): exp(-exp(w0 + tanh(xw W_a) W_b))."""
+    lora = jnp.einsum("bsr,rd->bsd",
+                      jnp.tanh(jnp.einsum("bsd,dr->bsr",
+                                          xw.astype(jnp.float32),
+                                          params["w_a"].astype(jnp.float32))),
+                      params["w_b"].astype(jnp.float32))
+    return jnp.exp(-jnp.exp(params["w0"].astype(jnp.float32) + lora))
+
+
+def rwkv_time_mix(params, x, state: RwkvState | None = None,
+                  n_heads: int = 32):
+    """x: (B, S, d).  Returns (out, new_state_parts) — train when S>1."""
+    b, s, d = x.shape
+    hd = d // n_heads
+    last = None if state is None else state.shift_t
+    xs = _shift(x, last)
+    xr = _mix(x, xs, params["mu_r"])
+    xk = _mix(x, xs, params["mu_k"])
+    xv = _mix(x, xs, params["mu_v"])
+    xg = _mix(x, xs, params["mu_g"])
+    xw = _mix(x, xs, params["mu_w"])
+
+    r = beinsum("bsd,dhk->bshk", xr, params["wr"]).astype(jnp.float32)
+    k = beinsum("bsd,dhk->bshk", xk, params["wk"]).astype(jnp.float32)
+    v = beinsum("bsd,dhk->bshk", xv, params["wv"]).astype(jnp.float32)
+    g = beinsum("bsd,dhk->bshk", xg, params["wg"])
+    w = _decay(params, xw).reshape(b, s, n_heads, hd)      # (B,S,H,hd)
+    u = params["bonus_u"].astype(jnp.float32)              # (H, hd)
+
+    def step(wkv, inp):
+        r_t, k_t, v_t, w_t = inp          # (B,H,hd) each
+        kv = k_t[..., :, None] * v_t[..., None, :]         # (B,H,hd,hd)
+        out_t = jnp.einsum("bhk,bhkv->bhv", r_t,
+                           wkv + u[None, :, :, None] * kv)
+        wkv = w_t[..., :, None] * wkv + kv
+        return wkv, out_t
+
+    wkv0 = (jnp.zeros((b, n_heads, hd, hd), jnp.float32)
+            if state is None else state.wkv)
+    tm = lambda a: jnp.moveaxis(a, 1, 0)                   # scan over time
+    wkv, outs = jax.lax.scan(step, wkv0, (tm(r), tm(k), tm(v), tm(w)))
+    out = jnp.moveaxis(outs, 0, 1)                         # (B,S,H,hd)
+
+    # group norm per head + gate
+    mu = out.mean(-1, keepdims=True)
+    var = out.var(-1, keepdims=True)
+    out = (out - mu) * jax.lax.rsqrt(var + 1e-5)
+    out = out.reshape(b, s, d) * params["ln_scale"].astype(jnp.float32)
+    out = out.reshape(b, s, n_heads, hd)
+    out = (out * jax.nn.silu(g.astype(jnp.float32))).astype(x.dtype)
+    y = beinsum("bshk,hkd->bsd", out, params["wo"])
+    return y, (wkv, x[:, -1])
+
+
+def rwkv_channel_mix(params, x, last=None):
+    xs = _shift(x, last)
+    xk = _mix(x, xs, params["mu_k"])
+    xr = _mix(x, xs, params["mu_r"])
+    k = beinsum("bsd,df->bsf", xk, params["wk"])
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    r = jax.nn.sigmoid(
+        jnp.einsum("bsd,de->bse", xr, params["wr"]).astype(jnp.float32))
+    return (r.astype(x.dtype) * beinsum("bsf,fd->bsd", k, params["wv"]),
+            x[:, -1])

@@ -1,0 +1,430 @@
+"""Model assembler: decoder-only / hybrid / RWKV / enc-dec, scan-over-layers.
+
+Layers are stacked into *scan groups* (``cfg.group_size`` layers per group,
+chosen as the period of the layer pattern — 1 for homogeneous stacks, 8 for
+Jamba's attn:mamba 1:7 interleave).  jax.lax.scan over the group stack keeps
+the HLO a single group body regardless of depth — essential for 512-device
+compile times — and jax.checkpoint around the group body implements the
+activation-remat policy.
+
+Decode state is a per-group-stacked cache pytree scanned alongside params.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import mamba as mb
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rk
+from repro.models.common import ParamSpec, stack_specs
+from repro.parallel.api import shard_hint
+
+NEG = -1e30
+
+
+# ================================================================= specs ====
+def _norm_specs(cfg):
+    return (L.rmsnorm_specs(cfg.d_model) if cfg.norm == "rms"
+            else L.layernorm_specs(cfg.d_model))
+
+
+def _norm(cfg, params, x):
+    return (L.rms_norm(params, x) if cfg.norm == "rms"
+            else L.layer_norm(params, x))
+
+
+def _layer_specs(cfg: ArchConfig, mix: str, mlp: str, cross: bool = False):
+    s: dict[str, Any] = {}
+    if mix == "attn":
+        s["norm1"] = _norm_specs(cfg)
+        s["attn"] = attn.attention_specs(cfg.d_model, cfg.n_heads_padded,
+                                         cfg.n_kv_padded, cfg.head_dim,
+                                         cfg.qkv_bias)
+    elif mix == "mamba":
+        s["norm1"] = _norm_specs(cfg)
+        s["mamba"] = mb.mamba_specs(cfg.d_model, cfg.d_inner, cfg.d_state,
+                                    cfg.d_conv, cfg.dt_rank)
+    elif mix == "rwkv":
+        s["norm1"] = L.layernorm_specs(cfg.d_model)
+        s["time"] = rk.rwkv_time_specs(cfg.d_model, cfg.n_heads, cfg.lora_r)
+    if cross:
+        s["norm_x"] = _norm_specs(cfg)
+        s["cross"] = attn.cross_attention_specs(
+            cfg.d_model, cfg.n_heads_padded, cfg.n_kv_padded, cfg.head_dim)
+    s["norm2"] = (_norm_specs(cfg) if mlp != "rwkv_ffn"
+                  else L.layernorm_specs(cfg.d_model))
+    if mlp == "dense":
+        s["mlp"] = (L.swiglu_specs(cfg.d_model, cfg.d_ff)
+                    if cfg.norm == "rms"
+                    else L.gelu_mlp_specs(cfg.d_model, cfg.d_ff))
+    elif mlp == "moe":
+        s["moe"] = moe_mod.moe_specs(cfg.d_model, cfg.moe_ff or cfg.d_ff,
+                                     cfg.moe_experts_padded)
+        if cfg.shared_expert_ff:
+            s["shared"] = moe_mod.shared_expert_specs(cfg.d_model,
+                                                      cfg.shared_expert_ff)
+        if cfg.dense_residual:
+            s["dense2"] = L.swiglu_specs(cfg.d_model, cfg.d_ff)
+    elif mlp == "rwkv_ffn":
+        s["chan"] = rk.rwkv_channel_specs(cfg.d_model, cfg.d_ff)
+    return s
+
+
+def group_specs(cfg: ArchConfig, cross: bool = False) -> dict:
+    return {str(pos): _layer_specs(cfg, mix, mlp, cross)
+            for pos, (mix, mlp) in enumerate(cfg.group_kinds())}
+
+
+def model_specs(cfg: ArchConfig) -> dict:
+    s: dict[str, Any] = {
+        "embed": L.embedding_specs(cfg.vocab_padded, cfg.d_model),
+        "groups": stack_specs(group_specs(cfg, cross=(cfg.kind == "encdec")),
+                              cfg.n_groups, axis_name="layers"),
+        "final_norm": _norm_specs(cfg),
+    }
+    if not cfg.tie_embeddings:
+        s["lm_head"] = {"table": ParamSpec(
+            (cfg.vocab_padded, cfg.d_model), ("vocab", "embed"), scale=0.02)}
+    if cfg.kind == "encdec":
+        enc_pattern = {"0": _layer_specs(cfg, "attn", "dense")}
+        s["enc_groups"] = stack_specs(enc_pattern, cfg.enc_layers,
+                                      axis_name="layers")
+        s["enc_norm"] = _norm_specs(cfg)
+    return s
+
+
+# ============================================================ layer apply ===
+def _apply_mlp(cfg, mlp, params, x):
+    h = _norm(cfg, params["norm2"], x)
+    if mlp == "dense":
+        y = (L.swiglu(params["mlp"], h) if cfg.norm == "rms"
+             else L.gelu_mlp(params["mlp"], h))
+    elif mlp == "moe":
+        y = moe_mod.moe_apply(
+            params["moe"], h, n_experts=cfg.moe_experts,
+            n_experts_padded=cfg.moe_experts_padded, top_k=cfg.moe_top_k,
+            capacity_factor=cfg.capacity_factor)
+        if "shared" in params:
+            y = y + moe_mod.shared_expert_apply(params["shared"], h)
+        if "dense2" in params:
+            y = y + L.swiglu(params["dense2"], h)
+    else:
+        raise ValueError(mlp)
+    return x + y
+
+
+def _apply_layer_train(cfg, kinds, params, x, positions, memory=None):
+    mix, mlp = kinds
+    if mix == "attn":
+        h = _norm(cfg, params["norm1"], x)
+        ap = attn.mask_padded_heads(params["attn"], cfg.n_heads, cfg.n_kv)
+        x = x + attn.attention_train(
+            ap, h, positions, n_heads=cfg.n_heads_padded,
+            n_kv=cfg.n_kv_padded, head_dim=cfg.head_dim,
+            rope_theta=cfg.rope_theta,
+            causal=(memory is None or cfg.kind != "encdec_encoder"),
+            chunk=cfg.attn_chunk, window=cfg.window)
+    elif mix == "mamba":
+        h = _norm(cfg, params["norm1"], x)
+        x = x + mb.mamba_train(params["mamba"], h, d_state=cfg.d_state,
+                               dt_rank=cfg.dt_rank, chunk=cfg.mamba_chunk)
+    elif mix == "rwkv":
+        h = L.layer_norm(params["norm1"], x)
+        y, _ = rk.rwkv_time_mix(params["time"], h, n_heads=cfg.n_heads)
+        x = x + y
+    if memory is not None and "cross" in params:
+        h = _norm(cfg, params["norm_x"], x)
+        cp = attn.mask_padded_heads(params["cross"], cfg.n_heads, cfg.n_kv)
+        mk, mv = attn.project_memory(cp, memory)
+        x = x + attn.cross_attention(cp, h, mk, mv)
+    if mlp == "rwkv_ffn":
+        h = L.layer_norm(params["norm2"], x)
+        y, _ = rk.rwkv_channel_mix(params["chan"], h)
+        return x + y
+    return _apply_mlp(cfg, mlp, params, x)
+
+
+# ============================================================== forward =====
+def _scan_groups(cfg, groups_params, x, body):
+    """scan(body) over the stacked groups with the remat policy applied."""
+    if cfg.remat == "full":
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    elif cfg.remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots)
+    x, ys = jax.lax.scan(body, x, groups_params,
+                         unroll=min(cfg.scan_unroll, cfg.n_groups))
+    return x, ys
+
+
+def forward_train(cfg: ArchConfig, params, batch) -> jnp.ndarray:
+    """Token logits for the training step (decoder-only / hybrid / rwkv)."""
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens)
+    prefix = None
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        prefix = batch["vision_embeds"].astype(x.dtype)
+        x = jnp.concatenate([prefix, x], axis=1)
+    x = shard_hint(x, "batch", None, "embed")
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    memory = None
+    if cfg.kind == "encdec":
+        memory = encode(cfg, params, batch["frames"])
+    pattern = cfg.group_kinds()
+
+    def body(xc, gp):
+        for pos, kinds in enumerate(pattern):
+            xc = _apply_layer_train(cfg, kinds, gp[str(pos)], xc, positions,
+                                    memory)
+        xc = shard_hint(xc, "batch", None, "embed")
+        return xc, None
+
+    x, _ = _scan_groups(cfg, params["groups"], x, body)
+    x = _norm(cfg, params["final_norm"], x)
+    table = (params["embed"]["table"] if cfg.tie_embeddings
+             else params["lm_head"]["table"])
+    logits = jnp.einsum("bsd,vd->bsv", x, table)
+    logits = shard_hint(logits, "batch", None, "vocab")
+    return logits
+
+
+def encode(cfg: ArchConfig, params, frames) -> jnp.ndarray:
+    """Encoder stack over precomputed frame embeddings (audio stub)."""
+    x = frames.astype(jnp.bfloat16)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(xc, gp):
+        p = gp["0"]
+        h = _norm(cfg, p["norm1"], xc)
+        ap = attn.mask_padded_heads(p["attn"], cfg.n_heads, cfg.n_kv)
+        xc = xc + attn.attention_train(
+            ap, h, positions, n_heads=cfg.n_heads_padded,
+            n_kv=cfg.n_kv_padded, head_dim=cfg.head_dim,
+            rope_theta=cfg.rope_theta, causal=False,
+            chunk=cfg.attn_chunk)
+        xc = _apply_mlp(cfg, "dense", p, xc)
+        return xc, None
+
+    x, _ = _scan_groups(cfg, params["enc_groups"], x, body)
+    return _norm(cfg, params["enc_norm"], x)
+
+
+def loss_fn(cfg: ArchConfig, params, batch) -> jnp.ndarray:
+    """Mean next-token cross-entropy (padded-vocab ids masked out)."""
+    logits = forward_train(cfg, params, batch).astype(jnp.float32)
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        logits = logits[:, cfg.frontend_len:]
+    targets = batch["targets"]
+    vmask = jnp.arange(cfg.vocab_padded) < cfg.vocab
+    logits = jnp.where(vmask[None, None, :], logits, NEG)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# =============================================================== serving ====
+def _abstractify(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def init_decode_caches(cfg: ArchConfig, batch: int, s_max: int,
+                       abstract: bool = False):
+    """Stacked (per scan group) decode caches for every layer position.
+
+    Shapes are built symbolically first; ``abstract=True`` returns pure
+    ShapeDtypeStructs WITHOUT allocating — a 32k x b128 cache tree is
+    ~100 GB, which must never exist on the host during a dry-run.
+    """
+    g = cfg.n_groups
+
+    def one(kinds):
+        mix, _mlp = kinds
+        sds = jax.ShapeDtypeStruct
+        if mix == "attn":
+            if cfg.kv_cache_dtype == "int8":
+                return attn.KVCache(
+                    k=sds((g, batch, s_max, cfg.n_kv_padded, cfg.head_dim),
+                          jnp.int8),
+                    v=sds((g, batch, s_max, cfg.n_kv_padded, cfg.head_dim),
+                          jnp.int8),
+                    length=sds((g,), jnp.int32),
+                    k_scale=sds((g, batch, s_max, cfg.n_kv_padded, 1),
+                                jnp.bfloat16),
+                    v_scale=sds((g, batch, s_max, cfg.n_kv_padded, 1),
+                                jnp.bfloat16))
+            return attn.KVCache(
+                k=sds((g, batch, s_max, cfg.n_kv_padded, cfg.head_dim),
+                      jnp.bfloat16),
+                v=sds((g, batch, s_max, cfg.n_kv_padded, cfg.head_dim),
+                      jnp.bfloat16),
+                length=sds((g,), jnp.int32))
+        if mix == "mamba":
+            return mb.MambaState(
+                h=sds((g, batch, cfg.d_inner, cfg.d_state), jnp.float32),
+                conv=sds((g, batch, cfg.d_conv - 1, cfg.d_inner),
+                         jnp.bfloat16))
+        if mix == "rwkv":
+            hd = cfg.d_model // cfg.n_heads
+            return rk.RwkvState(
+                wkv=sds((g, batch, cfg.n_heads, hd, hd), jnp.float32),
+                shift_t=sds((g, batch, cfg.d_model), jnp.bfloat16),
+                shift_c=sds((g, batch, cfg.d_model), jnp.bfloat16))
+        return ()
+
+    pattern = cfg.group_kinds()
+    stacked = {str(pos): one(k) for pos, k in enumerate(pattern)}
+    if cfg.kind == "encdec":
+        sds = jax.ShapeDtypeStruct
+        stacked = {
+            "self": stacked,
+            "memory_k": sds((g, batch, cfg.cross_memory_len,
+                             cfg.n_kv_padded, cfg.head_dim), jnp.bfloat16),
+            "memory_v": sds((g, batch, cfg.cross_memory_len,
+                             cfg.n_kv_padded, cfg.head_dim), jnp.bfloat16),
+        }
+    if abstract:
+        return stacked
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), stacked,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def _decode_mix(cfg, kinds, params, x, cache):
+    mix, _ = kinds
+    if mix == "attn":
+        h = _norm(cfg, params["norm1"], x)
+        ap = attn.mask_padded_heads(params["attn"], cfg.n_heads, cfg.n_kv)
+        y, cache = attn.attention_decode(ap, h, cache,
+                                         rope_theta=cfg.rope_theta,
+                                         window=cfg.window)
+        return x + y, cache
+    if mix == "mamba":
+        h = _norm(cfg, params["norm1"], x)
+        y, cache = mb.mamba_decode(params["mamba"], h, cache,
+                                   d_state=cfg.d_state, dt_rank=cfg.dt_rank)
+        return x + y, cache
+    if mix == "rwkv":
+        h = L.layer_norm(params["norm1"], x)
+        y, (wkv, last_t) = rk.rwkv_time_mix(
+            params["time"], h, state=cache, n_heads=cfg.n_heads)
+        return x + y, cache._replace(wkv=wkv, shift_t=last_t[:, 0]
+                                     if last_t.ndim == 3 else last_t)
+    return x, cache
+
+
+def decode_step(cfg: ArchConfig, params, caches, batch):
+    """One-token decode: batch['tokens'] (B, 1) -> (logits, new caches)."""
+    x = L.embed(params["embed"], batch["tokens"])
+    x = shard_hint(x, "batch", None, "embed")
+    pattern = cfg.group_kinds()
+    is_encdec = cfg.kind == "encdec"
+
+    def body(xc, xs):
+        gp, gc = xs
+        self_gc = gc["self"] if is_encdec else gc
+        new_gc = {}
+        for pos, kinds in enumerate(pattern):
+            p, c = gp[str(pos)], self_gc[str(pos)]
+            xc, new_c = _decode_mix(cfg, kinds, p, xc, c)
+            if is_encdec and "cross" in p:
+                h = _norm(cfg, p["norm_x"], xc)
+                xc = xc + attn.cross_attention(p["cross"], h,
+                                               gc["memory_k"],
+                                               gc["memory_v"])
+            _, mlp = kinds
+            if mlp == "rwkv_ffn":
+                h = L.layer_norm(p["norm2"], xc)
+                y, last_c = rk.rwkv_channel_mix(p["chan"], h, c.shift_c)
+                xc = xc + y
+                new_c = new_c._replace(shift_c=last_c)
+            else:
+                xc = _apply_mlp(cfg, mlp, p, xc)
+            new_gc[str(pos)] = new_c
+        if is_encdec:
+            new_gc = {"self": new_gc, "memory_k": gc["memory_k"],
+                      "memory_v": gc["memory_v"]}
+        return xc, new_gc
+
+    x, new_caches = jax.lax.scan(body, x, (params["groups"], caches),
+                                 unroll=min(cfg.scan_unroll, cfg.n_groups))
+    x = _norm(cfg, params["final_norm"], x)
+    table = (params["embed"]["table"] if cfg.tie_embeddings
+             else params["lm_head"]["table"])
+    logits = jnp.einsum("bsd,vd->bsv", x, table)
+    vmask = jnp.arange(cfg.vocab_padded) < cfg.vocab
+    return jnp.where(vmask[None, None, :], logits, NEG), new_caches
+
+
+def prefill(cfg: ArchConfig, params, batch, s_max: int):
+    """Populate decode caches from a prompt; returns (last logits, caches)."""
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens)
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        x = jnp.concatenate([batch["vision_embeds"].astype(x.dtype), x],
+                            axis=1)
+    x = shard_hint(x, "batch", None, "embed")
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    pattern = cfg.group_kinds()
+    is_encdec = cfg.kind == "encdec"
+    memory = encode(cfg, params, batch["frames"]) if is_encdec else None
+
+    def body(xc, gp):
+        new_gc = {}
+        for pos, kinds in enumerate(pattern):
+            p = gp[str(pos)]
+            mix, mlp = kinds
+            if mix == "attn":
+                h = _norm(cfg, p["norm1"], xc)
+                ap = attn.mask_padded_heads(p["attn"], cfg.n_heads, cfg.n_kv)
+                y, c = attn.attention_prefill(
+                    ap, h, positions, s_max, rope_theta=cfg.rope_theta,
+                    chunk=cfg.attn_chunk, window=cfg.window,
+                    quantize=(cfg.kv_cache_dtype == "int8"))
+                xc = xc + y
+            elif mix == "mamba":
+                h = _norm(cfg, p["norm1"], xc)
+                y, c = mb.mamba_prefill(p["mamba"], h, d_state=cfg.d_state,
+                                        dt_rank=cfg.dt_rank,
+                                        chunk=cfg.mamba_chunk)
+                xc = xc + y
+            elif mix == "rwkv":
+                h = L.layer_norm(p["norm1"], xc)
+                y, (wkv, last_t) = rk.rwkv_time_mix(p["time"], h,
+                                                    n_heads=cfg.n_heads)
+                xc = xc + y
+                c = rk.RwkvState(wkv=wkv, shift_t=last_t,
+                                 shift_c=jnp.zeros_like(last_t))
+            if is_encdec and "cross" in p:
+                h = _norm(cfg, p["norm_x"], xc)
+                mk, mv = attn.project_memory(p["cross"], memory)
+                xc = xc + attn.cross_attention(p["cross"], h, mk, mv)
+            if mlp == "rwkv_ffn":
+                h = L.layer_norm(p["norm2"], xc)
+                y, last_c = rk.rwkv_channel_mix(p["chan"], h)
+                xc = xc + y
+                c = c._replace(shift_c=last_c)
+            else:
+                xc = _apply_mlp(cfg, mlp, p, xc)
+            new_gc[str(pos)] = c
+        if is_encdec:
+            p0 = gp["0"]
+            mk, mv = attn.project_memory(p0["cross"], memory)
+            new_gc = {"self": new_gc, "memory_k": mk, "memory_v": mv}
+        xc = shard_hint(xc, "batch", None, "embed")
+        return xc, new_gc
+
+    x, caches = _scan_groups(cfg, params["groups"], x, body)
+    x = _norm(cfg, params["final_norm"], x)
+    table = (params["embed"]["table"] if cfg.tie_embeddings
+             else params["lm_head"]["table"])
+    logits = jnp.einsum("bd,vd->bv", x[:, -1], table)
+    vmask = jnp.arange(cfg.vocab_padded) < cfg.vocab
+    return jnp.where(vmask[None, :], logits, NEG), caches

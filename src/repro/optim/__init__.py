@@ -1,0 +1,7 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWState,
+    adamw_init,
+    adamw_update,
+    global_norm,
+)
+from repro.optim.schedule import cosine_schedule  # noqa: F401

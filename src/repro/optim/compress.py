@@ -1,0 +1,64 @@
+"""Gradient compression for cross-pod reduction (distributed-optimization).
+
+Two mechanisms (DESIGN.md §6):
+
+1. **bf16 reduction** — free with bf16 params (grads are bf16); halves
+   cross-pod all-reduce bytes vs fp32.  Always on in this framework.
+2. **int8 + error feedback** — per-tensor symmetric quantisation with a
+   residual carried to the next step, for the *cross-pod* hop only (the
+   slowest link).  Convergence-safe: EF-SGD-style, the quantisation error is
+   re-injected so the compressed reducer is unbiased over time.
+
+``ef_int8_reduce`` is expressed with shard_map over the 'pod' axis so the
+int8 all-reduce is visible in lowered HLO (the §Perf collective lever).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def quantize_int8(x: jnp.ndarray):
+    """Symmetric per-tensor int8: returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress(g: jnp.ndarray, error: jnp.ndarray):
+    """Error-feedback compress: returns (q, scale, new_error)."""
+    corrected = g.astype(jnp.float32) + error
+    q, scale = quantize_int8(corrected)
+    new_error = corrected - dequantize_int8(q, scale)
+    return q, scale, new_error
+
+
+def make_ef_int8_pod_reduce(mesh: Mesh):
+    """Cross-pod mean of per-pod gradients with int8+EF compression.
+
+    g, error: arrays sharded with P('pod', ...) on the leading axis is NOT
+    required — inputs are per-pod *replicated-within-pod* values; shard_map
+    binds only the 'pod' axis and all-reduces the int8 payload across it.
+    """
+    assert "pod" in mesh.axis_names
+
+    def reduce_fn(g, error):
+        q, scale, new_error = ef_compress(g, error)
+        # int8 payload all-reduce across pods (sum), fp32 scale all-gather
+        qsum = jax.lax.psum(q.astype(jnp.int32), "pod")
+        ssum = jax.lax.psum(scale, "pod")  # scales ~equal; mean scale
+        npod = jax.lax.psum(jnp.ones((), jnp.float32), "pod")
+        mean = qsum.astype(jnp.float32) * (ssum / npod) / npod
+        return mean.astype(g.dtype), new_error
+
+    # everything replicated on other axes; 'pod' carries distinct values
+    return shard_map(reduce_fn, mesh=mesh,
+                     in_specs=(P(), P()), out_specs=(P(), P()),
+                     check_vma=False)

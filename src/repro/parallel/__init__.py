@@ -1,0 +1,6 @@
+from repro.parallel.api import (  # noqa: F401
+    MeshRules,
+    active_rules,
+    shard_hint,
+    use_rules,
+)

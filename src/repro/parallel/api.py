@@ -1,0 +1,65 @@
+"""Logical-axis sharding hints usable from pure model code.
+
+Model code calls ``shard_hint(x, 'batch', None, 'embed')`` with *logical*
+axis names; the active :class:`MeshRules` context (installed by the step
+builders in ``repro.train``) translates them to physical
+``with_sharding_constraint``s.  With no context installed the hint is a
+no-op, so model code runs unmodified on a single CPU device in tests.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE: contextvars.ContextVar = contextvars.ContextVar("mesh_rules",
+                                                         default=None)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    """Logical -> physical axis mapping (DESIGN.md §6)."""
+    mesh: Mesh
+    mapping: dict
+
+    def spec(self, logical: tuple) -> P:
+        phys = []
+        used = set()
+        for ax in logical:
+            m = self.mapping.get(ax) if ax is not None else None
+            # an axis may be claimed at most once per spec
+            if m is None or (isinstance(m, str) and m in used) or (
+                    isinstance(m, tuple) and any(a in used for a in m)):
+                phys.append(None)
+            else:
+                phys.append(m)
+                used.update(m if isinstance(m, tuple) else (m,))
+        while phys and phys[-1] is None:
+            phys.pop()
+        return P(*phys)
+
+    def sharding(self, logical: tuple) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical))
+
+
+@contextlib.contextmanager
+def use_rules(rules: MeshRules | None):
+    token = _ACTIVE.set(rules)
+    try:
+        yield
+    finally:
+        _ACTIVE.reset(token)
+
+
+def active_rules() -> MeshRules | None:
+    return _ACTIVE.get()
+
+
+def shard_hint(x, *logical):
+    rules = _ACTIVE.get()
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, rules.sharding(tuple(logical)))

@@ -1,0 +1,148 @@
+"""Logical->physical sharding rules per (arch, shape, mesh) — DESIGN.md §6.
+
+Baseline policy:
+  batch        -> ('pod', 'data')     (DP; pod is just more DP)
+  heads/ff/vocab -> 'model'           (TP)
+  kv_heads     -> 'model' iff divisible, else replicated (GQA kv < TP)
+  expert       -> 'model' (<= TP experts) or 'data' (Arctic 128e: EP over
+                  data, ff stays TP over model -> 256-way expert weights)
+  seq_kv       -> ('pod', 'data') only for batch-1 long-context decode (SP)
+  everything else replicated
+
+Optimizer state (ZeRO-1): same as the parameter but with ('pod','data')
+claimed on the first divisible unsharded dim — grads reduce-scatter, the
+update runs on 1/DP of the state, params all-gather back.
+"""
+from __future__ import annotations
+
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, SHAPES
+from repro.parallel.api import MeshRules
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        return int(np.prod([_axis_size(mesh, a) for a in name]))
+    return mesh.shape[name]
+
+
+def data_axes(mesh: Mesh):
+    return (("pod", "data") if "pod" in mesh.axis_names else ("data",))
+
+
+def make_rules(mesh: Mesh, cfg: ArchConfig, shape: str) -> MeshRules:
+    tp = _axis_size(mesh, "model")
+    sp = SHAPES[shape]
+    batch_axes = data_axes(mesh)
+    dp = _axis_size(mesh, batch_axes)
+
+    mapping: dict = {
+        "embed": None,
+        "head_dim": None,
+        "ff": "model",
+        "vocab": "model",
+        "layers": None,
+        "heads": "model" if (cfg.n_heads_padded % tp == 0) else None,
+        "kv_heads": "model" if (cfg.n_kv_padded % tp == 0) else None,
+    }
+    if cfg.moe_experts:
+        # Prefer EP over 'data' with TP over 'ff' inside each expert:
+        # expert weights then shard dp x tp ways (Arctic: 937 GB bf16 ->
+        # 3.7 GB/device) and dispatch lowers to a data-axis all-to-all.
+        # Fallback: EP over 'model' (ff replicated within the expert).
+        ep = _axis_size(mesh, "data")
+        ff = cfg.moe_ff or cfg.d_ff
+        if cfg.moe_experts_padded % ep == 0 and ff % tp == 0:
+            mapping["expert"] = "data"
+        elif cfg.moe_experts_padded % tp == 0:
+            mapping["expert"] = "model"
+        else:
+            mapping["expert"] = "data"
+    # Serving with replicated kv heads (GQA kv < TP): shard the cache on
+    # head_dim instead — the model axis otherwise idles while the KV cache
+    # (the dominant serving state) is replicated 16x.  The per-step cost is
+    # a tiny partial-sum all-reduce of (B,1,...) logits; the win is cache
+    # bytes/device / tp (§Perf decode iteration 2).
+    if sp.step in ("prefill", "decode") and mapping["kv_heads"] is None \
+            and cfg.head_dim % tp == 0:
+        mapping["head_dim"] = "model"
+    if sp.global_batch % dp == 0 and sp.global_batch >= dp:
+        mapping["batch"] = batch_axes
+        mapping["seq_kv"] = None
+    else:
+        # batch-1 long-context decode: sequence-parallel cache (SP)
+        mapping["batch"] = None
+        mapping["seq_kv"] = batch_axes
+    return MeshRules(mesh=mesh, mapping=mapping)
+
+
+def param_shardings(rules: MeshRules, axes_tree):
+    """Pytree of NamedShardings from a logical-axes pytree."""
+    import jax
+    return jax.tree.map(
+        lambda ax: rules.sharding(tuple(ax)), axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def zero1_shardings(rules: MeshRules, axes_tree, shapes_tree):
+    """Optimizer-state shardings: param spec + 'data' on a divisible dim."""
+    import jax
+    mesh = rules.mesh
+    dp_axes = data_axes(mesh)
+    dp = _axis_size(mesh, dp_axes)
+
+    def one(ax, shaped):
+        spec = list(rules.spec(tuple(ax)))
+        spec += [None] * (len(shaped.shape) - len(spec))
+        used = set()
+        for s in spec:
+            used.update(s if isinstance(s, tuple) else (s,))
+        if not any(a in used for a in dp_axes):
+            for i, (s, dim) in enumerate(zip(spec, shaped.shape)):
+                shard = _axis_size(mesh, s) if s else 1
+                if dim % (shard * dp) == 0:
+                    spec[i] = (tuple([*(s if isinstance(s, tuple) else
+                                        ([s] if s else []))] + list(dp_axes))
+                               if s else dp_axes)
+                    break
+        while spec and spec[-1] is None:
+            spec.pop()
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, axes_tree, shapes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def cache_logical_axes(cfg: ArchConfig, caches_tree):
+    """Logical axes for decode caches, by array rank/shape heuristics.
+
+    KV caches are (G, B, S_max, K, hd) (stacked over scan groups); mamba
+    states (G, B, d_inner, d_state); rwkv (G, B, H, hd, hd) / (G, B, d).
+    Leaves are PartitionSpecs of *logical* names (P is a safe pytree leaf;
+    plain tuples collide with NamedTuple cache nodes).
+    """
+    import jax
+
+    def one(x):
+        shp = x.shape
+        if len(shp) == 5 and shp[4] == 1:          # (G,B,S,K,1) int8 scales
+            return P("layers", "batch", "seq_kv", "kv_heads", None)
+        if len(shp) == 5 and shp[2] > shp[3]:      # (G,B,S,K,hd) kv cache
+            return P("layers", "batch", "seq_kv", "kv_heads", "head_dim")
+        if len(shp) == 5:                          # (G,B,H,hd,hd) rwkv wkv
+            return P("layers", "batch", "heads", None, None)
+        if len(shp) == 4 and shp[2] == cfg.d_inner:  # (G,B,di,ds) mamba h
+            return P("layers", "batch", "ff", None)
+        if len(shp) == 4:                          # (G,B,conv,di)
+            return P("layers", "batch", None, "ff")
+        if len(shp) == 3:                          # (G,B,d) shifts
+            return P("layers", "batch", None)
+        if len(shp) == 2:
+            return P("layers", "batch")
+        return P(*([None] * len(shp)))
+
+    return jax.tree.map(one, caches_tree)

@@ -1,0 +1,7 @@
+from repro.train.steps import (  # noqa: F401
+    batch_shardings,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+    state_shardings,
+)

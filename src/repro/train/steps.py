@@ -1,0 +1,173 @@
+"""Jitted train / prefill / decode step builders with full sharding wiring.
+
+Every builder returns (jitted_fn, shardings...) where the jitted function is
+ready both for real execution (reduced configs on CPU) and for AOT
+``.lower(...).compile()`` against ShapeDtypeStructs (the 512-device dry-run).
+
+Train step semantics:
+  * loss in fp32, params/grads bf16 (bf16 gradient reduction — the free
+    2x collective compression, DESIGN.md §6);
+  * grads constrained to the ZeRO-1 shardings => XLA emits reduce-scatter
+    instead of all-reduce, optimizer update runs on 1/DP of the state,
+    updated params all-gather back;
+  * optional microbatch gradient accumulation (fp32 accumulator) via scan;
+  * remat policy comes from the arch config (scan-over-groups boundary).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, SHAPES
+from repro.models import transformer as T
+from repro.models.common import abstract_from_specs, logical_axes
+from repro.optim import AdamWState, adamw_init, adamw_update, cosine_schedule
+from repro.parallel.api import MeshRules, use_rules
+from repro.parallel.rules import (
+    cache_logical_axes,
+    data_axes,
+    make_rules,
+    param_shardings,
+    zero1_shardings,
+)
+
+
+def state_shardings(cfg: ArchConfig, mesh: Mesh, shape: str):
+    """(rules, param shardings, optimizer-state shardings, abstract params)."""
+    specs = T.model_specs(cfg)
+    axes = logical_axes(specs)
+    rules = make_rules(mesh, cfg, shape)
+    psh = param_shardings(rules, axes)
+    abstract = abstract_from_specs(specs)
+    zsh = zero1_shardings(rules, axes, abstract)
+    osh = AdamWState(m=zsh, v=zsh, count=NamedSharding(mesh, P()))
+    return rules, psh, osh, abstract
+
+
+def batch_shardings(cfg: ArchConfig, mesh: Mesh, shape: str, batch_tree):
+    """Batch arrays shard on the leading (batch) dim over ('pod','data')."""
+    sp = SHAPES[shape]
+    daxes = data_axes(mesh)
+    dp = 1
+    for a in daxes:
+        dp *= mesh.shape[a]
+    lead = daxes if sp.global_batch % dp == 0 else None
+    return jax.tree.map(
+        lambda x: NamedSharding(mesh, P(lead, *([None] * (len(x.shape) - 1)))),
+        batch_tree)
+
+
+def make_train_step(cfg: ArchConfig, mesh: Mesh, shape: str = "train_4k",
+                    peak_lr: float = 3e-4, warmup: int = 100,
+                    total_steps: int = 10000, microbatch: int | None = None,
+                    donate: bool = True):
+    """Returns (jitted step, rules, psh, osh).
+
+    step(params, opt_state, batch, step_idx) ->
+        (params, opt_state, {"loss", "grad_norm", "lr"})
+    """
+    rules, psh, osh, abstract = state_shardings(cfg, mesh, shape)
+    state_dtype = (jnp.bfloat16 if cfg.optimizer_state_dtype == "bfloat16"
+                   else jnp.float32)
+    zsh = osh.m
+
+    def compute_grads(params, batch):
+        if microbatch and microbatch > 1:
+            def micro(acc, mb):
+                loss, g = jax.value_and_grad(
+                    lambda p: T.loss_fn(cfg, p, mb))(params)
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32) / microbatch,
+                    acc, g)
+                return acc, loss
+            mbs = jax.tree.map(
+                lambda x: x.reshape((microbatch, -1) + x.shape[1:]), batch)
+            acc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, losses = jax.lax.scan(micro, acc0, mbs)
+            return jnp.mean(losses), jax.tree.map(
+                lambda g, p: g.astype(p.dtype), grads, params)
+        return jax.value_and_grad(lambda p: T.loss_fn(cfg, p, batch))(params)
+
+    def step_fn(params, opt_state, batch, step_idx):
+        with use_rules(rules):
+            loss, grads = compute_grads(params, batch)
+            # ZeRO-1: reduce-scatter gradients onto the state sharding
+            grads = jax.lax.with_sharding_constraint(grads, zsh)
+            lr = cosine_schedule(step_idx, peak_lr=peak_lr,
+                                 warmup_steps=warmup,
+                                 total_steps=total_steps)
+            new_params, new_opt, metrics = adamw_update(
+                grads, opt_state, params, lr)
+            metrics.update(loss=loss, lr=lr)
+            return new_params, new_opt, metrics
+
+    bsh = None  # inferred from inputs; dry-run passes explicit shardings
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=(psh, osh, bsh, None),
+        out_shardings=(psh, osh, None),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    return jitted, rules, psh, osh
+
+    # NOTE: state_dtype is applied by the caller at adamw_init time.
+
+
+def init_opt_state(cfg: ArchConfig, params) -> AdamWState:
+    dtype = (jnp.bfloat16 if cfg.optimizer_state_dtype == "bfloat16"
+             else jnp.float32)
+    return adamw_init(params, dtype)
+
+
+def abstract_opt_state(cfg: ArchConfig, abstract_params) -> AdamWState:
+    dtype = (jnp.bfloat16 if cfg.optimizer_state_dtype == "bfloat16"
+             else jnp.float32)
+    z = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, dtype),
+                     abstract_params)
+    return AdamWState(m=z, v=jax.tree.map(lambda x: x, z),
+                      count=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def make_prefill_step(cfg: ArchConfig, mesh: Mesh, shape: str):
+    """prefill(params, batch) -> (last logits, caches)."""
+    sp = SHAPES[shape]
+    rules, psh, _osh, _ = state_shardings(cfg, mesh, shape)
+    s_max = sp.seq_len
+
+    def fn(params, batch):
+        with use_rules(rules):
+            return T.prefill(cfg, params, batch, s_max)
+
+    caches = T.init_decode_caches(cfg, sp.global_batch, s_max, abstract=True)
+    cax = cache_logical_axes(cfg, caches)
+    csh = jax.tree.map(lambda ax: rules.sharding(tuple(ax)), cax,
+                       is_leaf=lambda x: isinstance(x, P))
+    jitted = jax.jit(fn, in_shardings=(psh, None),
+                     out_shardings=(None, csh))
+    return jitted, rules, psh, csh
+
+
+def make_decode_step(cfg: ArchConfig, mesh: Mesh, shape: str,
+                     donate: bool = True):
+    """decode(params, caches, batch) -> (logits, caches)."""
+    sp = SHAPES[shape]
+    rules, psh, _osh, _ = state_shardings(cfg, mesh, shape)
+
+    def fn(params, caches, batch):
+        with use_rules(rules):
+            return T.decode_step(cfg, params, caches, batch)
+
+    caches = T.init_decode_caches(cfg, sp.global_batch, sp.seq_len,
+                                  abstract=True)
+    cax = cache_logical_axes(cfg, caches)
+    csh = jax.tree.map(lambda ax: rules.sharding(tuple(ax)), cax,
+                       is_leaf=lambda x: isinstance(x, P))
+    jitted = jax.jit(fn, in_shardings=(psh, csh, None),
+                     out_shardings=(None, csh),
+                     donate_argnums=(1,) if donate else ())
+    return jitted, rules, psh, csh

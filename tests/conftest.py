@@ -1,0 +1,60 @@
+import numpy as np
+import pytest
+
+from repro.core.graph import build_graph
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def random_graph(n: int, avg_deg: float, seed: int, weighted: bool = False):
+    """Random test graph (possibly disconnected — good for split tests)."""
+    g = np.random.default_rng(seed)
+    m = max(int(n * avg_deg / 2), 1)
+    e = g.integers(0, n, size=(m, 2))
+    w = g.uniform(0.5, 4.0, size=m).astype(np.float32) if weighted else None
+    return build_graph(e, w, n=n)
+
+
+def host_components_within_communities(graph, comm):
+    """Oracle: (vertex -> (community, component)) labels via host BFS."""
+    from repro.core.graph import to_numpy_adj
+    from collections import deque
+    adj = to_numpy_adj(graph)
+    comm = np.asarray(comm)
+    out = -np.ones(graph.n, dtype=np.int64)
+    for s in range(graph.n):
+        if out[s] >= 0:
+            continue
+        out[s] = s
+        q = deque([s])
+        while q:
+            u = q.popleft()
+            for v, _w in adj[u]:
+                if out[v] < 0 and comm[v] == comm[s]:
+                    out[v] = s
+                    q.append(v)
+    return out
+
+
+def is_partition_refinement(new, old):
+    """Every new community is contained in exactly one old community."""
+    new, old = np.asarray(new), np.asarray(old)
+    for c in np.unique(new):
+        members = old[new == c]
+        if len(np.unique(members)) != 1:
+            return False
+    return True
+
+
+def same_partition(a, b):
+    """Two labelings induce the same partition (up to relabeling)."""
+    a, b = np.asarray(a), np.asarray(b)
+    fa = {}
+    fb = {}
+    for x, y in zip(a.tolist(), b.tolist()):
+        if fa.setdefault(x, y) != y or fb.setdefault(y, x) != x:
+            return False
+    return True

@@ -1,0 +1,79 @@
+"""Checkpoint manager: roundtrip, atomicity, keep-k, hash verify, elastic."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(k, (8, 16)),
+                       "b": jnp.zeros((16,), jnp.bfloat16)},
+            "opt": {"m": jnp.ones((8, 16)), "count": jnp.int32(7)}}
+
+
+def test_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    tree = _tree()
+    mgr.save(5, tree, extra={"data": {"seed": 0, "step": 5}})
+    restored, step, extra = mgr.restore(jax.tree.map(jnp.zeros_like, tree))
+    assert step == 5 and extra["data"]["step"] == 5
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == b.dtype
+
+
+def test_keep_k_and_latest(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(s))
+    assert mgr.all_steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_async_save(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    mgr.save(1, _tree(1), blocking=False)
+    mgr.wait()
+    assert mgr.all_steps() == [1]
+    # no tmp dirs left behind
+    assert not list(tmp_path.glob("tmp-*"))
+
+
+def test_hash_verification(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    tree = _tree()
+    mgr.save(2, tree)
+    # corrupt the payload
+    payload = tmp_path / "step-2" / "arrays.npz"
+    raw = bytearray(payload.read_bytes())
+    raw[len(raw) // 2] ^= 0xFF
+    payload.write_bytes(bytes(raw))
+    with pytest.raises(Exception):
+        mgr.restore(tree)
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, {"w": jnp.zeros((4, 4))})
+    with pytest.raises(ValueError):
+        mgr.restore({"w": jnp.zeros((8, 8))})
+
+
+def test_elastic_restore_with_shardings(tmp_path):
+    """Restore onto explicit (single-device) shardings — the elastic path."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    mgr = CheckpointManager(tmp_path)
+    tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+    mgr.save(1, tree)
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    restored, _, _ = mgr.restore(tree, shardings=sh)
+    assert restored["w"].sharding == sh["w"]
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(tree["w"]))

@@ -1,0 +1,37 @@
+"""Disconnected-community detection (paper Appendix A.1, Algorithm 4)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import disconnected_communities, disconnected_communities_host
+from repro.graphgen import figure1_graph
+from conftest import random_graph
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 50), st.integers(0, 10_000), st.integers(1, 6))
+def test_detect_matches_host_oracle(n, seed, n_comm):
+    g = random_graph(n, 3.0, seed=seed)
+    rng = np.random.default_rng(seed + 7)
+    # community labels are vertex-id-valued in [0, n) (LPA invariant)
+    comm = rng.integers(0, min(n_comm, n), size=n).astype(np.int32)
+    flags, bad, total = disconnected_communities(g, jnp.asarray(comm))
+    flags = np.asarray(flags)
+    oracle = disconnected_communities_host(g, comm)
+    assert int(total) == len(oracle)
+    for c, is_bad in oracle.items():
+        assert bool(flags[c]) == is_bad, (c, is_bad)
+    assert int(bad) == sum(oracle.values())
+
+
+def test_detect_figure1():
+    g, _, after = figure1_graph()
+    flags, bad, total = disconnected_communities(g, jnp.asarray(after))
+    assert (int(bad), int(total)) == (1, 2)
+
+
+def test_all_singletons_connected():
+    g = random_graph(20, 3.0, seed=5)
+    comm = jnp.arange(20, dtype=jnp.int32)
+    _, bad, total = disconnected_communities(g, comm)
+    assert int(bad) == 0 and int(total) == 20

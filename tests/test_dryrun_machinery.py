@@ -1,0 +1,93 @@
+"""Dry-run machinery guard: lower+compile reduced cells on an 8-device host
+mesh in a subprocess (the full 512-device sweep runs out-of-band; this test
+keeps the machinery from rotting)."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+
+SCRIPT = r"""
+import json
+import jax, jax.numpy as jnp
+from repro.configs import reduced_config, input_specs
+from repro.configs.base import SHAPES
+from repro.launch.mesh import make_host_mesh
+from repro.launch.dryrun import collective_bytes
+from repro.train import steps as S
+from repro.models import transformer as T
+
+mesh = make_host_mesh((4, 2), ("data", "model"))
+out = {}
+for name, shape in [("yi-9b", "train_4k"), ("qwen2-moe-a2.7b", "train_4k"),
+                    ("jamba-v0.1-52b", "long_500k")]:
+    cfg = reduced_config(name)
+    sp = SHAPES[shape]
+    batch_abs = input_specs(cfg, shape)
+    if sp.step == "train":
+        step, rules, psh, osh = S.make_train_step(cfg, mesh, shape)
+        params_abs = S.state_shardings(cfg, mesh, shape)[3]
+        opt_abs = S.abstract_opt_state(cfg, params_abs)
+        bsh = S.batch_shardings(cfg, mesh, shape, batch_abs)
+        sds = lambda t, s: jax.tree.map(
+            lambda a, ss: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=ss),
+            t, s)
+        lowered = step.lower(sds(params_abs, psh), sds(opt_abs, osh),
+                             sds(batch_abs, bsh),
+                             jax.ShapeDtypeStruct((), jnp.int32))
+    else:
+        step, rules, psh, csh = S.make_decode_step(cfg, mesh, shape)
+        params_abs = S.state_shardings(cfg, mesh, shape)[3]
+        caches_abs = T.init_decode_caches(cfg, sp.global_batch, sp.seq_len,
+                                          abstract=True)
+        sds = lambda t, s: jax.tree.map(
+            lambda a, ss: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=ss),
+            t, s)
+        lowered = step.lower(sds(params_abs, psh), sds(caches_abs, csh),
+                             batch_abs)
+    comp = lowered.compile()
+    cost = comp.cost_analysis()
+    coll = collective_bytes(comp.as_text(), loop_trips=cfg.n_groups)
+    mem = comp.memory_analysis()
+    out[f"{name}/{shape}"] = {
+        "flops": float(cost.get("flops", -1)),
+        "wire": float(coll["wire_bytes"]["total"]),
+        "counts": coll["counts"],
+        "arg_bytes": int(mem.argument_size_in_bytes),
+    }
+print("RESULT" + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def dryrun_results():
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=str(REPO / "src"))
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=560)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT")][0]
+    return json.loads(line[len("RESULT"):])
+
+
+def test_cells_compile_with_positive_flops(dryrun_results):
+    for cell, r in dryrun_results.items():
+        assert r["flops"] > 0, cell
+        assert r["arg_bytes"] > 0, cell
+
+
+def test_train_cells_have_collectives(dryrun_results):
+    """Sharded train steps must communicate (grad reduce, TP gathers)."""
+    for cell in ("yi-9b/train_4k", "qwen2-moe-a2.7b/train_4k"):
+        r = dryrun_results[cell]
+        assert r["wire"] > 0, (cell, r)
+        assert sum(r["counts"].values()) > 0
+
+
+def test_long_decode_compiles_with_sp_cache(dryrun_results):
+    assert "jamba-v0.1-52b/long_500k" in dryrun_results

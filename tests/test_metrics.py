@@ -1,0 +1,49 @@
+"""NMI / ARI metric tests + GSL-LPA ground-truth recovery."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.metrics import adjusted_rand_index, normalized_mutual_info
+from repro.core import gsl_lpa
+from repro.graphgen import planted_partition
+
+
+def test_identical_partitions():
+    a = np.array([0, 0, 1, 1, 2, 2])
+    assert normalized_mutual_info(a, a) == pytest.approx(1.0)
+    assert adjusted_rand_index(a, a) == pytest.approx(1.0)
+    # relabeling-invariant
+    b = np.array([5, 5, 9, 9, 1, 1])
+    assert normalized_mutual_info(a, b) == pytest.approx(1.0)
+    assert adjusted_rand_index(a, b) == pytest.approx(1.0)
+
+
+def test_independent_partitions_near_zero():
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 4, 4000)
+    b = rng.integers(0, 4, 4000)
+    assert abs(adjusted_rand_index(a, b)) < 0.02
+    assert normalized_mutual_info(a, b) < 0.02
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 30), st.integers(1, 5), st.integers(0, 1000))
+def test_metric_bounds_and_symmetry(n, k, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, k, n)
+    b = rng.integers(0, k, n)
+    nmi = normalized_mutual_info(a, b)
+    ari = adjusted_rand_index(a, b)
+    assert -1e-9 <= nmi <= 1 + 1e-9
+    assert -1.000001 <= ari <= 1 + 1e-9
+    assert nmi == pytest.approx(normalized_mutual_info(b, a), abs=1e-9)
+    assert ari == pytest.approx(adjusted_rand_index(b, a), abs=1e-9)
+
+
+def test_gsl_lpa_recovers_planted_partition():
+    g, truth = planted_partition(8, 50, p_in=0.35, p_out=0.002, seed=21)
+    res = gsl_lpa(g, split="lp")
+    nmi = normalized_mutual_info(res.labels, truth)
+    ari = adjusted_rand_index(res.labels, truth)
+    assert nmi > 0.9, nmi
+    assert ari > 0.8, ari

@@ -1,0 +1,80 @@
+"""Optimizer, schedule, and gradient-compression tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adamw_init, adamw_update, cosine_schedule, global_norm
+from repro.optim.compress import dequantize_int8, ef_compress, quantize_int8
+
+
+def test_adamw_converges_quadratic():
+    params = {"x": jnp.asarray([5.0, -3.0])}
+    state = adamw_init(params)
+    for step in range(300):
+        grads = {"x": 2 * params["x"]}        # d/dx x^2
+        params, state, _ = adamw_update(grads, state, params, lr=0.05,
+                                        weight_decay=0.0)
+    assert float(jnp.max(jnp.abs(params["x"]))) < 0.05
+
+
+def test_grad_clipping():
+    params = {"x": jnp.zeros((4,))}
+    state = adamw_init(params)
+    huge = {"x": jnp.full((4,), 1e6)}
+    _, _, metrics = adamw_update(huge, state, params, lr=1e-3,
+                                 clip_norm=1.0)
+    assert float(metrics["grad_norm"]) == pytest.approx(2e6, rel=1e-3)
+
+
+def test_bf16_state_dtype():
+    params = {"x": jnp.zeros((4,), jnp.bfloat16)}
+    state = adamw_init(params, jnp.bfloat16)
+    assert state.m["x"].dtype == jnp.bfloat16
+    g = {"x": jnp.ones((4,), jnp.bfloat16)}
+    p2, s2, _ = adamw_update(g, state, params, lr=1e-2)
+    assert p2["x"].dtype == jnp.bfloat16
+    assert s2.v["x"].dtype == jnp.bfloat16
+
+
+def test_cosine_schedule():
+    lr0 = float(cosine_schedule(jnp.int32(0), peak_lr=1e-3,
+                                warmup_steps=10, total_steps=100))
+    lrp = float(cosine_schedule(jnp.int32(10), peak_lr=1e-3,
+                                warmup_steps=10, total_steps=100))
+    lre = float(cosine_schedule(jnp.int32(100), peak_lr=1e-3,
+                                warmup_steps=10, total_steps=100))
+    assert lr0 == 0.0
+    assert lrp == pytest.approx(1e-3)
+    assert lre == pytest.approx(1e-4, rel=0.05)
+
+
+def test_quantize_roundtrip_error_bound():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(256,)).astype(np.float32))
+    q, scale = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, scale)) - np.asarray(x))
+    assert err.max() <= float(scale) / 2 + 1e-7
+
+
+def test_error_feedback_unbiased_over_time():
+    """EF compression: the *accumulated* compressed sum tracks the true sum
+    (residual stays bounded) — the convergence-safety property."""
+    rng = np.random.default_rng(1)
+    err = jnp.zeros((64,))
+    true_sum = np.zeros(64)
+    comp_sum = np.zeros(64)
+    for step in range(200):
+        g = jnp.asarray(rng.normal(size=(64,)).astype(np.float32))
+        true_sum += np.asarray(g)
+        q, scale, err = ef_compress(g, err)
+        comp_sum += np.asarray(dequantize_int8(q, scale))
+    # residual = true - compressed must equal the carried error exactly
+    np.testing.assert_allclose(true_sum - comp_sum, np.asarray(err),
+                               rtol=1e-4, atol=1e-4)
+    assert np.abs(np.asarray(err)).max() < 0.2   # bounded, not growing
+
+
+def test_global_norm():
+    t = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    assert float(global_norm(t)) == pytest.approx(5.0)

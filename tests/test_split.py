@@ -1,0 +1,101 @@
+"""Split-Last tests — THE paper invariant: no internally-disconnected
+communities after splitting (Algorithms 1 & 2)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    compact_labels,
+    disconnected_communities,
+    split_bfs_host,
+    split_lp,
+    split_lpp,
+)
+from repro.graphgen import figure1_graph
+from conftest import (
+    host_components_within_communities,
+    is_partition_refinement,
+    random_graph,
+    same_partition,
+)
+
+
+def test_figure1_scenario():
+    """The paper's Fig. 1/2: vertex 3 defects, disconnecting C1."""
+    g, before, after = figure1_graph()
+    # 'before' is connected within each community
+    _, bad0, _ = disconnected_communities(g, jnp.asarray(before))
+    assert int(bad0) == 0
+    # 'after' has exactly one disconnected community (C1)
+    flags, bad1, ncomm = disconnected_communities(g, jnp.asarray(after))
+    assert int(bad1) == 1 and int(ncomm) == 2
+    assert bool(np.asarray(flags)[1])           # community id 1 flagged
+    # all three split techniques repair it identically (as partitions)
+    lp = np.asarray(split_lp(g, jnp.asarray(after)).labels)
+    lpp = np.asarray(split_lpp(g, jnp.asarray(after)).labels)
+    bfs = split_bfs_host(g, after)
+    assert same_partition(lp, lpp)
+    assert same_partition(lp, bfs)
+    # C1 split into {0,1,2} and {4,5,6}; C2 = {3,7,8,9}
+    assert len(set(lp[[0, 1, 2]])) == 1
+    assert len(set(lp[[4, 5, 6]])) == 1
+    assert lp[0] != lp[4]
+    assert len(set(lp[[3, 7, 8, 9]])) == 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(3, 50), st.integers(0, 10_000), st.integers(1, 6))
+def test_split_properties(n, seed, n_comm):
+    """On random graphs with random community assignments:
+    1. post-split communities are internally connected (host BFS oracle);
+    2. the split refines the input partition;
+    3. LP == LPP == BFS as partitions;
+    4. result matches (community x component) from the oracle exactly."""
+    g = random_graph(n, 3.0, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    comm = rng.integers(0, n_comm, size=n).astype(np.int32)
+
+    lp = np.asarray(split_lp(g, jnp.asarray(comm)).labels)
+    lpp = np.asarray(split_lpp(g, jnp.asarray(comm)).labels)
+    bfs = split_bfs_host(g, comm)
+    oracle = host_components_within_communities(g, comm)
+
+    _, bad, _ = disconnected_communities(g, jnp.asarray(lp))
+    assert int(bad) == 0                       # invariant 1
+    assert is_partition_refinement(lp, comm)   # invariant 2
+    assert same_partition(lp, lpp)             # invariant 3
+    assert same_partition(lp, bfs)
+    assert same_partition(lp, oracle)          # invariant 4
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(3, 40), st.integers(0, 10_000))
+def test_shortcut_equivalence(n, seed):
+    """Pointer-jumping (beyond-paper optimization) preserves the result."""
+    g = random_graph(n, 3.0, seed=seed)
+    rng = np.random.default_rng(seed)
+    comm = rng.integers(0, 4, size=n).astype(np.int32)
+    plain = split_lp(g, jnp.asarray(comm), shortcut=False)
+    fast = split_lp(g, jnp.asarray(comm), shortcut=True)
+    assert np.array_equal(np.asarray(plain.labels), np.asarray(fast.labels))
+    assert int(fast.iterations) <= int(plain.iterations)
+
+
+def test_shortcut_speeds_up_paths():
+    """On a long path, shortcutting must reduce sweeps O(n) -> O(log n)."""
+    from repro.core.graph import build_graph
+    n = 256
+    e = np.stack([np.arange(n - 1), np.arange(1, n)], 1)
+    g = build_graph(e, n=n)
+    comm = jnp.zeros(n, jnp.int32)
+    plain = split_lp(g, comm, shortcut=False)
+    fast = split_lp(g, comm, shortcut=True)
+    assert int(plain.iterations) >= n // 2
+    assert int(fast.iterations) <= 12
+    assert np.array_equal(np.asarray(plain.labels), np.asarray(fast.labels))
+
+
+def test_compact_labels():
+    lab = jnp.asarray(np.array([7, 7, 3, 9, 3], np.int32))
+    c = np.asarray(compact_labels(lab))
+    assert c.max() == 2 and same_partition(c, np.asarray(lab))
