@@ -28,8 +28,8 @@ from repro.core.distributed import distributed_gsl_lpa, shard_graph
 from repro.graphgen import rmat
 
 ndev = {ndev}
-mesh = jax.make_mesh((ndev,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.parallel.compat import make_mesh
+mesh = make_mesh((ndev,), ("data",))
 g = rmat(11, 12, seed=7)
 t0 = time.time()
 labels, it, sit = distributed_gsl_lpa(g, mesh)

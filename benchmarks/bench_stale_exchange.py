@@ -24,8 +24,8 @@ from repro.core import modularity, disconnected_fraction
 from repro.core.distributed import distributed_gsl_lpa
 from repro.graphgen import planted_partition
 
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.parallel.compat import make_mesh
+mesh = make_mesh((8,), ("data",))
 g, truth = planted_partition(20, 100, p_in=0.2, p_out=0.001, seed=9)
 out = {}
 for k in (1, 2, 4):

@@ -36,6 +36,20 @@ def suite():
     }
 
 
+@lru_cache(maxsize=None)
+def engine_for(backend: str = "segment", split: str = "lp",
+               bucketing: str = "pow2"):
+    """Shared Engine per knob combo — benchmarks reuse compiled plans."""
+    from repro.engine import Engine, EngineConfig
+    return Engine(EngineConfig(backend=backend, split=split,
+                               bucketing=bucketing))
+
+
+def fit_graph(graph, backend: str = "segment", split: str = "lp"):
+    """Engine-routed detection for benchmark bodies (DetectionResult)."""
+    return engine_for(backend, split).fit(graph)
+
+
 def timed(fn, *args, repeats: int = 3, **kw):
     """Median wall time + last result (first call excluded = compile)."""
     fn(*args, **kw)  # warmup/compile

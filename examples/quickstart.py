@@ -1,33 +1,48 @@
-"""Quickstart: GSL-LPA community detection in five lines.
+"""Quickstart: GSL-LPA community detection through the unified Engine.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import gsl_lpa, gve_lpa, modularity, disconnected_fraction
+from repro.core import gsl_lpa, gve_lpa
+from repro.engine import Engine, EngineConfig
 from repro.graphgen import karate_club, planted_partition
 
 
 def main() -> None:
+    eng = Engine(EngineConfig(backend="auto", compute_metrics=True))
+
     # --- Zachary's karate club ---
     g, truth = karate_club()
-    res = gsl_lpa(g, split="lp")          # propagation + Split-Last
-    q = float(modularity(g, jnp.asarray(res.labels)))
-    print(f"karate club: {len(set(res.labels.tolist()))} communities, "
-          f"Q={q:.3f}, {res.lpa_iterations} LPA iters, "
-          f"{res.split_iterations} split sweeps")
+    res = eng.fit(g)                       # propagation + Split-Last
+    print(f"karate club: {res.num_communities} communities, "
+          f"Q={res.modularity:.3f}, {res.lpa_iterations} LPA iters, "
+          f"{res.split_iterations} split sweeps "
+          f"[{res.backend} backend, bucket {res.bucket}]")
 
     # --- planted partition: GSL-LPA vs plain parallel LPA (GVE-LPA) ---
     g2, truth2 = planted_partition(12, 50, p_in=0.3, p_out=0.003, seed=7)
-    for name, fn in (("GVE-LPA (no split)", gve_lpa),
-                     ("GSL-LPA (split-last)", lambda g: gsl_lpa(g, split="lp"))):
-        r = fn(g2)
-        frac = float(disconnected_fraction(g2, jnp.asarray(r.labels)))
-        print(f"{name:22s} Q={float(modularity(g2, jnp.asarray(r.labels))):.3f} "
-              f"communities={len(set(r.labels.tolist()))} "
-              f"disconnected_frac={frac:.3%}  "
+    no_split = Engine(EngineConfig(split="none", compute_metrics=True))
+    for name, engine in (("GVE-LPA (no split)", no_split),
+                         ("GSL-LPA (split-last)", eng)):
+        r = engine.fit(g2)
+        print(f"{name:22s} Q={r.modularity:.3f} "
+              f"communities={r.num_communities} "
+              f"disconnected_frac={r.disconnected_fraction:.3%}  "
               f"t={r.total_seconds * 1e3:.0f}ms")
+
+    # same-bucket graphs share one compiled executable — second fit is warm
+    g3, _ = planted_partition(12, 50, p_in=0.3, p_out=0.003, seed=8)
+    r3 = eng.fit(g3)
+    print(f"second same-bucket fit: cache_hit={r3.cache_hit}, "
+          f"t={r3.total_seconds * 1e3:.0f}ms")
+
+    # legacy wrappers still work (now thin facades over the Engine)
+    legacy = gsl_lpa(g, split="lp")
+    assert np.array_equal(legacy.labels, res.labels), \
+        "legacy gsl_lpa diverged from Engine result"
+    assert gve_lpa(g2).labels.shape == (g2.n,)
+    print("legacy gsl_lpa agrees: True")
 
     # ground-truth recovery check
     labels = res.labels

@@ -29,8 +29,9 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.parallel.compat import shard_map
 
 from repro.core.graph import Graph, to_padded_neighbors
 from repro.core.lpa import _label_hash
@@ -56,11 +57,17 @@ def _all_axes(mesh: Mesh) -> tuple[str, ...]:
 
 
 def shard_graph(graph: Graph, mesh: Mesh, d_max: int | None = None,
-                ) -> ShardedGraph:
-    """Host-side build + placement of the sharded tiles."""
+                n_rows: int | None = None) -> ShardedGraph:
+    """Host-side build + placement of the sharded tiles.
+
+    ``n_rows``: minimum padded row count — the engine's shape-bucketed
+    path passes the vertex bucket here so that every graph in a bucket
+    shards to identical tile shapes (one compile per bucket).
+    """
     n_dev = int(np.prod(mesh.devices.shape))
     nbr, nw, nmask = to_padded_neighbors(graph, d_max)
-    n_pad = ((nbr.shape[0] + n_dev * 8 - 1) // (n_dev * 8)) * (n_dev * 8)
+    rows = max(nbr.shape[0], n_rows or 0)
+    n_pad = ((rows + n_dev * 8 - 1) // (n_dev * 8)) * (n_dev * 8)
     extra = n_pad - nbr.shape[0]
     if extra:
         pad_ids = np.arange(nbr.shape[0], n_pad, dtype=np.int32)
@@ -87,11 +94,13 @@ def graph_input_specs(n_pad: int, d_max: int):
         labels=jax.ShapeDtypeStruct((n_pad,), jnp.int32),
         active=jax.ShapeDtypeStruct((n_pad,), jnp.bool_),
         iteration=jax.ShapeDtypeStruct((), jnp.int32),
+        n_real=jax.ShapeDtypeStruct((), jnp.int32),
     )
 
 
-def make_lpa_step(mesh: Mesh, n: int, n_pad: int, d_max: int,
-                  exchange_every: int = 1, mode: str = "auto"):
+def make_lpa_step(mesh: Mesh, n_pad: int, d_max: int,
+                  exchange_every: int = 1, mode: str = "auto",
+                  trace_hook=None):
     """Build the jitted distributed LPA iteration.
 
     One call runs ``exchange_every`` semi-synchronous iterations (2 parity
@@ -101,10 +110,15 @@ def make_lpa_step(mesh: Mesh, n: int, n_pad: int, d_max: int,
     device-local slice of the replica (remote labels go stale — the
     beyond-paper collective-term lever).
 
-    Step signature: (nbr, nw, nmask, labels, active, iteration)
+    Step signature: (nbr, nw, nmask, labels, active, iteration, n_real)
                  -> (labels', active', delta_n)
     ``labels`` replicated (n_pad,); ``active`` row-sharded (n_pad,);
-    tiles row-sharded (n_pad, d_max).
+    tiles row-sharded (n_pad, d_max).  ``n_real`` is the unpadded vertex
+    count as a traced scalar, so one compiled step serves every graph that
+    pads to the same (n_pad, d_max) — the engine's shape-bucket contract.
+
+    ``trace_hook``, when given, is called (with no args) each time the step
+    is actually traced — the engine's compile-observability hook.
     """
     axes = _all_axes(mesh)
     n_dev = int(np.prod(mesh.devices.shape))
@@ -112,10 +126,12 @@ def make_lpa_step(mesh: Mesh, n: int, n_pad: int, d_max: int,
     assert n_pad % n_dev == 0
     num_sweeps = 2 * exchange_every
 
-    def step(nbr, nw, nmask, labels, active, iteration):
+    def step(nbr, nw, nmask, labels, active, iteration, n_real):
+        if trace_hook is not None:
+            trace_hook()
         row0 = jax.lax.axis_index(axes) * n_loc
         local_ids = row0 + jnp.arange(n_loc, dtype=jnp.int32)
-        real_loc = local_ids < n
+        real_loc = local_ids < n_real
         parity_loc = (_label_hash(local_ids, jnp.int32(-1)) & 1).astype(bool)
         dn_total = jnp.int32(0)
 
@@ -151,7 +167,7 @@ def make_lpa_step(mesh: Mesh, n: int, n_pad: int, d_max: int,
         return labels, active, dn_total
 
     in_specs = (P(axes, None), P(axes, None), P(axes, None),  # tiles
-                P(), P(axes), P())
+                P(), P(axes), P(), P())
     out_specs = (P(), P(axes), P())
     sharded = shard_map(step, mesh=mesh, in_specs=in_specs,
                         out_specs=out_specs, check_vma=False)
@@ -161,12 +177,12 @@ def make_lpa_step(mesh: Mesh, n: int, n_pad: int, d_max: int,
     rep = NamedSharding(mesh, P())
     return jax.jit(sharded,
                    in_shardings=(tile_sharding, tile_sharding, tile_sharding,
-                                 rep, vec_sharding, rep),
+                                 rep, vec_sharding, rep, rep),
                    out_shardings=(rep, vec_sharding, rep))
 
 
-def make_split_step(mesh: Mesh, n: int, n_pad: int, d_max: int,
-                    mode: str = "auto"):
+def make_split_step(mesh: Mesh, n_pad: int, d_max: int,
+                    mode: str = "auto", trace_hook=None):
     """Distributed SL-LP sweep: (tiles..., comm, labels) -> (labels', dn)."""
     axes = _all_axes(mesh)
     n_dev = int(np.prod(mesh.devices.shape))
@@ -174,6 +190,8 @@ def make_split_step(mesh: Mesh, n: int, n_pad: int, d_max: int,
 
     def step(nbr, nw, nmask, comm, labels):
         del nw
+        if trace_hook is not None:
+            trace_hook()
         row0 = jax.lax.axis_index(axes) * n_loc
         local_ids = row0 + jnp.arange(n_loc, dtype=jnp.int32)
         new_local = ops.min_label(labels[nbr], comm[nbr], nmask,
@@ -203,7 +221,7 @@ def distributed_gsl_lpa(graph: Graph, mesh: Mesh, tau: float = 0.05,
     iteration — the FT hook (state is the complete restart point).
     """
     sg = shard_graph(graph, mesh)
-    step = make_lpa_step(mesh, sg.n, sg.n_pad, sg.d_max,
+    step = make_lpa_step(mesh, sg.n_pad, sg.d_max,
                          exchange_every=exchange_every, mode=mode)
     rep = NamedSharding(mesh, P())
     vec = NamedSharding(mesh, P(_all_axes(mesh)))
@@ -213,14 +231,14 @@ def distributed_gsl_lpa(graph: Graph, mesh: Mesh, tau: float = 0.05,
     it = 0
     while it < max_iterations:
         labels, active, dn = step(sg.nbr, sg.nw, sg.nmask, labels, active,
-                                  jnp.int32(it))
+                                  jnp.int32(it), jnp.int32(sg.n))
         it += 1
         if checkpoint_cb is not None:
             checkpoint_cb("lpa", it, labels)
         if int(dn) <= tau * sg.n:
             break
 
-    split = make_split_step(mesh, sg.n, sg.n_pad, sg.d_max, mode=mode)
+    split = make_split_step(mesh, sg.n_pad, sg.d_max, mode=mode)
     comm = labels
     labels2 = jax.device_put(jnp.arange(sg.n_pad, dtype=jnp.int32), rep)
     sit = 0

@@ -1,25 +1,22 @@
-"""GSL-LPA (Algorithm 3): parallel LPA + Split-Last post-processing.
+"""GSL-LPA (Algorithm 3): thin compatibility wrappers over the Engine.
 
 ``gsl_lpa`` is the paper's headline algorithm; ``gve_lpa`` is the base
 parallel LPA without splitting (the paper's own ablation baseline, §A.2).
+
+Both are now facades over :class:`repro.engine.Engine` with
+``bucketing="exact"`` (bit-identical to the historical standalone
+implementation) and the shared process-wide compile cache, so mixed use
+of the wrappers and the Engine reuses the same compiled executables.
+New code should use the Engine directly — it adds backend selection,
+shape-bucketed compile caching, and warm starts (see README.md).
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import Graph
-from repro.core.lpa import lpa_run
-from repro.core.split import (
-    compact_labels,
-    split_bfs_host,
-    split_lp,
-    split_lpp,
-)
 
 SPLIT_METHODS = ("none", "lp", "lpp", "bfs_host")
 
@@ -39,38 +36,26 @@ class GslResult:
 
 def gsl_lpa(graph: Graph, tau: float = 0.05, max_iterations: int = 20,
             split: str = "lp", shortcut: bool = False,
-            init_labels: jnp.ndarray | None = None) -> GslResult:
+            init_labels=None) -> GslResult:
     """Run GSL-LPA end to end (host-facing wrapper with phase timing).
 
     split: 'none' -> GVE-LPA; 'lp' / 'lpp' -> Algorithm 1 (TPU path);
            'bfs_host' -> Algorithm 2 (the paper's CPU choice; host oracle).
     """
+    from repro.engine import Engine, EngineConfig
+
     if split not in SPLIT_METHODS:
         raise ValueError(f"split must be one of {SPLIT_METHODS}, got {split!r}")
 
-    t0 = time.perf_counter()
-    state = lpa_run(graph, tau=tau, max_iterations=max_iterations,
-                    init_labels=init_labels)
-    labels = jax.block_until_ready(state.labels)
-    lpa_iters = int(state.iteration)
-    t1 = time.perf_counter()
-
-    split_iters = 0
-    if split == "none":
-        out = labels
-    elif split in ("lp", "lpp"):
-        fn = split_lpp if split == "lpp" else split_lp
-        st = fn(graph, labels, shortcut=shortcut)
-        out = jax.block_until_ready(st.labels)
-        split_iters = int(st.iterations)
-    else:  # bfs_host
-        out = jnp.asarray(split_bfs_host(graph, np.asarray(labels)))
-    out = jax.block_until_ready(compact_labels(jnp.asarray(out)))
-    t2 = time.perf_counter()
-
-    return GslResult(labels=np.asarray(out), lpa_iterations=lpa_iters,
-                     split_iterations=split_iters,
-                     lpa_seconds=t1 - t0, split_seconds=t2 - t1)
+    eng = Engine(EngineConfig(backend="segment", tau=tau,
+                              max_iterations=max_iterations, split=split,
+                              shortcut=shortcut, bucketing="exact"))
+    res = eng.fit(graph, init_labels=init_labels)
+    return GslResult(labels=res.labels,
+                     lpa_iterations=res.lpa_iterations,
+                     split_iterations=res.split_iterations,
+                     lpa_seconds=res.lpa_seconds,
+                     split_seconds=res.split_seconds)
 
 
 def gve_lpa(graph: Graph, **kw) -> GslResult:

@@ -131,10 +131,18 @@ def lpa_move(graph: Graph, labels: jnp.ndarray, active: jnp.ndarray,
 
 @partial(jax.jit, static_argnames=("max_iterations",))
 def lpa_run(graph: Graph, tau: float = 0.05, max_iterations: int = 20,
-            init_labels: jnp.ndarray | None = None) -> LpaState:
+            init_labels: jnp.ndarray | None = None,
+            n_real: jnp.ndarray | None = None) -> LpaState:
     """Run LPA to convergence: ``delta_n / n <= tau`` or iteration cap.
 
     Faithful to Algorithm 3 lines 1-6 (the propagation phase of GSL-LPA).
+
+    ``n_real``: optional traced scalar with the *unpadded* vertex count.
+    The engine's shape-bucketed path pads graphs with isolated vertices up
+    to a bucket size; those vertices can never change label, but the
+    convergence threshold must still be ``tau * n_real``, not
+    ``tau * n_bucket`` — passing it as a traced value keeps one compiled
+    executable valid for every graph in the bucket.
     """
     n = graph.n
     labels0 = (jnp.arange(n, dtype=jnp.int32) if init_labels is None
@@ -142,12 +150,18 @@ def lpa_run(graph: Graph, tau: float = 0.05, max_iterations: int = 20,
     state = LpaState(labels=labels0, active=jnp.ones(n, dtype=bool),
                      iteration=jnp.int32(0), delta_n=jnp.int32(n))
 
+    if n_real is None:
+        threshold = jnp.int32(tau * n)
+    else:
+        threshold = (jnp.float32(tau)
+                     * n_real.astype(jnp.float32)).astype(jnp.int32)
+
     # Static hashed parity classes for the semi-synchronous sub-sweeps.
     parity = (_label_hash(jnp.arange(n, dtype=jnp.int32), jnp.int32(-1))
               & 1).astype(bool)
 
     def cond(s: LpaState):
-        return (s.delta_n > jnp.int32(tau * n)) & (s.iteration < max_iterations)
+        return (s.delta_n > threshold) & (s.iteration < max_iterations)
 
     def body(s: LpaState):
         labels, active = s.labels, s.active

@@ -1,0 +1,22 @@
+"""Unified GSL-LPA engine: pluggable backends behind one ``fit`` call.
+
+Public surface:
+
+  * :class:`Engine` / :class:`EngineConfig` / :class:`DetectionResult`
+  * ``register_backend`` / ``backend_names`` — strategy extension points
+  * ``GLOBAL_CACHE`` / ``TRACE_LOG`` — compile-cache observability
+"""
+from repro.engine.cache import (  # noqa: F401
+    GLOBAL_CACHE,
+    TRACE_LOG,
+    CompileCache,
+    TraceLog,
+)
+from repro.engine.config import DetectionResult, EngineConfig  # noqa: F401
+from repro.engine.engine import Engine  # noqa: F401
+from repro.engine.registry import (  # noqa: F401
+    backend_names,
+    choose_backend,
+    get_backend,
+    register_backend,
+)

@@ -1,0 +1,174 @@
+"""Tile backend: single-device padded-neighbor path over the Pallas ops.
+
+The propagation loop mirrors ``core.lpa.lpa_run`` sweep-for-sweep (same
+parity classes, same per-sweep hash seeds, same adopt rule) but computes
+each sweep with ``kernels.ops.label_argmax`` over dense (rows, d_max)
+neighbor tiles — the compiled-kernel path on TPU, the jnp oracle
+elsewhere.  For integer-valued edge weights the per-community sums are
+exact in float32, so the final labels are bit-identical to the segment
+backend (the parity suite asserts this); the split phase uses
+``ops.min_label`` and matches ``split_lp`` exactly.
+
+Both phases run as single jitted ``lax.while_loop`` executables per shape
+bucket; the real vertex count is a traced scalar.
+"""
+from __future__ import annotations
+
+import time
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Graph, _round_up, to_padded_neighbors
+from repro.core.lpa import _label_hash
+from repro.engine.bucketing import BucketKey, pad_labels
+from repro.engine.cache import TRACE_LOG
+from repro.engine.config import EngineConfig
+from repro.engine.registry import BackendRun, register_backend
+from repro.kernels import ops
+
+
+def tile_rows(bucket_n: int) -> int:
+    """Row count of the padded tiles for a vertex bucket (sublane-aligned)."""
+    return _round_up(bucket_n, 8)
+
+
+def pad_tile_rows(nbr: np.ndarray, nw: np.ndarray, nmask: np.ndarray,
+                  rows: int):
+    """Grow neighbor tiles to ``rows`` rows: self-pointing ids, zero weight,
+    masked out — identical padding semantics to ``to_padded_neighbors``."""
+    have = nbr.shape[0]
+    if have == rows:
+        return nbr, nw, nmask
+    if have > rows:
+        raise ValueError(f"tiles have {have} rows, bucket wants {rows}")
+    extra = rows - have
+    pad_ids = np.arange(have, rows, dtype=np.int32)
+    nbr = np.concatenate(
+        [nbr, np.repeat(pad_ids[:, None], nbr.shape[1], axis=1)], axis=0)
+    nw = np.concatenate(
+        [nw, np.zeros((extra, nw.shape[1]), np.float32)], axis=0)
+    nmask = np.concatenate(
+        [nmask, np.zeros((extra, nmask.shape[1]), bool)], axis=0)
+    return nbr, nw, nmask
+
+
+@register_backend("tile")
+class TileBackend:
+    name = "tile"
+
+    def plan_key(self, config: EngineConfig) -> tuple:
+        return ()
+
+    def build(self, bucket: BucketKey, config: EngineConfig):
+        rows = tile_rows(bucket.n)
+        tau, max_iterations = config.tau, config.max_iterations
+        mode = config.kernel_mode
+        do_split = config.split in ("lp", "lpp")
+        prune = config.split == "lpp"
+        shortcut = config.shortcut
+
+        ids = np.arange(rows, dtype=np.int32)
+
+        def _propagate(nbr, nw, nmask, n_real, labels0):
+            TRACE_LOG.record("tile:propagate")
+            vid = jnp.asarray(ids)
+            parity = (_label_hash(vid, jnp.int32(-1)) & 1).astype(bool)
+            real = vid < n_real
+            threshold = (jnp.float32(tau)
+                         * n_real.astype(jnp.float32)).astype(jnp.int32)
+
+            def cond(s):
+                labels, active, it, dn = s
+                return (dn > threshold) & (it < max_iterations)
+
+            def body(s):
+                labels, active, it, _ = s
+                dn = jnp.int32(0)
+                for sweep in range(2):  # semi-synchronous parity sub-sweeps
+                    klass = parity if sweep else ~parity
+                    cand = active & klass
+                    seed = 2 * it + sweep
+                    best_lab, best_w, cur_w = ops.label_argmax(
+                        labels[nbr], nw, nmask, labels,
+                        jnp.asarray(seed, jnp.int32), mode=mode)
+                    adopt = cand & (best_w > jnp.maximum(cur_w, 0.0))
+                    new = jnp.where(adopt, best_lab.astype(jnp.int32), labels)
+                    changed = new != labels
+                    wake = jnp.any(changed[nbr] & nmask, axis=1)
+                    active = (active & ~cand) | (wake & real)
+                    labels = new
+                    dn = dn + jnp.sum(changed.astype(jnp.int32))
+                return labels, active, it + jnp.int32(1), dn
+
+            init = (labels0, real, jnp.int32(0), jnp.int32(rows))
+            labels, _, it, _ = jax.lax.while_loop(cond, body, init)
+            return labels, it
+
+        def _split(nbr, nmask, comm, labels0):
+            TRACE_LOG.record("tile:split")
+            same = (comm[nbr] == comm[:, None]) & nmask
+
+            def cond(s):
+                labels, active, it, dn = s
+                return dn > 0
+
+            def body(s):
+                labels, active, it, _ = s
+                new = ops.min_label(labels[nbr], comm[nbr], nmask, labels,
+                                    comm, mode=mode)
+                if prune:
+                    new = jnp.where(active, new, labels)
+                if shortcut:
+                    new = jnp.minimum(new, new[new])
+                changed = new != labels
+                if prune:
+                    active = jnp.any(changed[nbr] & same, axis=1)
+                dn = jnp.sum(changed.astype(jnp.int32))
+                return new, active, it + jnp.int32(1), dn
+
+            init = (labels0, jnp.ones(rows, dtype=bool), jnp.int32(0),
+                    jnp.int32(rows))
+            labels, _, it, _ = jax.lax.while_loop(cond, body, init)
+            return labels, it
+
+        return SimpleNamespace(
+            rows=rows,
+            propagate=jax.jit(_propagate),
+            split=jax.jit(_split) if do_split else None,
+        )
+
+    def prepare(self, graph: Graph, bucket: BucketKey,
+                config: EngineConfig):
+        nbr, nw, nmask = to_padded_neighbors(graph, d_max=bucket.d)
+        nbr, nw, nmask = pad_tile_rows(nbr, nw, nmask, tile_rows(bucket.n))
+        return (jnp.asarray(nbr), jnp.asarray(nw), jnp.asarray(nmask))
+
+    def run(self, plan, inputs, n_real: int,
+            init_labels: np.ndarray | None) -> BackendRun:
+        nbr, nw, nmask = inputs
+        labels0 = jnp.asarray(pad_labels(
+            np.arange(n_real, dtype=np.int32) if init_labels is None
+            else init_labels, n_real, plan.rows))
+
+        t0 = time.perf_counter()
+        labels, it = plan.propagate(nbr, nw, nmask, jnp.int32(n_real),
+                                    labels0)
+        labels = jax.block_until_ready(labels)
+        lpa_iters = int(it)
+        t1 = time.perf_counter()
+
+        split_iters = 0
+        if plan.split is not None:
+            roots0 = jnp.arange(plan.rows, dtype=jnp.int32)
+            labels, sit = plan.split(nbr, nmask, labels, roots0)
+            labels = jax.block_until_ready(labels)
+            split_iters = int(sit)
+        t2 = time.perf_counter()
+
+        return BackendRun(labels=np.asarray(labels),
+                          lpa_iterations=lpa_iters,
+                          split_iterations=split_iters,
+                          lpa_seconds=t1 - t0, split_seconds=t2 - t1)

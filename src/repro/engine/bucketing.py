@@ -1,0 +1,101 @@
+"""Shape bucketing: pad graphs to canonical shapes so jit caches hit.
+
+Every distinct (vertex-count, edge-count, max-degree) shape triple would
+otherwise force a fresh trace+compile — fatal for a service ingesting a
+stream of graphs.  Bucketing rounds each dimension up to the next power of
+two (with configurable floors), pads the graph with isolated vertices and
+masked edges to the bucket shape, and keys the engine's compile cache on
+the bucket.  Padded vertices have no edges, so they can never adopt or
+donate a label; the only semantic coupling is the convergence threshold,
+which the backends compute from the *real* vertex count passed as a traced
+scalar (see ``lpa_run``'s ``n_real``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Graph, _LANE, _round_up
+
+
+class BucketKey(NamedTuple):
+    """Canonical padded shapes — the compile-cache key's shape component."""
+    n: int   # vertex bucket (>= real n)
+    m: int   # directed-edge bucket (>= real m_pad; multiple of 128)
+    d: int   # max-degree bucket (multiple of 128; tile/sharded backends)
+
+
+def next_pow2(x: int, floor: int = 1) -> int:
+    return max(int(floor), 1 << max(int(x) - 1, 0).bit_length())
+
+
+def max_degree(graph: Graph) -> int:
+    deg = np.asarray(graph.row_ptr[1:]) - np.asarray(graph.row_ptr[:-1])
+    return int(deg.max()) if len(deg) else 1
+
+
+def bucket_for(graph: Graph, *, bucketing: str = "pow2",
+               min_vertex_bucket: int = 256,
+               min_edge_bucket: int = 2048) -> BucketKey:
+    d_real = max(max_degree(graph), 1)
+    if bucketing == "exact":
+        return BucketKey(n=graph.n, m=graph.m_pad,
+                         d=_round_up(d_real, _LANE))
+    return BucketKey(
+        n=next_pow2(graph.n, min_vertex_bucket),
+        m=next_pow2(graph.m_pad, min_edge_bucket),
+        d=_round_up(next_pow2(d_real), _LANE),
+    )
+
+
+def pad_graph(graph: Graph, bucket: BucketKey) -> Graph:
+    """Pad a graph up to its bucket shape (no-op when already there).
+
+    Vertices ``graph.n .. bucket.n`` are isolated; edge slots up to
+    ``bucket.m`` are masked out.  The padded graph's static metadata is a
+    pure function of the bucket, so every graph in a bucket produces the
+    same jit cache key.  ``num_edges`` is deliberately set to the bucket
+    edge count — host-side helpers (``to_numpy_adj`` etc.) must be given
+    the *original* graph, never a bucketed one.
+    """
+    if graph.n == bucket.n and graph.m_pad == bucket.m:
+        return graph
+    if graph.n > bucket.n or graph.m_pad > bucket.m:
+        raise ValueError(f"graph (n={graph.n}, m_pad={graph.m_pad}) exceeds "
+                         f"bucket {bucket}")
+    extra_m = bucket.m - graph.m_pad
+    extra_n = bucket.n - graph.n
+
+    def pad1(a, amount, value=0):
+        return jnp.pad(a, (0, amount), constant_values=value)
+
+    row_ptr = jnp.concatenate([
+        graph.row_ptr,
+        jnp.full((extra_n,), graph.row_ptr[-1], dtype=graph.row_ptr.dtype),
+    ]) if extra_n else graph.row_ptr
+    return Graph(
+        n=bucket.n, m_pad=bucket.m, num_edges=bucket.m,
+        row_ptr=row_ptr,
+        src=pad1(graph.src, extra_m),
+        dst=pad1(graph.dst, extra_m),
+        wgt=pad1(graph.wgt, extra_m),
+        edge_mask=pad1(graph.edge_mask, extra_m),
+        kdeg=pad1(graph.kdeg, extra_n),
+    )
+
+
+def pad_labels(labels: np.ndarray, n_real: int, n_bucket: int) -> np.ndarray:
+    """Pad an (n_real,) init-label vector to the bucket: padded vertices
+    keep their own ids (singleton communities, the LPA invariant)."""
+    labels = np.asarray(labels, dtype=np.int32).reshape(-1)
+    if len(labels) != n_real:
+        raise ValueError(f"init_labels has {len(labels)} entries for a "
+                         f"graph with {n_real} vertices")
+    if np.any(labels < 0) or np.any(labels >= n_real):
+        raise ValueError("init_labels must be vertex-id-valued in [0, n)")
+    if n_bucket == n_real:
+        return labels
+    return np.concatenate(
+        [labels, np.arange(n_real, n_bucket, dtype=np.int32)])

@@ -1,0 +1,111 @@
+"""Engine configuration and the unified detection result.
+
+``EngineConfig`` is the single knob surface for every execution strategy
+(backend) behind :class:`repro.engine.Engine`; ``DetectionResult`` is the
+backend-independent return type of ``Engine.fit``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+BACKENDS = ("auto", "segment", "tile", "sharded")
+SPLIT_METHODS = ("none", "lp", "lpp", "bfs_host")
+BUCKETING = ("pow2", "exact")
+WARM_START = ("off", "auto")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Configuration for :class:`repro.engine.Engine`.
+
+    backend: execution strategy — ``"segment"`` (CSR sort+segment-reduce),
+      ``"tile"`` (padded-neighbor tiles / Pallas kernels), ``"sharded"``
+      (multi-device shard_map), or ``"auto"`` (chosen per graph from size,
+      max degree, and device count).
+    tau / max_iterations / split / shortcut: the GSL-LPA algorithm knobs
+      (paper Algorithm 3 + Section 4), identical semantics to ``gsl_lpa``.
+    bucketing: ``"pow2"`` pads every graph up to power-of-two vertex/edge
+      buckets so same-bucket graphs share one compiled executable;
+      ``"exact"`` compiles per exact shape (bit-identical to the legacy
+      ``gsl_lpa`` path — used by the compatibility wrappers).
+    min_vertex_bucket / min_edge_bucket: floors for the pow2 buckets, so a
+      stream of small graphs collapses into a single bucket.
+    warm_start: ``"auto"`` reuses the previous ``fit`` result's labels as
+      the initial assignment when the vertex count matches (incremental
+      re-detection on evolving graphs); ``"off"`` always starts from
+      singletons.  Explicit ``fit(..., init_labels=...)`` always wins.
+    compute_metrics: also report modularity and disconnected-community
+      fraction on the result (extra device work; off on the hot path).
+    exchange_every: sharded backend — label all-gather cadence (1 is
+      bit-faithful to single device; >1 trades staleness for bandwidth).
+    kernel_mode: tile/sharded kernel dispatch — ``"auto"`` | ``"pallas"``
+      | ``"interpret"`` | ``"ref"`` (see kernels/ops.py).
+    mesh: sharded backend — a ``jax.sharding.Mesh``; defaults to one flat
+      axis over every visible device.
+    """
+    backend: str = "auto"
+    tau: float = 0.05
+    max_iterations: int = 20
+    split: str = "lp"
+    shortcut: bool = False
+    bucketing: str = "pow2"
+    min_vertex_bucket: int = 256
+    min_edge_bucket: int = 2048
+    warm_start: str = "off"
+    compute_metrics: bool = False
+    exchange_every: int = 1
+    kernel_mode: str = "auto"
+    mesh: Any = None
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}, "
+                             f"got {self.backend!r}")
+        if self.split not in SPLIT_METHODS:
+            raise ValueError(f"split must be one of {SPLIT_METHODS}, "
+                             f"got {self.split!r}")
+        if self.bucketing not in BUCKETING:
+            raise ValueError(f"bucketing must be one of {BUCKETING}, "
+                             f"got {self.bucketing!r}")
+        if self.warm_start not in WARM_START:
+            raise ValueError(f"warm_start must be one of {WARM_START}, "
+                             f"got {self.warm_start!r}")
+        if self.exchange_every < 1:
+            raise ValueError("exchange_every must be >= 1")
+
+    def algo_key(self) -> tuple:
+        """The hashable algorithm statics a compiled plan specialises on."""
+        return (self.tau, self.max_iterations, self.split, self.shortcut,
+                self.exchange_every, self.kernel_mode)
+
+
+@dataclasses.dataclass
+class DetectionResult:
+    """Unified result of ``Engine.fit`` — identical shape for all backends."""
+    labels: np.ndarray            # (n,) int32, compacted to dense [0, K)
+    num_communities: int
+    backend: str                  # backend that actually ran
+    lpa_iterations: int
+    split_iterations: int         # 0 for split in ("none", "bfs_host")
+    timings: dict[str, float]     # phase -> seconds (propagation/split/...)
+    bucket: tuple                 # (n_bucket, m_bucket, d_bucket)
+    cache_hit: bool               # compiled plan came from the engine cache
+    warm_started: bool            # fit started from caller/previous labels
+    modularity: float | None = None
+    disconnected_fraction: float | None = None
+
+    @property
+    def lpa_seconds(self) -> float:
+        return self.timings.get("propagation", 0.0)
+
+    @property
+    def split_seconds(self) -> float:
+        return (self.timings.get("split", 0.0)
+                + self.timings.get("compact", 0.0))
+
+    @property
+    def total_seconds(self) -> float:
+        return sum(self.timings.values())

@@ -1,0 +1,121 @@
+"""The unified Engine: one entry point for every GSL-LPA execution path.
+
+    from repro.engine import Engine, EngineConfig
+
+    eng = Engine(EngineConfig(backend="auto"))
+    result = eng.fit(graph)                 # DetectionResult
+    result = eng.fit(graph2)                # same bucket -> no recompile
+    result = eng.fit(graph2, init_labels=result.labels)   # warm start
+
+``fit`` is backend-agnostic: it buckets the graph, fetches (or builds) the
+compiled plan from the shape-bucketed cache, runs the backend, applies the
+host split when requested, compacts labels, and optionally attaches
+quality metrics — returning the same :class:`DetectionResult` regardless
+of execution strategy.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+import repro.engine.backends  # noqa: F401  (registers built-in strategies)
+from repro.core.graph import Graph
+from repro.core.split import split_bfs_host
+from repro.engine.bucketing import bucket_for
+from repro.engine.cache import GLOBAL_CACHE, CompileCache
+from repro.engine.config import DetectionResult, EngineConfig
+from repro.engine.registry import choose_backend, get_backend
+
+
+def _compact_host(labels: np.ndarray) -> tuple[np.ndarray, int]:
+    """Dense [0, K) relabeling, host-side (same rank order as
+    ``split.compact_labels``, but shape-polymorphic for free)."""
+    uniq, inv = np.unique(np.asarray(labels), return_inverse=True)
+    return inv.astype(np.int32), len(uniq)
+
+
+class Engine:
+    """Pluggable-backend GSL-LPA engine with a shape-bucketed jit cache.
+
+    ``cache=None`` shares the process-wide :data:`GLOBAL_CACHE`, so
+    independent Engine instances (and the legacy ``gsl_lpa`` wrapper)
+    reuse each other's compiled plans.
+    """
+
+    def __init__(self, config: EngineConfig | None = None,
+                 cache: CompileCache | None = None):
+        self.config = config if config is not None else EngineConfig()
+        self.cache = cache if cache is not None else GLOBAL_CACHE
+        self._last: tuple[int, np.ndarray] | None = None
+
+    def fit(self, graph: Graph, init_labels=None, *,
+            backend: str | None = None) -> DetectionResult:
+        """Detect communities; returns a unified :class:`DetectionResult`.
+
+        ``init_labels``: optional (n,) vertex-id-valued initial assignment
+        (warm start / incremental re-detection).  ``backend`` overrides the
+        configured strategy for this call only.
+        """
+        cfg = self.config
+        name = backend or cfg.backend
+        if name == "auto":
+            name = choose_backend(graph, cfg)
+        be = get_backend(name)
+
+        bucket = bucket_for(graph, bucketing=cfg.bucketing,
+                            min_vertex_bucket=cfg.min_vertex_bucket,
+                            min_edge_bucket=cfg.min_edge_bucket)
+        key = (name, bucket, cfg.bucketing, cfg.algo_key(), be.plan_key(cfg))
+        plan, cache_hit = self.cache.get_or_build(
+            key, lambda: be.build(bucket, cfg))
+
+        warm_started = init_labels is not None
+        if init_labels is None and cfg.warm_start == "auto" \
+                and self._last is not None and self._last[0] == graph.n:
+            init_labels = self._last[1]
+            warm_started = True
+        if init_labels is not None:
+            init_labels = np.asarray(init_labels, dtype=np.int32)
+
+        t0 = time.perf_counter()
+        inputs = be.prepare(graph, bucket, cfg)
+        t_prep = time.perf_counter() - t0
+
+        run = be.run(plan, inputs, graph.n, init_labels)
+        labels = np.asarray(run.labels)[: graph.n]
+
+        t0 = time.perf_counter()
+        split_seconds = run.split_seconds
+        if cfg.split == "bfs_host":
+            labels = split_bfs_host(graph, labels)
+            split_seconds += time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        labels, k = _compact_host(labels)
+        t_compact = time.perf_counter() - t0
+
+        result = DetectionResult(
+            labels=labels, num_communities=k, backend=name,
+            lpa_iterations=run.lpa_iterations,
+            split_iterations=run.split_iterations,
+            timings={"prepare": t_prep, "propagation": run.lpa_seconds,
+                     "split": split_seconds, "compact": t_compact},
+            bucket=tuple(bucket), cache_hit=cache_hit,
+            warm_started=warm_started,
+        )
+        if cfg.compute_metrics:
+            from repro.core.detect import disconnected_fraction
+            from repro.core.modularity import modularity
+            lab = jnp.asarray(labels)
+            result.modularity = float(modularity(graph, lab))
+            result.disconnected_fraction = float(
+                disconnected_fraction(graph, lab))
+        self._last = (graph.n, labels)
+        return result
+
+    def stats(self) -> dict:
+        """Cache + trace observability (for serving dashboards / tests)."""
+        from repro.engine.cache import TRACE_LOG
+        return {**self.cache.stats(), "traces": TRACE_LOG.snapshot()}

@@ -1,0 +1,89 @@
+"""Backend strategy registry + auto-selection policy.
+
+A backend is a stateless strategy object with four hooks:
+
+  * ``plan_key(config)``  — extra hashable statics (placement: mesh shape,
+    device count) the compiled plan depends on beyond the algorithm knobs;
+  * ``build(bucket, config)`` — construct the plan: jitted executables
+    specialised to the bucket shapes (cached by the engine);
+  * ``prepare(graph, bucket, config)`` — per-graph host-side prep (padding
+    to the bucket, tile construction, device placement);
+  * ``run(plan, inputs, n_real, init_labels)`` — execute, returning a
+    :class:`BackendRun`.
+
+Registration is open: third-party strategies can ``register_backend`` and
+be selected by name through ``EngineConfig.backend``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Protocol
+
+import jax
+import numpy as np
+
+from repro.core.graph import Graph
+from repro.engine.bucketing import BucketKey, max_degree, next_pow2
+from repro.engine.config import EngineConfig
+
+
+class BackendRun(NamedTuple):
+    """Raw backend output (labels still padded + uncompacted)."""
+    labels: np.ndarray        # (bucket rows,) int32 — engine slices [:n_real]
+    lpa_iterations: int
+    split_iterations: int
+    lpa_seconds: float
+    split_seconds: float
+
+
+class Backend(Protocol):
+    name: str
+
+    def plan_key(self, config: EngineConfig) -> tuple: ...
+
+    def build(self, bucket: BucketKey, config: EngineConfig): ...
+
+    def prepare(self, graph: Graph, bucket: BucketKey,
+                config: EngineConfig): ...
+
+    def run(self, plan, inputs, n_real: int,
+            init_labels: np.ndarray | None) -> BackendRun: ...
+
+
+_BACKENDS: dict[str, Backend] = {}
+
+
+def register_backend(name: str):
+    def deco(cls):
+        _BACKENDS[name] = cls()
+        return cls
+    return deco
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise ValueError(f"unknown backend {name!r}; "
+                         f"registered: {backend_names()}") from None
+
+
+def backend_names() -> tuple[str, ...]:
+    return tuple(sorted(_BACKENDS))
+
+
+# Auto-selection: the tile path materialises (rows, d_max) dense neighbor
+# tiles — a win on TPU for degree-bounded graphs, a memory loss on skewed
+# ones.  Thresholds are deliberately simple and documented in README.md.
+_TILE_MAX_DEGREE = 1024
+_TILE_MAX_CELLS = 1 << 24  # ~150 MB of tiles at 9 B/cell
+
+
+def choose_backend(graph: Graph, config: EngineConfig) -> str:
+    """Pick a backend from graph shape + device topology."""
+    if jax.device_count() > 1 or config.mesh is not None:
+        return "sharded"
+    d = next_pow2(max(max_degree(graph), 1))
+    if jax.default_backend() == "tpu" and d <= _TILE_MAX_DEGREE \
+            and graph.n * d <= _TILE_MAX_CELLS:
+        return "tile"
+    return "segment"

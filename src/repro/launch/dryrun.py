@@ -210,12 +210,12 @@ def _lower_graph_cell(mesh, n: int = 1 << 26, d_max: int = 64,
 
     n_dev = int(np.prod(mesh.devices.shape))
     n_pad = ((n + n_dev * 8 - 1) // (n_dev * 8)) * (n_dev * 8)
-    step = make_lpa_step(mesh, n, n_pad, d_max,
+    step = make_lpa_step(mesh, n_pad, d_max,
                          exchange_every=exchange_every, mode="ref")
     specs = graph_input_specs(n_pad, d_max)
     lowered = step.lower(specs["nbr"], specs["nw"], specs["nmask"],
                          specs["labels"], specs["active"],
-                         specs["iteration"])
+                         specs["iteration"], specs["n_real"])
     meta = {"step": "graph_lpa", "n_vertices": n, "d_max": d_max,
             "n_pad": n_pad, "exchange_every": exchange_every,
             "directed_edges_modeled": n * d_max}
@@ -239,7 +239,8 @@ def run_cell(arch: str, shape: str, mesh_kind: str,
     compiled = lowered.compile()
     t_compile = time.time() - t0
 
-    cost = dict(compiled.cost_analysis() or {})
+    from repro.parallel.compat import cost_analysis_dict
+    cost = cost_analysis_dict(compiled)
     cost = {k: float(v) for k, v in cost.items()
             if isinstance(v, (int, float)) and not isinstance(v, bool)}
     try:

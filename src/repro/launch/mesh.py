@@ -4,16 +4,21 @@ from __future__ import annotations
 
 import jax
 
+from repro.parallel.compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips/pod; multi-pod adds the leading 'pod' axis (512)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=axis_types)
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(shape=(4, 2), axes=("data", "model")):
     """Small mesh for CPU multi-device tests (XLA host device count)."""
-    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=axis_types)
+    return make_mesh(shape, axes)
+
+
+def make_flat_mesh(axis: str = "data"):
+    """One axis over every visible device — the engine's sharded default."""
+    return make_mesh((jax.device_count(),), (axis,))

@@ -45,9 +45,8 @@ def run(arch: str, reduced: bool = True, steps: int = 50,
     cfg = reduced_config(arch) if reduced else get_config(arch)
     if mesh is None:
         ndev = len(jax.devices())
-        axis_types = (jax.sharding.AxisType.Auto,) * 2
-        mesh = jax.make_mesh((ndev, 1), ("data", "model"),
-                             axis_types=axis_types)
+        from repro.parallel.compat import make_mesh
+        mesh = make_mesh((ndev, 1), ("data", "model"))
     shape = build_small_shape(cfg, seq_len, global_batch)
 
     step_fn, rules, psh, osh = S.make_train_step(

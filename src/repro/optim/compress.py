@@ -16,8 +16,9 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.parallel.compat import shard_map
 
 
 def quantize_int8(x: jnp.ndarray):

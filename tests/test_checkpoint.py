@@ -67,8 +67,8 @@ def test_shape_mismatch_rejected(tmp_path):
 def test_elastic_restore_with_shardings(tmp_path):
     """Restore onto explicit (single-device) shardings — the elastic path."""
     from jax.sharding import NamedSharding, PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.parallel.compat import make_mesh
+    mesh = make_mesh((1,), ("data",))
     mgr = CheckpointManager(tmp_path)
     tree = {"w": jnp.arange(16.0).reshape(4, 4)}
     mgr.save(1, tree)

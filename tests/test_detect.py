@@ -1,7 +1,11 @@
 """Disconnected-community detection (paper Appendix A.1, Algorithm 4)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import disconnected_communities, disconnected_communities_host
 from repro.graphgen import figure1_graph

@@ -18,8 +18,8 @@ from repro.core import lpa_run, split_lp, compact_labels, modularity, \
 from repro.core.distributed import distributed_gsl_lpa
 from repro.graphgen import karate_club, planted_partition
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_host_mesh
+mesh = make_host_mesh((4, 2), ("data", "model"))
 out = {}
 for name, g in [("karate", karate_club()[0]),
                 ("planted", planted_partition(6, 40, 0.3, 0.01, seed=2)[0])]:

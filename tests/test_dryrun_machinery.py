@@ -50,7 +50,8 @@ for name, shape in [("yi-9b", "train_4k"), ("qwen2-moe-a2.7b", "train_4k"),
         lowered = step.lower(sds(params_abs, psh), sds(caches_abs, csh),
                              batch_abs)
     comp = lowered.compile()
-    cost = comp.cost_analysis()
+    from repro.parallel.compat import cost_analysis_dict
+    cost = cost_analysis_dict(comp)
     coll = collective_bytes(comp.as_text(), loop_trips=cfg.n_groups)
     mem = comp.memory_analysis()
     out[f"{name}/{shape}"] = {

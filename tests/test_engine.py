@@ -1,0 +1,158 @@
+"""Unified Engine API: backend parity, shape-bucketed compile cache,
+warm starts, and legacy-wrapper compatibility."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import disconnected_fraction, gsl_lpa, gve_lpa
+from repro.engine import (
+    TRACE_LOG,
+    CompileCache,
+    Engine,
+    EngineConfig,
+    backend_names,
+    choose_backend,
+)
+from repro.graphgen import erdos_renyi, karate_club, planted_partition
+
+BACKENDS = ("segment", "tile", "sharded")
+
+GRAPHS = {
+    "er": lambda: erdos_renyi(180, 5.0, seed=11),
+    "planted": lambda: planted_partition(6, 30, 0.3, 0.01, seed=3)[0],
+    "karate": lambda: karate_club()[0],
+}
+
+
+def fresh_engine(**kw):
+    return Engine(EngineConfig(**kw), cache=CompileCache())
+
+
+def test_backends_registered():
+    assert set(BACKENDS) <= set(backend_names())
+
+
+@pytest.mark.parametrize("name", sorted(GRAPHS))
+def test_backend_label_parity(name):
+    """segment, tile, and sharded (exchange_every=1) produce identical
+    compacted labels on the same graph."""
+    g = GRAPHS[name]()
+    eng = fresh_engine()
+    results = {be: eng.fit(g, backend=be) for be in BACKENDS}
+    ref = results["segment"]
+    for be in BACKENDS:
+        assert np.array_equal(results[be].labels, ref.labels), (name, be)
+        assert results[be].lpa_iterations == ref.lpa_iterations, (name, be)
+        assert results[be].num_communities == ref.num_communities
+        assert float(disconnected_fraction(
+            g, jnp.asarray(results[be].labels))) == 0.0
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_same_bucket_compiles_once(backend):
+    """Two different graphs (different n, edges) in one shape bucket ->
+    exactly one trace/compile per backend stage, and the second fit is a
+    cache hit with a valid result."""
+    g1 = erdos_renyi(200, 5.0, seed=1)
+    g2 = erdos_renyi(230, 5.0, seed=2)
+    eng = fresh_engine(backend=backend)
+
+    before = TRACE_LOG.snapshot()
+    r1 = eng.fit(g1)
+    mid = TRACE_LOG.snapshot()
+    r2 = eng.fit(g2)
+    after = TRACE_LOG.snapshot()
+
+    assert r1.bucket == r2.bucket
+    assert not r1.cache_hit and r2.cache_hit
+    first = {k: mid[k] - before.get(k, 0) for k in mid
+             if mid[k] != before.get(k, 0)}
+    second = {k: after[k] - mid.get(k, 0) for k in after
+              if after[k] != mid.get(k, 0)}
+    assert first == {f"{backend}:propagate": 1, f"{backend}:split": 1}
+    assert second == {}, f"second same-bucket fit retraced: {second}"
+    assert float(disconnected_fraction(g2, jnp.asarray(r2.labels))) == 0.0
+
+
+def test_second_fit_bit_identical():
+    g = erdos_renyi(150, 4.0, seed=9)
+    eng = fresh_engine()
+    r1 = eng.fit(g)
+    r2 = eng.fit(g)
+    assert r2.cache_hit
+    assert np.array_equal(r1.labels, r2.labels)
+    assert r1.lpa_iterations == r2.lpa_iterations
+
+
+def test_legacy_wrappers_ride_the_engine():
+    """gsl_lpa / gve_lpa are facades over the Engine (exact bucketing) and
+    agree with a direct exact-bucket Engine fit."""
+    g, _ = karate_club()
+    eng = fresh_engine(bucketing="exact")
+    res = eng.fit(g)
+    legacy = gsl_lpa(g, split="lp")
+    assert np.array_equal(legacy.labels, res.labels)
+    assert legacy.lpa_iterations == res.lpa_iterations
+    assert legacy.split_iterations == res.split_iterations
+    assert legacy.lpa_seconds > 0 and legacy.split_seconds > 0
+    none = gve_lpa(g)
+    assert none.split_iterations == 0
+
+
+@pytest.mark.parametrize("split", ["none", "lp", "lpp", "bfs_host"])
+def test_split_methods_through_engine(split):
+    g = erdos_renyi(120, 5.0, seed=6)
+    res = fresh_engine(split=split).fit(g)
+    assert res.labels.shape == (g.n,)
+    assert res.labels.min() == 0
+    if split != "none":
+        assert float(disconnected_fraction(g, jnp.asarray(res.labels))) == 0.0
+
+
+def test_warm_start_auto_and_explicit():
+    g, _ = planted_partition(8, 30, 0.3, 0.005, seed=5)
+    eng = fresh_engine(warm_start="auto")
+    r1 = eng.fit(g)
+    assert not r1.warm_started
+    r2 = eng.fit(g)  # previous labels re-used -> converges quickly
+    assert r2.warm_started
+    assert r2.lpa_iterations <= r1.lpa_iterations
+    assert float(disconnected_fraction(g, jnp.asarray(r2.labels))) == 0.0
+
+    cold = fresh_engine()
+    r3 = cold.fit(g, init_labels=r1.labels)
+    assert r3.warm_started
+    assert float(disconnected_fraction(g, jnp.asarray(r3.labels))) == 0.0
+
+
+def test_result_shape_and_metrics():
+    g, _ = karate_club()
+    res = fresh_engine(compute_metrics=True).fit(g)
+    assert res.num_communities == len(set(res.labels.tolist()))
+    assert set(res.timings) == {"prepare", "propagation", "split", "compact"}
+    assert res.modularity is not None and res.modularity > 0.2
+    assert res.disconnected_fraction == 0.0
+    assert res.backend in BACKENDS
+
+
+def test_auto_backend_selection_runs():
+    g = erdos_renyi(64, 3.0, seed=2)
+    cfg = EngineConfig(backend="auto")
+    assert choose_backend(g, cfg) in BACKENDS
+    res = Engine(cfg, cache=CompileCache()).fit(g)
+    assert res.backend in BACKENDS
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        EngineConfig(backend="gpu-magic")
+    with pytest.raises(ValueError):
+        EngineConfig(split="fancy")
+    with pytest.raises(ValueError):
+        EngineConfig(exchange_every=0)
+    g = erdos_renyi(40, 3.0, seed=1)
+    with pytest.raises(ValueError):
+        fresh_engine(split="lpp").fit(g, backend="sharded")
+    with pytest.raises(ValueError):
+        fresh_engine().fit(g, init_labels=np.full(g.n, g.n + 3))

@@ -1,7 +1,9 @@
 """Graph representation invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.graph import build_graph, to_numpy_adj, to_padded_neighbors
 from conftest import random_graph

@@ -6,7 +6,9 @@ mode='pallas' on an actual TPU takes the identical code path.
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.graph import to_padded_neighbors
 from repro.kernels import ops

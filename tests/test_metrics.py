@@ -1,7 +1,9 @@
 """NMI / ARI metric tests + GSL-LPA ground-truth recovery."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.metrics import adjusted_rand_index, normalized_mutual_info
 from repro.core import gsl_lpa

@@ -59,8 +59,8 @@ from repro.models import moe as moe_mod
 from repro.models.common import init_from_specs
 from repro.parallel.api import MeshRules, use_rules
 
-mesh = jax.make_mesh((8, 1), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.parallel.compat import make_mesh
+mesh = make_mesh((8, 1), ("data", "model"))
 d, e, k = 64, 8, 2
 params = init_from_specs(moe_mod.moe_specs(d, 128, e), jax.random.PRNGKey(0))
 x = jax.random.normal(jax.random.PRNGKey(1), (16, 8, d)).astype(jnp.bfloat16)

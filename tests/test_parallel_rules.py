@@ -20,9 +20,8 @@ from repro.parallel.rules import (
 @pytest.fixture(scope="module")
 def mesh():
     # AbstractMesh: sharding-rule math without needing 4 real devices
-    return jax.sharding.AbstractMesh(
-        (2, 2), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.parallel.compat import abstract_mesh
+    return abstract_mesh((2, 2), ("data", "model"))
 
 
 def test_tp_axes_mapped(mesh):
@@ -45,9 +44,8 @@ def test_kv_heads_replicated_when_indivisible(mesh):
     cfg = get_config("yi-9b")          # kv=4, tp=2 here -> divisible
     rules = make_rules(mesh, cfg, "train_4k")
     assert rules.spec(("kv_heads",)) == P("model")
-    big = jax.sharding.AbstractMesh(
-        (1, 8), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.parallel.compat import abstract_mesh
+    big = abstract_mesh((1, 8), ("data", "model"))
     rules8 = make_rules(big, cfg, "train_4k")   # kv=4, tp=8 -> replicated
     assert rules8.spec(("kv_heads",)) == P()
 
