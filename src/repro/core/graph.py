@@ -113,6 +113,29 @@ def build_graph(edges: np.ndarray, weights: np.ndarray | None = None,
     )
 
 
+def graph_fingerprint(graph: Graph) -> tuple:
+    """Cheap structural identity: (n, m, crc of offsets, crc of dst).
+
+    Used by the engine's ``warm_start="auto"`` keying — two graphs that
+    merely share a vertex count must not warm-start off each other.
+    Weights are deliberately excluded: a re-weighted graph keeps the same
+    structure and its old labels remain a sound starting point.
+
+    The result is memoized on the instance (frozen dataclass, hence the
+    ``object.__setattr__``): re-fitting the same Graph object — the
+    warm-start serving pattern — pays the O(m) device-to-host copy and
+    CRC only once.
+    """
+    fp = getattr(graph, "_fingerprint", None)
+    if fp is None:
+        import zlib
+        fp = (graph.n, graph.num_edges,
+              zlib.crc32(np.asarray(graph.row_ptr).tobytes()),
+              zlib.crc32(np.asarray(graph.dst).tobytes()))
+        object.__setattr__(graph, "_fingerprint", fp)
+    return fp
+
+
 def to_numpy_adj(graph: Graph) -> list[list[tuple[int, float]]]:
     """Host adjacency list (for the BFS oracle / host split path)."""
     src = np.asarray(graph.src)[: graph.num_edges]

@@ -28,6 +28,9 @@ class GslResult:
     split_iterations: int       # 0 for none / bfs_host
     lpa_seconds: float
     split_seconds: float
+    # Underlying Engine result (timings, backend, cache_hit, metrics) so
+    # facade users keep full observability without switching APIs.
+    detail: "object | None" = None
 
     @property
     def total_seconds(self) -> float:
@@ -55,7 +58,8 @@ def gsl_lpa(graph: Graph, tau: float = 0.05, max_iterations: int = 20,
                      lpa_iterations=res.lpa_iterations,
                      split_iterations=res.split_iterations,
                      lpa_seconds=res.lpa_seconds,
-                     split_seconds=res.split_seconds)
+                     split_seconds=res.split_seconds,
+                     detail=res)
 
 
 def gve_lpa(graph: Graph, **kw) -> GslResult:

@@ -36,8 +36,14 @@ class SplitState(NamedTuple):
 
 
 def _min_label_sweep(graph: Graph, comm: jnp.ndarray, labels: jnp.ndarray,
-                     active: jnp.ndarray, prune: bool, shortcut: bool):
-    """One sweep of Algorithm 1's loop body (lines 8-21), vectorised."""
+                     active: jnp.ndarray, prune: bool, shortcut: bool,
+                     voffset: jnp.ndarray | None = None):
+    """One sweep of Algorithm 1's loop body (lines 8-21), vectorised.
+
+    ``voffset``: per-vertex owner offsets when labels are in per-graph
+    *local* coordinates (the batched path) — the shortcut's pointer jump
+    must gather at the label's global row, ``label + voffset``.
+    """
     n = graph.n
     same = graph.edge_mask & (comm[graph.src] == comm[graph.dst])
     # min over same-community neighbors; sentinel n elsewhere
@@ -46,8 +52,8 @@ def _min_label_sweep(graph: Graph, comm: jnp.ndarray, labels: jnp.ndarray,
     new = jnp.minimum(labels, nbr_min.astype(labels.dtype))
     if prune:
         new = jnp.where(active, new, labels)
-    if shortcut:
-        new = jnp.minimum(new, new[new])  # pointer jump (beyond-paper)
+    if shortcut:  # pointer jump (beyond-paper)
+        new = jnp.minimum(new, new[new if voffset is None else new + voffset])
     changed = new != labels
     delta_n = jnp.sum(changed.astype(jnp.int32))
     if prune:

@@ -17,6 +17,7 @@ from repro.engine.engine import Engine  # noqa: F401
 from repro.engine.registry import (  # noqa: F401
     backend_names,
     choose_backend,
+    choose_backend_batch,
     get_backend,
     register_backend,
 )

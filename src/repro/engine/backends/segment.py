@@ -20,18 +20,26 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.batch import lpa_run_batched, split_lp_batched
 from repro.core.graph import Graph
 from repro.core.lpa import lpa_run
 from repro.core.split import split_lp
-from repro.engine.bucketing import BucketKey, pad_graph, pad_labels
+from repro.engine.bucketing import (
+    BatchBucketKey,
+    BucketKey,
+    batch_index_arrays,
+    pad_graph,
+    pad_labels,
+)
 from repro.engine.cache import TRACE_LOG
 from repro.engine.config import EngineConfig
-from repro.engine.registry import BackendRun, register_backend
+from repro.engine.registry import BackendRun, BatchBackendRun, register_backend
 
 
 @register_backend("segment")
 class SegmentBackend:
     name = "segment"
+    supports_batch = True
 
     def plan_key(self, config: EngineConfig) -> tuple:
         return ()
@@ -86,3 +94,55 @@ class SegmentBackend:
                           lpa_iterations=lpa_iters,
                           split_iterations=split_iters,
                           lpa_seconds=t1 - t0, split_seconds=t2 - t1)
+
+    # --- batched dispatch (GraphBatch disjoint-union packing) ---
+
+    def build_batch(self, bucket: BatchBucketKey, config: EngineConfig):
+        tau, max_iterations = config.tau, config.max_iterations
+        do_split = config.split in ("lp", "lpp")
+        prune = config.split == "lpp"
+        shortcut = config.shortcut
+
+        def _propagate(graph, sizes, graph_id, voffset):
+            TRACE_LOG.record("segment:batch_propagate")
+            return lpa_run_batched(graph, sizes, graph_id, voffset,
+                                   tau=tau, max_iterations=max_iterations)
+
+        def _split(graph, sizes, graph_id, voffset, comm):
+            TRACE_LOG.record("segment:batch_split")
+            return split_lp_batched(graph, sizes, graph_id, voffset, comm,
+                                    prune=prune, shortcut=shortcut)
+
+        return SimpleNamespace(
+            propagate=jax.jit(_propagate),
+            split=jax.jit(_split) if do_split else None,
+        )
+
+    def prepare_batch(self, batch, bucket: BatchBucketKey,
+                      config: EngineConfig):
+        g = pad_graph(batch.graph, BucketKey(bucket.n, bucket.m, bucket.d))
+        sizes, graph_id, voffset = batch_index_arrays(batch, bucket.k,
+                                                      bucket.n)
+        return (g, jnp.asarray(sizes), jnp.asarray(graph_id),
+                jnp.asarray(voffset))
+
+    def run_batch(self, plan, inputs) -> BatchBackendRun:
+        g, sizes, graph_id, voffset = inputs
+        k1 = sizes.shape[0]
+
+        t0 = time.perf_counter()
+        labels, iters = plan.propagate(g, sizes, graph_id, voffset)
+        labels = jax.block_until_ready(labels)
+        t1 = time.perf_counter()
+
+        split_iters = np.zeros(k1, np.int32)
+        if plan.split is not None:
+            labels, siters = plan.split(g, sizes, graph_id, voffset, labels)
+            labels = jax.block_until_ready(labels)
+            split_iters = np.asarray(siters)
+        t2 = time.perf_counter()
+
+        return BatchBackendRun(labels=np.asarray(labels),
+                               lpa_iterations=np.asarray(iters),
+                               split_iterations=split_iters,
+                               lpa_seconds=t1 - t0, split_seconds=t2 - t1)

@@ -54,6 +54,11 @@ def _shard_rows(bucket_n: int, n_dev: int) -> int:
 @register_backend("sharded")
 class ShardedBackend:
     name = "sharded"
+    # No batched dispatch yet: the shard_map steps gather labels across
+    # devices each exchange, and a packed multi-graph layout would need
+    # per-shard graph_id bookkeeping (ROADMAP open item).  Engine.fit_many
+    # falls back to sequential fits for this backend.
+    supports_batch = False
 
     def plan_key(self, config: EngineConfig) -> tuple:
         # the Mesh itself (hashable: device ids + axis names) — two meshes

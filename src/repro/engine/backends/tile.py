@@ -23,10 +23,15 @@ import numpy as np
 
 from repro.core.graph import Graph, _round_up, to_padded_neighbors
 from repro.core.lpa import _label_hash
-from repro.engine.bucketing import BucketKey, pad_labels
+from repro.engine.bucketing import (
+    BatchBucketKey,
+    BucketKey,
+    batch_index_arrays,
+    pad_labels,
+)
 from repro.engine.cache import TRACE_LOG
 from repro.engine.config import EngineConfig
-from repro.engine.registry import BackendRun, register_backend
+from repro.engine.registry import BackendRun, BatchBackendRun, register_backend
 from repro.kernels import ops
 
 
@@ -58,6 +63,7 @@ def pad_tile_rows(nbr: np.ndarray, nw: np.ndarray, nmask: np.ndarray,
 @register_backend("tile")
 class TileBackend:
     name = "tile"
+    supports_batch = True
 
     def plan_key(self, config: EngineConfig) -> tuple:
         return ()
@@ -172,3 +178,133 @@ class TileBackend:
                           lpa_iterations=lpa_iters,
                           split_iterations=split_iters,
                           lpa_seconds=t1 - t0, split_seconds=t2 - t1)
+
+    # --- batched dispatch: one tile launch over the packed super-graph.
+    # Labels live in per-graph *local* coordinates (the argmax tie-break
+    # hashes raw label values); nbr tiles hold global row ids, and the
+    # per-slot done/iters state freezes each member exactly where its
+    # standalone run would stop.
+
+    def build_batch(self, bucket: BatchBucketKey, config: EngineConfig):
+        rows = tile_rows(bucket.n)
+        k1 = bucket.k + 1
+        tau, max_iterations = config.tau, config.max_iterations
+        mode = config.kernel_mode
+        do_split = config.split in ("lp", "lpp")
+        prune = config.split == "lpp"
+        shortcut = config.shortcut
+
+        ids = np.arange(rows, dtype=np.int32)
+
+        def _propagate(nbr, nw, nmask, sizes, graph_id, voffset, n_total):
+            TRACE_LOG.record("tile:batch_propagate")
+            vid = jnp.asarray(ids)
+            local = vid - voffset
+            parity = (_label_hash(local, jnp.int32(-1)) & 1).astype(bool)
+            real = vid < n_total
+            thr = (jnp.float32(tau)
+                   * sizes.astype(jnp.float32)).astype(jnp.int32)
+            done0 = sizes <= thr
+
+            def cond(s):
+                _labels, _active, it, done, _iters = s
+                return jnp.any(~done) & (it < max_iterations)
+
+            def body(s):
+                labels, active, it, done, iters = s
+                running = ~done[graph_id]
+                dn = jnp.zeros((k1,), jnp.int32)
+                for sweep in range(2):  # semi-synchronous parity sub-sweeps
+                    klass = parity if sweep else ~parity
+                    cand = active & klass & running
+                    seed = 2 * it + sweep
+                    best_lab, best_w, cur_w = ops.label_argmax(
+                        labels[nbr], nw, nmask, labels,
+                        jnp.asarray(seed, jnp.int32), mode=mode)
+                    adopt = cand & (best_w > jnp.maximum(cur_w, 0.0))
+                    new = jnp.where(adopt, best_lab.astype(jnp.int32), labels)
+                    changed = new != labels
+                    wake = jnp.any(changed[nbr] & nmask, axis=1)
+                    active = (active & ~cand) | (wake & real)
+                    labels = new
+                    dn = dn + jax.ops.segment_sum(changed.astype(jnp.int32),
+                                                  graph_id, num_segments=k1)
+                iters = iters + jnp.where(done, 0, 1)
+                return (labels, active, it + jnp.int32(1),
+                        done | (dn <= thr), iters)
+
+            init = (local, real, jnp.int32(0), done0,
+                    jnp.zeros((k1,), jnp.int32))
+            labels, _, _, _, iters = jax.lax.while_loop(cond, body, init)
+            return labels, iters
+
+        def _split(nbr, nmask, sizes, graph_id, voffset, comm):
+            TRACE_LOG.record("tile:batch_split")
+            vid = jnp.asarray(ids)
+            local = vid - voffset
+            same = (comm[nbr] == comm[:, None]) & nmask
+            done0 = sizes == 0
+
+            def cond(s):
+                _labels, _active, done, _iters = s
+                return jnp.any(~done)
+
+            def body(s):
+                labels, active, done, iters = s
+                new = ops.min_label(labels[nbr], comm[nbr], nmask, labels,
+                                    comm, mode=mode)
+                if prune:
+                    new = jnp.where(active, new, labels)
+                if shortcut:
+                    new = jnp.minimum(new, new[new + voffset])
+                changed = new != labels
+                if prune:
+                    active = jnp.any(changed[nbr] & same, axis=1)
+                dn = jax.ops.segment_sum(changed.astype(jnp.int32),
+                                         graph_id, num_segments=k1)
+                iters = iters + jnp.where(done, 0, 1)
+                return new, active, done | (dn == 0), iters
+
+            init = (local, jnp.ones(rows, dtype=bool), done0,
+                    jnp.zeros((k1,), jnp.int32))
+            labels, _, _, iters = jax.lax.while_loop(cond, body, init)
+            return labels, iters
+
+        return SimpleNamespace(
+            rows=rows,
+            propagate=jax.jit(_propagate),
+            split=jax.jit(_split) if do_split else None,
+        )
+
+    def prepare_batch(self, batch, bucket: BatchBucketKey,
+                      config: EngineConfig):
+        rows = tile_rows(bucket.n)
+        nbr, nw, nmask = to_padded_neighbors(batch.graph, d_max=bucket.d)
+        nbr, nw, nmask = pad_tile_rows(nbr, nw, nmask, rows)
+        sizes, graph_id, voffset = batch_index_arrays(batch, bucket.k, rows)
+        return (jnp.asarray(nbr), jnp.asarray(nw), jnp.asarray(nmask),
+                jnp.asarray(sizes), jnp.asarray(graph_id),
+                jnp.asarray(voffset), jnp.int32(batch.total_vertices))
+
+    def run_batch(self, plan, inputs) -> BatchBackendRun:
+        nbr, nw, nmask, sizes, graph_id, voffset, n_total = inputs
+        k1 = sizes.shape[0]
+
+        t0 = time.perf_counter()
+        labels, iters = plan.propagate(nbr, nw, nmask, sizes, graph_id,
+                                       voffset, n_total)
+        labels = jax.block_until_ready(labels)
+        t1 = time.perf_counter()
+
+        split_iters = np.zeros(k1, np.int32)
+        if plan.split is not None:
+            labels, siters = plan.split(nbr, nmask, sizes, graph_id,
+                                        voffset, labels)
+            labels = jax.block_until_ready(labels)
+            split_iters = np.asarray(siters)
+        t2 = time.perf_counter()
+
+        return BatchBackendRun(labels=np.asarray(labels),
+                               lpa_iterations=np.asarray(iters),
+                               split_iterations=split_iters,
+                               lpa_seconds=t1 - t0, split_seconds=t2 - t1)

@@ -27,6 +27,19 @@ class BucketKey(NamedTuple):
     d: int   # max-degree bucket (multiple of 128; tile/sharded backends)
 
 
+class BatchBucketKey(NamedTuple):
+    """Batched-dispatch bucket: graph-count + packed-total shapes.
+
+    Mixed traffic reuses compiled batch plans as long as the *totals*
+    land in the same bucket — the per-graph composition rides along as
+    traced data (sizes / graph_id / voffset arrays).
+    """
+    k: int   # graph-count bucket (>= real batch size)
+    n: int   # total-vertex bucket (>= packed n)
+    m: int   # total-edge bucket (>= packed m_pad; multiple of 128)
+    d: int   # max-degree bucket across members (multiple of 128)
+
+
 def next_pow2(x: int, floor: int = 1) -> int:
     return max(int(floor), 1 << max(int(x) - 1, 0).bit_length())
 
@@ -48,6 +61,48 @@ def bucket_for(graph: Graph, *, bucketing: str = "pow2",
         m=next_pow2(graph.m_pad, min_edge_bucket),
         d=_round_up(next_pow2(d_real), _LANE),
     )
+
+
+def batch_bucket_for(batch, *, bucketing: str = "pow2",
+                     min_vertex_bucket: int = 256,
+                     min_edge_bucket: int = 2048) -> BatchBucketKey:
+    """Bucket a :class:`repro.core.batch.GraphBatch`'s packed shapes."""
+    g = batch.graph
+    d_real = max(max_degree(g), 1)
+    if bucketing == "exact":
+        return BatchBucketKey(k=batch.num_graphs, n=g.n, m=g.m_pad,
+                              d=_round_up(d_real, _LANE))
+    return BatchBucketKey(
+        k=next_pow2(batch.num_graphs),
+        n=next_pow2(g.n, min_vertex_bucket),
+        m=next_pow2(g.m_pad, min_edge_bucket),
+        d=_round_up(next_pow2(d_real), _LANE),
+    )
+
+
+def batch_index_arrays(batch, k_bucket: int, n_rows: int,
+                       ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-slot / per-vertex index arrays for the batched kernels.
+
+    Returns (sizes, graph_id, voffset):
+      sizes    (k_bucket + 1,) int32 — real vertex count per slot; empty
+               slots and the final padding slot carry 0, so they are
+               converged from the first iteration.
+      graph_id (n_rows,) int32 — owning slot per row; padding rows map to
+               the extra slot ``k_bucket``.
+      voffset  (n_rows,) int32 — owning slot's vertex-id offset (padding
+               rows use the packed vertex count, keeping local ids
+               well-defined).
+    """
+    k1 = k_bucket + 1
+    nt = batch.total_vertices
+    sizes = np.zeros(k1, np.int32)
+    sizes[:batch.num_graphs] = batch.sizes
+    graph_id = np.full(n_rows, k_bucket, np.int32)
+    graph_id[:nt] = batch.graph_id
+    voffset = np.full(n_rows, nt, np.int32)
+    voffset[:nt] = batch.vertex_offsets()
+    return sizes, graph_id, voffset
 
 
 def pad_graph(graph: Graph, bucket: BucketKey) -> Graph:

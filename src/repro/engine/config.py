@@ -91,11 +91,16 @@ class DetectionResult:
     lpa_iterations: int
     split_iterations: int         # 0 for split in ("none", "bfs_host")
     timings: dict[str, float]     # phase -> seconds (propagation/split/...)
-    bucket: tuple                 # (n_bucket, m_bucket, d_bucket)
+    bucket: tuple                 # (n, m, d) — or (k, n, m, d) when batched
     cache_hit: bool               # compiled plan came from the engine cache
     warm_started: bool            # fit started from caller/previous labels
     modularity: float | None = None
     disconnected_fraction: float | None = None
+    # Batched dispatch provenance (``Engine.fit_many``): how many graphs
+    # shared the launch and this graph's position in the pack.  Timings
+    # above are the batch totals attributed pro rata by work share.
+    batch_size: int = 1
+    batch_index: int = 0
 
     @property
     def lpa_seconds(self) -> float:

@@ -6,6 +6,7 @@
     result = eng.fit(graph)                 # DetectionResult
     result = eng.fit(graph2)                # same bucket -> no recompile
     result = eng.fit(graph2, init_labels=result.labels)   # warm start
+    results = eng.fit_many([g1, g2, g3])    # one batched dispatch
 
 ``fit`` is backend-agnostic: it buckets the graph, fetches (or builds) the
 compiled plan from the shape-bucketed cache, runs the backend, applies the
@@ -21,12 +22,17 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.engine.backends  # noqa: F401  (registers built-in strategies)
-from repro.core.graph import Graph
+from repro.core.batch import GraphBatch
+from repro.core.graph import Graph, graph_fingerprint
 from repro.core.split import split_bfs_host
-from repro.engine.bucketing import bucket_for
+from repro.engine.bucketing import batch_bucket_for, bucket_for
 from repro.engine.cache import GLOBAL_CACHE, CompileCache
 from repro.engine.config import DetectionResult, EngineConfig
-from repro.engine.registry import choose_backend, get_backend
+from repro.engine.registry import (
+    choose_backend,
+    choose_backend_batch,
+    get_backend,
+)
 
 
 def _compact_host(labels: np.ndarray) -> tuple[np.ndarray, int]:
@@ -48,7 +54,7 @@ class Engine:
                  cache: CompileCache | None = None):
         self.config = config if config is not None else EngineConfig()
         self.cache = cache if cache is not None else GLOBAL_CACHE
-        self._last: tuple[int, np.ndarray] | None = None
+        self._last: tuple[tuple, np.ndarray] | None = None  # (fingerprint, labels)
 
     def fit(self, graph: Graph, init_labels=None, *,
             backend: str | None = None) -> DetectionResult:
@@ -72,8 +78,9 @@ class Engine:
             key, lambda: be.build(bucket, cfg))
 
         warm_started = init_labels is not None
-        if init_labels is None and cfg.warm_start == "auto" \
-                and self._last is not None and self._last[0] == graph.n:
+        fp = graph_fingerprint(graph) if cfg.warm_start == "auto" else None
+        if init_labels is None and fp is not None \
+                and self._last is not None and self._last[0] == fp:
             init_labels = self._last[1]
             warm_started = True
         if init_labels is not None:
@@ -112,8 +119,106 @@ class Engine:
             result.modularity = float(modularity(graph, lab))
             result.disconnected_fraction = float(
                 disconnected_fraction(graph, lab))
-        self._last = (graph.n, labels)
+        if fp is not None:
+            self._last = (fp, labels)
         return result
+
+    def fit_many(self, graphs, *, backend: str | None = None,
+                 ) -> list[DetectionResult]:
+        """Detect communities for k graphs in one batched device dispatch.
+
+        The graphs are packed into a disjoint-union super-graph
+        (:class:`repro.core.batch.GraphBatch`) and executed by the
+        backend's batched plan, cached per *batch bucket* — a
+        (graph-count, total-vertex, total-edge, max-degree) shape key —
+        so mixed traffic reuses compiled plans.  Per-graph results are
+        bit-identical to ``fit`` on each graph alone (the parity suite in
+        tests/test_batch.py pins this for ``segment`` and ``tile`` across
+        every split mode).  Backends without ``supports_batch`` (the
+        ``sharded`` strategy) fall back to sequential ``fit`` calls.
+
+        Batch-level timings (prepare/propagation/split) are attributed
+        pro rata by each graph's share of packed work (vertices + edges);
+        compaction and the host BFS split are timed per graph.  Warm
+        starts do not apply to batched dispatch.
+        """
+        graphs = list(graphs)
+        if not graphs:
+            return []
+        cfg = self.config
+        name = backend or cfg.backend
+        if name == "auto":
+            name = choose_backend_batch(graphs, cfg)
+        be = get_backend(name)
+        if not getattr(be, "supports_batch", False):
+            # Sequential fallback keeps batched semantics: no warm starts
+            # between batch members (suppress the auto-keying state, then
+            # restore it so interleaved fit() callers are unaffected).
+            saved = self._last
+            try:
+                results = []
+                for g in graphs:
+                    self._last = None
+                    results.append(self.fit(g, backend=name))
+            finally:
+                self._last = saved
+            return results
+
+        t0 = time.perf_counter()
+        batch = GraphBatch.pack(graphs)
+        bucket = batch_bucket_for(batch, bucketing=cfg.bucketing,
+                                  min_vertex_bucket=cfg.min_vertex_bucket,
+                                  min_edge_bucket=cfg.min_edge_bucket)
+        key = (name, "batch", bucket, cfg.bucketing, cfg.algo_key(),
+               be.plan_key(cfg))
+        plan, cache_hit = self.cache.get_or_build(
+            key, lambda: be.build_batch(bucket, cfg))
+        inputs = be.prepare_batch(batch, bucket, cfg)
+        t_prep = time.perf_counter() - t0
+
+        run = be.run_batch(plan, inputs)
+        labels_all = np.asarray(run.labels)
+
+        work = np.asarray(batch.sizes + batch.edge_counts, dtype=np.float64)
+        weights = work / work.sum() if work.sum() > 0 \
+            else np.full(len(graphs), 1.0 / len(graphs))
+
+        results = []
+        for i, graph in enumerate(graphs):
+            lo, hi = int(batch.offsets[i]), int(batch.offsets[i + 1])
+            labels = labels_all[lo:hi]
+            w = float(weights[i])
+
+            t0 = time.perf_counter()
+            split_seconds = run.split_seconds * w
+            if cfg.split == "bfs_host":
+                labels = split_bfs_host(graph, labels)
+                split_seconds += time.perf_counter() - t0
+
+            t0 = time.perf_counter()
+            labels, k = _compact_host(labels)
+            t_compact = time.perf_counter() - t0
+
+            result = DetectionResult(
+                labels=labels, num_communities=k, backend=name,
+                lpa_iterations=int(run.lpa_iterations[i]),
+                split_iterations=int(run.split_iterations[i]),
+                timings={"prepare": t_prep * w,
+                         "propagation": run.lpa_seconds * w,
+                         "split": split_seconds, "compact": t_compact},
+                bucket=tuple(bucket), cache_hit=cache_hit,
+                warm_started=False,
+                batch_size=len(graphs), batch_index=i,
+            )
+            if cfg.compute_metrics:
+                from repro.core.detect import disconnected_fraction
+                from repro.core.modularity import modularity
+                lab = jnp.asarray(labels)
+                result.modularity = float(modularity(graph, lab))
+                result.disconnected_fraction = float(
+                    disconnected_fraction(graph, lab))
+            results.append(result)
+        return results
 
     def stats(self) -> dict:
         """Cache + trace observability (for serving dashboards / tests)."""

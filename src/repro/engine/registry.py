@@ -11,6 +11,13 @@ A backend is a stateless strategy object with four hooks:
   * ``run(plan, inputs, n_real, init_labels)`` — execute, returning a
     :class:`BackendRun`.
 
+Backends that set ``supports_batch = True`` additionally implement the
+batched trio — ``build_batch`` / ``prepare_batch`` / ``run_batch`` —
+executing a whole :class:`repro.core.batch.GraphBatch` in one dispatch
+and returning a :class:`BatchBackendRun` with per-graph iteration
+counts.  ``Engine.fit_many`` falls back to sequential ``fit`` calls for
+backends without the flag (e.g. ``sharded``).
+
 Registration is open: third-party strategies can ``register_backend`` and
 be selected by name through ``EngineConfig.backend``.
 """
@@ -22,7 +29,12 @@ import jax
 import numpy as np
 
 from repro.core.graph import Graph
-from repro.engine.bucketing import BucketKey, max_degree, next_pow2
+from repro.engine.bucketing import (
+    BatchBucketKey,
+    BucketKey,
+    max_degree,
+    next_pow2,
+)
 from repro.engine.config import EngineConfig
 
 
@@ -35,8 +47,18 @@ class BackendRun(NamedTuple):
     split_seconds: float
 
 
+class BatchBackendRun(NamedTuple):
+    """Raw batched-backend output (local labels, per-slot iterations)."""
+    labels: np.ndarray            # (bucket rows,) int32 local labels
+    lpa_iterations: np.ndarray    # (k_bucket + 1,) int32 per slot
+    split_iterations: np.ndarray  # (k_bucket + 1,) int32 per slot
+    lpa_seconds: float
+    split_seconds: float
+
+
 class Backend(Protocol):
     name: str
+    supports_batch: bool
 
     def plan_key(self, config: EngineConfig) -> tuple: ...
 
@@ -47,6 +69,13 @@ class Backend(Protocol):
 
     def run(self, plan, inputs, n_real: int,
             init_labels: np.ndarray | None) -> BackendRun: ...
+
+    def build_batch(self, bucket: BatchBucketKey, config: EngineConfig): ...
+
+    def prepare_batch(self, batch, bucket: BatchBucketKey,
+                      config: EngineConfig): ...
+
+    def run_batch(self, plan, inputs) -> BatchBackendRun: ...
 
 
 _BACKENDS: dict[str, Backend] = {}
@@ -85,5 +114,22 @@ def choose_backend(graph: Graph, config: EngineConfig) -> str:
     d = next_pow2(max(max_degree(graph), 1))
     if jax.default_backend() == "tpu" and d <= _TILE_MAX_DEGREE \
             and graph.n * d <= _TILE_MAX_CELLS:
+        return "tile"
+    return "segment"
+
+
+def choose_backend_batch(graphs, config: EngineConfig) -> str:
+    """Pick a backend for a batched dispatch (packed-shape thresholds).
+
+    Same policy as :func:`choose_backend` but against the disjoint-union
+    shapes: the tile path materialises (total rows, max-member-degree)
+    tiles, so the cell budget applies to the packed totals.
+    """
+    if jax.device_count() > 1 or config.mesh is not None:
+        return "sharded"
+    d = next_pow2(max(max(max_degree(g) for g in graphs), 1))
+    n_total = sum(g.n for g in graphs)
+    if jax.default_backend() == "tpu" and d <= _TILE_MAX_DEGREE \
+            and n_total * d <= _TILE_MAX_CELLS:
         return "tile"
     return "segment"

@@ -1,0 +1,185 @@
+"""Micro-batching scheduler for community-detection serving.
+
+Small-graph traffic is dispatch-bound: one device launch per request
+caps throughput far below the hardware.  :class:`MicroBatcher` drains a
+request queue in batches of up to ``max_batch`` graphs — lingering up to
+``batch_timeout_ms`` after the first request of a batch so concurrent
+traffic can coalesce — and executes each batch as a single
+``Engine.fit_many`` dispatch.  Every submission resolves to the same
+per-graph :class:`DetectionResult` a solo ``fit`` would return (the
+parity suite pins this), so batching is invisible to callers except in
+latency/throughput.
+
+    eng = Engine(EngineConfig())
+    with MicroBatcher(eng, max_batch=16, batch_timeout_ms=2.0) as mb:
+        subs = [mb.submit(g) for g in graphs]
+        results = [s.result() for s in subs]
+    print(mb.stats())   # batch-size histogram, p50/p95 latency
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from collections import Counter
+from concurrent.futures import Future
+
+import numpy as np
+
+
+class Submission:
+    """Handle for one enqueued request; resolves to a DetectionResult."""
+
+    def __init__(self, graph, submitted: float):
+        self.graph = graph
+        self.submitted = submitted     # perf_counter at submit
+        self.latency_s: float | None = None   # set when the result lands
+        self.batch_size: int | None = None    # size of the batch it rode in
+        self._future: Future = Future()
+
+    def result(self, timeout: float | None = None):
+        return self._future.result(timeout)
+
+    def done(self) -> bool:
+        return self._future.done()
+
+
+class MicroBatcher:
+    """Queue-draining micro-batch scheduler over ``Engine.fit_many``.
+
+    max_batch: largest number of requests packed into one dispatch.
+    batch_timeout_ms: linger after the first request of a batch — the
+      scheduler waits this long for more traffic before dispatching a
+      partial batch (0 dispatches whatever is immediately available).
+    autostart: start the worker thread right away.  ``autostart=False``
+      lets callers enqueue a burst first and then :meth:`start`, which
+      makes batch composition deterministic (used by tests and the
+      serving driver's closed-loop mode).
+    """
+
+    def __init__(self, engine, max_batch: int = 8,
+                 batch_timeout_ms: float = 2.0, backend: str | None = None,
+                 autostart: bool = True):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.engine = engine
+        self.max_batch = max_batch
+        self.batch_timeout_s = batch_timeout_ms / 1e3
+        self.backend = backend
+        self.batch_sizes: list[int] = []   # one entry per dispatched batch
+        self._latencies: list[float] = []  # one entry per completed request
+        self._q: "queue.Queue[Submission | None]" = queue.Queue()
+        self._lock = threading.Lock()  # orders submits against the sentinel
+        self._closed = False
+        self._started = False
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="microbatcher")
+        if autostart:
+            self.start()
+
+    # --- lifecycle ---
+
+    def start(self) -> "MicroBatcher":
+        if not self._started:
+            self._started = True
+            self._thread.start()
+        return self
+
+    def close(self, wait: bool = True) -> None:
+        """Stop accepting requests; drain the queue, then stop the worker."""
+        with self._lock:
+            if self._closed:
+                already = True
+            else:
+                already = False
+                self._closed = True
+                self._q.put(None)  # sentinel: drain-and-exit
+        if already:
+            if wait and self._started:
+                self._thread.join()
+            return
+        if not self._started:
+            self.start()
+        if wait:
+            self._thread.join()
+
+    def __enter__(self) -> "MicroBatcher":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # --- request path ---
+
+    def submit(self, graph) -> Submission:
+        sub = Submission(graph, time.perf_counter())
+        # The lock orders accepted submissions before close()'s sentinel
+        # (FIFO queue), so every accepted submission is dispatched before
+        # the worker exits — a submit racing close() either lands before
+        # the sentinel or raises.
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("MicroBatcher is closed")
+            self._q.put(sub)
+        return sub
+
+    # --- worker ---
+
+    def _run(self) -> None:
+        stop = False
+        while not stop:
+            item = self._q.get()
+            if item is None:
+                break
+            batch = [item]
+            deadline = time.perf_counter() + self.batch_timeout_s
+            while len(batch) < self.max_batch:
+                remaining = deadline - time.perf_counter()
+                try:
+                    nxt = self._q.get_nowait() if remaining <= 0 \
+                        else self._q.get(timeout=remaining)
+                except queue.Empty:
+                    break
+                if nxt is None:
+                    stop = True
+                    break
+                batch.append(nxt)
+            self._dispatch(batch)
+        # FIFO + the submit/close lock guarantee the sentinel is the last
+        # item ever enqueued, so reaching it means the queue is drained.
+
+    def _dispatch(self, batch: list[Submission]) -> None:
+        try:
+            results = self.engine.fit_many([s.graph for s in batch],
+                                           backend=self.backend)
+        except BaseException as e:  # propagate to every waiter
+            for s in batch:
+                s._future.set_exception(e)
+            return
+        now = time.perf_counter()
+        self.batch_sizes.append(len(batch))
+        for s, res in zip(batch, results):
+            s.latency_s = now - s.submitted
+            s.batch_size = len(batch)
+            self._latencies.append(s.latency_s)
+            s._future.set_result(res)
+
+    # --- observability ---
+
+    def stats(self) -> dict:
+        """Aggregate serving stats: batch histogram + latency percentiles."""
+        lat_ms = np.asarray(self._latencies) * 1e3
+        out = {
+            "requests": len(self._latencies),
+            "batches": len(self.batch_sizes),
+            "batch_size_hist": dict(sorted(Counter(self.batch_sizes).items())),
+            "mean_batch": (float(np.mean(self.batch_sizes))
+                           if self.batch_sizes else 0.0),
+        }
+        if len(lat_ms):
+            out.update(p50_ms=float(np.percentile(lat_ms, 50)),
+                       p95_ms=float(np.percentile(lat_ms, 95)),
+                       mean_ms=float(np.mean(lat_ms)))
+        else:
+            out.update(p50_ms=0.0, p95_ms=0.0, mean_ms=0.0)
+        return out

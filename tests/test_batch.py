@@ -1,0 +1,172 @@
+"""Batched multi-graph detection: GraphBatch packing + fit_many parity.
+
+The acceptance bar for the batched path is *bit parity*: for the
+``segment`` and ``tile`` backends and every split mode,
+``Engine.fit_many(graphs)[i]`` must produce exactly the labels (and
+iteration counts) of ``Engine.fit(graphs[i])``.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import GraphBatch, disconnected_fraction
+from repro.core.graph import build_graph, to_numpy_adj
+from repro.engine import TRACE_LOG, CompileCache, Engine, EngineConfig
+from repro.graphgen import erdos_renyi, karate_club, planted_partition
+from conftest import random_graph
+
+BATCH_BACKENDS = ("segment", "tile")
+SPLITS = ("none", "lp", "lpp", "bfs_host")
+
+
+def graph_mix():
+    """Mixed sizes, duplicate sizes, a disconnected random graph, and an
+    edgeless member (stays all-singletons through any split mode)."""
+    return [
+        erdos_renyi(150, 5.0, seed=1),
+        karate_club()[0],
+        random_graph(77, 4.0, seed=3),
+        erdos_renyi(150, 5.0, seed=8),
+        planted_partition(4, 25, 0.3, 0.01, seed=2)[0],
+        build_graph(np.zeros((0, 2), np.int64), n=9),
+    ]
+
+
+def fresh_engine(**kw):
+    return Engine(EngineConfig(**kw), cache=CompileCache())
+
+
+# --- packing structure ---
+
+def test_pack_is_disjoint_union():
+    graphs = graph_mix()
+    batch = GraphBatch.pack(graphs)
+    assert batch.num_graphs == len(graphs)
+    assert batch.total_vertices == sum(g.n for g in graphs)
+    assert batch.total_edges == sum(g.num_edges for g in graphs)
+    assert batch.graph.num_edges == batch.total_edges
+    # graph_id labels every vertex with its owner
+    assert np.array_equal(
+        batch.graph_id,
+        np.repeat(np.arange(len(graphs)), [g.n for g in graphs]))
+    # adjacency is preserved member-by-member, offset by the pack
+    adj = to_numpy_adj(batch.graph)
+    for g, off in zip(graphs, batch.offsets[:-1]):
+        want = to_numpy_adj(g)
+        for v in range(g.n):
+            got = sorted((d - int(off), w) for d, w in adj[v + int(off)])
+            assert got == sorted(want[v])
+
+
+def test_pack_handles_edgeless_and_empty_members():
+    empty = build_graph(np.zeros((0, 2), np.int64), n=0)
+    lonely = build_graph(np.zeros((0, 2), np.int64), n=1)
+    edgeless = build_graph(np.zeros((0, 2), np.int64), n=7)
+    batch = GraphBatch.pack([edgeless, empty, karate_club()[0], lonely])
+    assert batch.total_vertices == 7 + 0 + 34 + 1
+    assert batch.sizes.tolist() == [7, 0, 34, 1]
+    labels = np.concatenate([np.zeros(7, np.int32), np.zeros(0, np.int32),
+                             np.arange(34, dtype=np.int32),
+                             np.zeros(1, np.int32)])
+    out = batch.unpack(labels)
+    assert [len(o) for o in out] == [7, 0, 34, 1]
+    assert out[0].max() == 0 and out[2].tolist() == list(range(34))
+
+
+def test_pack_empty_list_rejected():
+    with pytest.raises(ValueError):
+        GraphBatch.pack([])
+    with pytest.raises(ValueError):
+        GraphBatch.pack([karate_club()[0]]).unpack(np.zeros(3, np.int32))
+
+
+# --- the parity suite ---
+
+@pytest.mark.parametrize("backend", BATCH_BACKENDS)
+@pytest.mark.parametrize("split", SPLITS)
+def test_fit_many_parity(backend, split):
+    """fit_many(graphs)[i] is bit-identical to fit(graphs[i])."""
+    graphs = graph_mix()
+    eng = fresh_engine(backend=backend, split=split)
+    batched = eng.fit_many(graphs)
+    assert len(batched) == len(graphs)
+    for i, g in enumerate(graphs):
+        single = eng.fit(g)
+        assert np.array_equal(batched[i].labels, single.labels), (backend,
+                                                                  split, i)
+        assert batched[i].lpa_iterations == single.lpa_iterations
+        assert batched[i].split_iterations == single.split_iterations
+        assert batched[i].num_communities == single.num_communities
+        assert batched[i].batch_size == len(graphs)
+        assert batched[i].batch_index == i
+        if split != "none":
+            assert float(disconnected_fraction(
+                g, jnp.asarray(batched[i].labels))) == 0.0
+
+
+def test_fit_many_parity_shortcut_and_exact():
+    graphs = graph_mix()[:3]
+    for kw in ({"shortcut": True, "split": "lpp"}, {"bucketing": "exact"}):
+        eng = fresh_engine(**kw)
+        batched = eng.fit_many(graphs)
+        for i, g in enumerate(graphs):
+            assert np.array_equal(batched[i].labels, eng.fit(g).labels), kw
+
+
+# --- batch plan caching ---
+
+def test_same_batch_bucket_compiles_once():
+    """Two different same-bucket batches -> one trace per batch stage."""
+    mix1 = [erdos_renyi(150, 5.0, seed=1), erdos_renyi(90, 4.0, seed=2)]
+    mix2 = [erdos_renyi(120, 5.0, seed=3), erdos_renyi(110, 4.0, seed=4)]
+    eng = fresh_engine(backend="segment")
+
+    before = TRACE_LOG.snapshot()
+    r1 = eng.fit_many(mix1)
+    mid = TRACE_LOG.snapshot()
+    r2 = eng.fit_many(mix2)
+    after = TRACE_LOG.snapshot()
+
+    assert r1[0].bucket == r2[0].bucket
+    assert not r1[0].cache_hit and r2[0].cache_hit
+    first = {k: mid[k] - before.get(k, 0) for k in mid
+             if mid[k] != before.get(k, 0)}
+    second = {k: after[k] - mid.get(k, 0) for k in after
+              if after[k] != mid.get(k, 0)}
+    assert first == {"segment:batch_propagate": 1, "segment:batch_split": 1}
+    assert second == {}, f"second same-bucket batch retraced: {second}"
+
+
+def test_fit_many_sequential_fallback_without_capability():
+    """Backends without supports_batch serve fit_many one graph at a time."""
+    graphs = [erdos_renyi(60, 4.0, seed=1), erdos_renyi(64, 4.0, seed=2)]
+    eng = fresh_engine()
+    results = eng.fit_many(graphs, backend="sharded")
+    assert [r.backend for r in results] == ["sharded", "sharded"]
+    assert all(r.batch_size == 1 for r in results)
+    ref = fresh_engine()
+    for g, r in zip(graphs, results):
+        assert np.array_equal(r.labels, ref.fit(g, backend="segment").labels)
+
+
+def test_fit_many_trivial_inputs():
+    eng = fresh_engine()
+    assert eng.fit_many([]) == []
+    g = karate_club()[0]
+    (only,) = eng.fit_many([g])
+    assert np.array_equal(only.labels, eng.fit(g).labels)
+
+
+def test_fit_many_pro_rata_timings_and_metrics():
+    graphs = graph_mix()[:3]
+    eng = fresh_engine(compute_metrics=True)
+    results = eng.fit_many(graphs)
+    for r in results:
+        assert set(r.timings) == {"prepare", "propagation", "split",
+                                  "compact"}
+        assert r.modularity is not None
+        assert r.disconnected_fraction == 0.0
+    # pro-rata shares reassemble (approximately) into the batch totals
+    total_prop = sum(r.timings["propagation"] for r in results)
+    assert total_prop >= 0.0

@@ -1,0 +1,64 @@
+"""Property tests: GraphBatch.pack / unpack round-trip on random mixes."""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import GraphBatch  # noqa: E402
+from repro.core.graph import build_graph  # noqa: E402
+from conftest import random_graph  # noqa: E402
+
+# (n, avg_degree_tenths, seed) — n=0 and degree=0 members included on
+# purpose: empty graphs, edgeless graphs, and duplicate sizes must all
+# survive the round trip.
+member = st.tuples(st.integers(0, 48), st.integers(0, 60),
+                   st.integers(0, 10_000))
+
+
+def make_graph(spec):
+    n, deg_tenths, seed = spec
+    if n == 0 or deg_tenths == 0:
+        return build_graph(np.zeros((0, 2), np.int64), n=n)
+    return random_graph(n, deg_tenths / 10.0, seed=seed)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(member, min_size=1, max_size=6))
+def test_pack_unpack_roundtrip(specs):
+    graphs = [make_graph(s) for s in specs]
+    batch = GraphBatch.pack(graphs)
+
+    # structure: sizes/offsets/edge counts reassemble the member list
+    assert batch.sizes.tolist() == [g.n for g in graphs]
+    assert batch.edge_counts.tolist() == [g.num_edges for g in graphs]
+    assert batch.total_vertices == sum(g.n for g in graphs)
+    assert np.array_equal(np.diff(batch.offsets), batch.sizes)
+    # the packed graph is a valid CSR expansion with no cross-graph edges
+    src = np.asarray(batch.graph.src)[: batch.graph.num_edges]
+    dst = np.asarray(batch.graph.dst)[: batch.graph.num_edges]
+    if len(src):
+        owner = batch.graph_id
+        assert np.array_equal(owner[src], owner[dst])
+        rp = np.asarray(batch.graph.row_ptr)
+        assert np.array_equal(
+            src, np.repeat(np.arange(batch.graph.n), rp[1:] - rp[:-1]))
+
+    # round trip: arbitrary per-graph local labelings come back compacted
+    rng = np.random.default_rng(0)
+    per = [rng.integers(0, max(g.n, 1), size=g.n).astype(np.int32)
+           for g in graphs]
+    flat = (np.concatenate(per) if batch.total_vertices
+            else np.zeros(0, np.int32))
+    out = batch.unpack(flat)
+    assert len(out) == len(graphs)
+    for got, want in zip(out, per):
+        expect = (np.unique(want, return_inverse=True)[1].astype(np.int32)
+                  if len(want) else want)
+        assert np.array_equal(got, expect)
+
+    # uncompacted unpack is a pure slice
+    raw = batch.unpack(flat, compact=False)
+    for got, want in zip(raw, per):
+        assert np.array_equal(got, want)

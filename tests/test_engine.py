@@ -110,6 +110,23 @@ def test_split_methods_through_engine(split):
         assert float(disconnected_fraction(g, jnp.asarray(res.labels))) == 0.0
 
 
+def test_warm_start_auto_keys_on_graph_fingerprint():
+    """Regression: warm_start="auto" used to key on the vertex count
+    alone, silently warm-starting from an *unrelated* graph of the same
+    size.  It now keys on a structural fingerprint (n, m, offset/dst
+    hashes)."""
+    g1 = erdos_renyi(100, 4.0, seed=1)
+    g2 = erdos_renyi(100, 4.0, seed=2)   # same n, different structure
+    assert g1.n == g2.n
+    eng = fresh_engine(warm_start="auto")
+    r1 = eng.fit(g1)
+    assert not r1.warm_started
+    r2 = eng.fit(g2)
+    assert not r2.warm_started, "warm-started from an unrelated graph"
+    r3 = eng.fit(g2)
+    assert r3.warm_started  # same structure -> warm start still applies
+
+
 def test_warm_start_auto_and_explicit():
     g, _ = planted_partition(8, 30, 0.3, 0.005, seed=5)
     eng = fresh_engine(warm_start="auto")

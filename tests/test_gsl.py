@@ -77,3 +77,19 @@ def test_gve_sometimes_disconnected_on_random_graphs():
         if float(disconnected_fraction(g, jnp.asarray(res.labels))) > 0:
             hits += 1
     assert hits >= 1, "disconnection never occurred; test graphs too easy"
+
+
+def test_gsl_result_carries_engine_detail():
+    """The facade keeps Engine observability: the full DetectionResult
+    rides along on ``.detail`` (timings, backend, cache_hit, bucket)."""
+    import numpy as np
+    g = GRAPHS["karate"]()
+    res = gsl_lpa(g, split="lp")
+    d = res.detail
+    assert d is not None
+    assert d.backend == "segment"
+    assert isinstance(d.cache_hit, bool)
+    assert set(d.timings) == {"prepare", "propagation", "split", "compact"}
+    assert d.timings["propagation"] == res.lpa_seconds
+    assert np.array_equal(d.labels, res.labels)
+    assert d.num_communities == len(set(res.labels.tolist()))

@@ -1,0 +1,77 @@
+"""Micro-batching scheduler: batch formation, result parity, serving driver."""
+import numpy as np
+import pytest
+
+from repro.engine import CompileCache, Engine, EngineConfig
+from repro.graphgen import erdos_renyi
+from repro.launch.microbatch import MicroBatcher
+
+
+def fresh_engine(**kw):
+    return Engine(EngineConfig(**kw), cache=CompileCache())
+
+
+def test_batches_form_and_results_match_solo_fits():
+    graphs = [erdos_renyi(n, 4.0, seed=i)
+              for i, n in enumerate((60, 80, 60, 90, 70))]
+    eng = fresh_engine(backend="segment")
+    mb = MicroBatcher(eng, max_batch=2, batch_timeout_ms=50, autostart=False)
+    subs = [mb.submit(g) for g in graphs]
+    mb.start()
+    results = [s.result(timeout=300) for s in subs]
+    mb.close()
+
+    # deterministic drain of a pre-enqueued burst: ceil-chunks of max_batch
+    assert mb.batch_sizes == [2, 2, 1]
+    assert [s.batch_size for s in subs] == [2, 2, 2, 2, 1]
+    assert all(s.latency_s is not None and s.latency_s > 0 for s in subs)
+    ref = fresh_engine(backend="segment")
+    for g, r in zip(graphs, results):
+        assert np.array_equal(r.labels, ref.fit(g).labels)
+
+    stats = mb.stats()
+    assert stats["requests"] == 5 and stats["batches"] == 3
+    assert stats["batch_size_hist"] == {1: 1, 2: 2}
+    assert stats["p95_ms"] >= stats["p50_ms"] > 0
+
+
+def test_submit_after_close_raises_and_close_is_idempotent():
+    mb = MicroBatcher(fresh_engine(), max_batch=4, autostart=False)
+    mb.close()
+    mb.close()
+    with pytest.raises(RuntimeError):
+        mb.submit(erdos_renyi(20, 3.0, seed=0))
+
+
+def test_worker_exception_propagates_to_waiters():
+    class Boom:
+        def fit_many(self, graphs, backend=None):
+            raise RuntimeError("boom")
+
+    mb = MicroBatcher(Boom(), max_batch=2, autostart=False)
+    sub = mb.submit(erdos_renyi(20, 3.0, seed=0))
+    mb.start()
+    mb.close()
+    with pytest.raises(RuntimeError, match="boom"):
+        sub.result(timeout=30)
+
+
+def test_context_manager_drains_on_exit():
+    eng = fresh_engine(backend="segment")
+    with MicroBatcher(eng, max_batch=8, batch_timeout_ms=5) as mb:
+        subs = [mb.submit(erdos_renyi(50, 3.0, seed=i)) for i in range(3)]
+    assert all(s.done() for s in subs)
+    assert sum(mb.batch_sizes) == 3
+
+
+def test_serve_communities_driver_smoke():
+    from repro.launch.serve import serve_communities
+    records, summary = serve_communities(
+        num_requests=6, backend="segment", size_classes=(60, 90),
+        avg_degree=4.0, max_batch=4, batch_timeout_ms=20)
+    assert summary["requests"] == 6
+    assert sum(k * v for k, v in summary["batch_size_hist"].items()) == 6
+    assert summary["edges_per_s"] > 0
+    assert summary["p95_ms"] >= summary["p50_ms"] > 0
+    assert len(records) == 6
+    assert all(r["latency_s"] is not None for r in records)
