@@ -1,5 +1,11 @@
 """The paper's primary contribution: GSL-LPA community detection in JAX."""
 from repro.core.batch import GraphBatch  # noqa: F401
+from repro.core.delta import (  # noqa: F401
+    GraphDelta,
+    affected_frontier,
+    apply_delta,
+    undirected_edges,
+)
 from repro.core.graph import Graph, build_graph, graph_fingerprint  # noqa: F401
 from repro.core.gsl import GslResult, gsl_lpa, gve_lpa  # noqa: F401
 from repro.core.lpa import LpaState, lpa_move, lpa_run  # noqa: F401

@@ -119,6 +119,53 @@ class GraphBatch:
         """(total_vertices,) int32: each vertex's owning-graph offset."""
         return np.repeat(self.offsets[:-1], self.sizes).astype(np.int32)
 
+    def pack_labels(self, member_labels) -> np.ndarray | None:
+        """Concatenate per-member init labels into one packed vector.
+
+        ``member_labels`` is a length-``num_graphs`` sequence; each entry
+        is an (n_i,) vertex-id-valued array (*local* coordinates — which
+        is exactly what a solo warm start uses, since a standalone
+        graph's ids are its local ids) or None for a cold member (kept at
+        singleton starts).  Returns a (total_vertices,) int32 vector, or
+        None when every member is cold.
+        """
+        member_labels = list(member_labels)
+        if len(member_labels) != self.num_graphs:
+            raise ValueError(f"got {len(member_labels)} init-label entries "
+                             f"for a batch of {self.num_graphs} graphs")
+        if all(lab is None for lab in member_labels):
+            return None
+        out = np.empty(self.total_vertices, dtype=np.int32)
+        for i, lab in enumerate(member_labels):
+            lo, hi = int(self.offsets[i]), int(self.offsets[i + 1])
+            if lab is None:
+                out[lo:hi] = np.arange(hi - lo, dtype=np.int32)
+            else:
+                out[lo:hi] = np.asarray(lab, dtype=np.int32).reshape(-1)
+        return out
+
+    def pack_active(self, member_active) -> np.ndarray | None:
+        """Concatenate per-member init active masks (None -> all-active).
+
+        Packed counterpart of the GVE-LPA unprocessed flags: a member's
+        mask marks the vertices seeded unprocessed (its delta's affected
+        frontier); cold members start fully active.  Returns a
+        (total_vertices,) bool vector, or None when every member is
+        fully active.
+        """
+        member_active = list(member_active)
+        if len(member_active) != self.num_graphs:
+            raise ValueError(f"got {len(member_active)} init-active entries "
+                             f"for a batch of {self.num_graphs} graphs")
+        if all(act is None for act in member_active):
+            return None
+        out = np.empty(self.total_vertices, dtype=bool)
+        for i, act in enumerate(member_active):
+            lo, hi = int(self.offsets[i]), int(self.offsets[i + 1])
+            out[lo:hi] = True if act is None \
+                else np.asarray(act, dtype=bool).reshape(-1)
+        return out
+
     def unpack(self, labels, compact: bool = True) -> list[np.ndarray]:
         """Slice a packed (>= total_vertices,) label vector per graph.
 
@@ -141,8 +188,33 @@ class GraphBatch:
         return out
 
 
+def warm_state_rows(rows: int, voffset, labels0=None, active0=None,
+                    ) -> tuple[np.ndarray, np.ndarray]:
+    """Extend packed (total_vertices,) warm-start state to ``rows`` rows.
+
+    Bucket-padding rows keep their local singleton ids (``row -
+    voffset``, the batched kernels' cold start) and are seeded inactive
+    when an explicit active mask is present.  With both inputs None this
+    reproduces the cold defaults exactly: local-id labels, all-active.
+    """
+    voff = np.asarray(voffset).astype(np.int64)
+    local = (np.arange(rows, dtype=np.int64) - voff).astype(np.int32)
+    if labels0 is None:
+        lab = local
+    else:
+        lab = local.copy()
+        lab[: len(labels0)] = np.asarray(labels0, dtype=np.int32)
+    if active0 is None:
+        act = np.ones(rows, dtype=bool)
+    else:
+        act = np.zeros(rows, dtype=bool)
+        act[: len(active0)] = np.asarray(active0, dtype=bool)
+    return lab, act
+
+
 def lpa_run_batched(graph: Graph, sizes: jnp.ndarray, graph_id: jnp.ndarray,
-                    voffset: jnp.ndarray, *, tau: float, max_iterations: int,
+                    voffset: jnp.ndarray, labels0: jnp.ndarray,
+                    active0: jnp.ndarray, *, tau: float, max_iterations: int,
                     ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Batched propagation over a packed graph (traced; jit by the caller).
 
@@ -151,6 +223,10 @@ def lpa_run_batched(graph: Graph, sizes: jnp.ndarray, graph_id: jnp.ndarray,
       and the padding slot), so one executable serves every batch in the
       bucket.
     graph_id / voffset: (graph.n,) owner slot + owner offset per vertex.
+    labels0 / active0: (graph.n,) initial labels (*local* coordinates —
+      cold start passes the local ids themselves) and unprocessed-seed
+      mask (cold start passes all-True).  Traced, so cold and warm
+      dispatches share one compiled executable.
 
     Returns (labels, iterations): labels in *local* coordinates, plus the
     per-slot iteration counts — each slot stops exactly where its
@@ -161,7 +237,6 @@ def lpa_run_batched(graph: Graph, sizes: jnp.ndarray, graph_id: jnp.ndarray,
     k1 = sizes.shape[0]
     vid = jnp.arange(n, dtype=jnp.int32)
     local = vid - voffset
-    labels0 = local
     parity = (_label_hash(local, jnp.int32(-1)) & 1).astype(bool)
     thr = (jnp.float32(tau) * sizes.astype(jnp.float32)).astype(jnp.int32)
     done0 = sizes <= thr
@@ -184,8 +259,8 @@ def lpa_run_batched(graph: Graph, sizes: jnp.ndarray, graph_id: jnp.ndarray,
         iters = iters + jnp.where(done, 0, 1)
         return labels, active, it + jnp.int32(1), done | (dn <= thr), iters
 
-    state = (labels0, jnp.ones(n, dtype=bool), jnp.int32(0), done0,
-             jnp.zeros((k1,), jnp.int32))
+    state = (labels0.astype(jnp.int32), active0.astype(bool), jnp.int32(0),
+             done0, jnp.zeros((k1,), jnp.int32))
     labels, _, _, _, iters = jax.lax.while_loop(cond, body, state)
     return labels, iters
 

@@ -1,0 +1,159 @@
+"""Streaming graph deltas: edge insertions/deletions on evolving graphs.
+
+Real serving traffic is rarely a stream of fresh graphs — it is a stream
+of *updates* to graphs already detected.  A :class:`GraphDelta` captures
+one update (undirected edge insertions with weights, plus deletions);
+:func:`apply_delta` rebuilds the CSR :class:`Graph` after the update, and
+:func:`affected_frontier` computes the vertices whose neighborhoods
+changed.  Per GVE-LPA's pruning rule those are exactly the vertices to
+seed *unprocessed* on re-detection: restricting propagation to the
+frontier (plus whatever it wakes) is where the asymptotic win of
+incremental LPA lives (Traag & Šubelj, arXiv:2209.13338) — the engine
+accepts the frontier as ``init_active`` alongside warm-start labels.
+
+Delta semantics (host-side numpy, mirroring ``build_graph``):
+
+* edges are undirected and canonicalised to ``(min, max)`` endpoint
+  pairs; self loops are dropped (``scanCommunities`` excludes i == j);
+* deleting an edge removes it entirely (whatever its weight); deleting
+  an edge that does not exist is a silent no-op (streaming traces may
+  retire edges more than once);
+* inserting an edge that already exists merges weights by summation —
+  the same rule ``build_graph`` applies to duplicate input edges;
+* vertex counts may grow (``num_vertices`` or an endpoint beyond the
+  current range) but never shrink: community ids are vertex ids, and
+  removing vertices would invalidate every cached warm start.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.graph import Graph, build_graph
+
+
+def _canonical_pairs(edges, weights=None):
+    """Normalise an undirected edge array: (E, 2) int64 with u < v rows,
+    self loops dropped.  Weights (if given) ride along the same filter."""
+    edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    if np.any(edges < 0):
+        raise ValueError("edge endpoints must be non-negative vertex ids")
+    lo = np.minimum(edges[:, 0], edges[:, 1])
+    hi = np.maximum(edges[:, 0], edges[:, 1])
+    keep = lo != hi
+    pairs = np.stack([lo[keep], hi[keep]], axis=1)
+    if weights is None:
+        return pairs, None
+    weights = np.asarray(weights, dtype=np.float32).reshape(-1)
+    if len(weights) != len(edges):
+        raise ValueError(f"weights has {len(weights)} entries for "
+                         f"{len(edges)} inserted edges")
+    return pairs, weights[keep]
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphDelta:
+    """One update to an evolving graph: insert/delete undirected edges.
+
+    Construct via :meth:`make` (normalises endpoint order, drops self
+    loops, defaults weights to 1.0 — the paper's unit-weight default).
+    """
+    insertions: np.ndarray      # (I, 2) int64 canonical (u < v) pairs
+    insert_weights: np.ndarray  # (I,) float32
+    deletions: np.ndarray       # (D, 2) int64 canonical (u < v) pairs
+    num_vertices: int | None = None  # grow the vertex count to at least this
+
+    @classmethod
+    def make(cls, insert=None, delete=None, weights=None,
+             num_vertices: int | None = None) -> "GraphDelta":
+        ins, w = _canonical_pairs(
+            insert if insert is not None else np.zeros((0, 2), np.int64),
+            weights)
+        if w is None:
+            w = np.ones(len(ins), dtype=np.float32)
+        dels, _ = _canonical_pairs(
+            delete if delete is not None else np.zeros((0, 2), np.int64))
+        return cls(insertions=ins, insert_weights=w, deletions=dels,
+                   num_vertices=num_vertices)
+
+    @property
+    def num_insertions(self) -> int:
+        return len(self.insertions)
+
+    @property
+    def num_deletions(self) -> int:
+        return len(self.deletions)
+
+    def is_empty(self) -> bool:
+        return not (self.num_insertions or self.num_deletions)
+
+    def touched_vertices(self) -> np.ndarray:
+        """Sorted unique endpoints of every inserted/deleted edge."""
+        ends = np.concatenate([self.insertions.reshape(-1),
+                               self.deletions.reshape(-1)])
+        return np.unique(ends)
+
+
+def undirected_edges(graph: Graph) -> tuple[np.ndarray, np.ndarray]:
+    """Extract the (E, 2) undirected edge list + weights from a Graph.
+
+    ``build_graph`` materialises both directions with equal weight, so
+    the u < v half is the full undirected edge set.
+    """
+    src = np.asarray(graph.src)[: graph.num_edges].astype(np.int64)
+    dst = np.asarray(graph.dst)[: graph.num_edges].astype(np.int64)
+    wgt = np.asarray(graph.wgt)[: graph.num_edges]
+    keep = src < dst
+    return np.stack([src[keep], dst[keep]], axis=1), wgt[keep]
+
+
+def apply_delta(graph: Graph, delta: GraphDelta) -> Graph:
+    """Rebuild the CSR graph after a delta (host-side, O(m + |delta|)).
+
+    Returns a fresh :class:`Graph` over the post-delta edge set; the
+    input graph is untouched (Graphs are immutable pytrees).  An empty
+    delta reproduces the exact same structure (same fingerprint).
+    """
+    n_new = graph.n
+    if delta.num_vertices is not None:
+        if delta.num_vertices < graph.n:
+            raise ValueError(
+                f"delta shrinks the graph ({delta.num_vertices} < "
+                f"{graph.n} vertices); vertex removal is unsupported")
+        n_new = delta.num_vertices
+    if delta.num_insertions:
+        n_new = max(n_new, int(delta.insertions.max()) + 1)
+
+    edges, weights = undirected_edges(graph)
+    if delta.num_deletions:
+        # Only pairs with both endpoints inside the vertex range can name
+        # a real edge; dropping the rest up front keeps them true no-ops
+        # (an out-of-range endpoint in a (u * n + v) key would otherwise
+        # collide with an unrelated in-range edge's key).
+        dels = delta.deletions[(delta.deletions < n_new).all(axis=1)]
+        if len(dels):
+            key = edges[:, 0] * n_new + edges[:, 1]
+            dkey = dels[:, 0] * n_new + dels[:, 1]
+            keep = ~np.isin(key, dkey)
+            edges, weights = edges[keep], weights[keep]
+    if delta.num_insertions:
+        edges = np.concatenate([edges, delta.insertions], axis=0)
+        weights = np.concatenate(
+            [weights, delta.insert_weights.astype(weights.dtype)])
+    return build_graph(edges, weights, n=n_new)
+
+
+def affected_frontier(delta: GraphDelta, n: int) -> np.ndarray:
+    """(n,) bool mask of vertices whose neighborhoods the delta changed.
+
+    These are the endpoints of every inserted or deleted edge — the
+    vertices GVE-LPA's pruning rule seeds *unprocessed* for incremental
+    re-detection.  Pass as ``init_active`` together with warm-start
+    labels: propagation then starts from the changed neighborhoods and
+    wakes outward only as labels actually move.
+    """
+    out = np.zeros(n, dtype=bool)
+    touched = delta.touched_vertices()
+    out[touched[touched < n]] = True
+    return out

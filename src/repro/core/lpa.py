@@ -132,7 +132,8 @@ def lpa_move(graph: Graph, labels: jnp.ndarray, active: jnp.ndarray,
 @partial(jax.jit, static_argnames=("max_iterations",))
 def lpa_run(graph: Graph, tau: float = 0.05, max_iterations: int = 20,
             init_labels: jnp.ndarray | None = None,
-            n_real: jnp.ndarray | None = None) -> LpaState:
+            n_real: jnp.ndarray | None = None,
+            init_active: jnp.ndarray | None = None) -> LpaState:
     """Run LPA to convergence: ``delta_n / n <= tau`` or iteration cap.
 
     Faithful to Algorithm 3 lines 1-6 (the propagation phase of GSL-LPA).
@@ -143,11 +144,20 @@ def lpa_run(graph: Graph, tau: float = 0.05, max_iterations: int = 20,
     convergence threshold must still be ``tau * n_real``, not
     ``tau * n_bucket`` — passing it as a traced value keeps one compiled
     executable valid for every graph in the bucket.
+
+    ``init_active``: optional (n,) seed for the unprocessed flags —
+    GVE-LPA's pruning rule for incremental re-detection: after an edge
+    delta, only the vertices whose neighborhoods changed (the affected
+    frontier) start unprocessed; everything else sleeps until a neighbor
+    actually changes label.  Default: all vertices unprocessed (a full
+    cold/warm detection sweep).
     """
     n = graph.n
     labels0 = (jnp.arange(n, dtype=jnp.int32) if init_labels is None
                else init_labels.astype(jnp.int32))
-    state = LpaState(labels=labels0, active=jnp.ones(n, dtype=bool),
+    active0 = (jnp.ones(n, dtype=bool) if init_active is None
+               else init_active.astype(bool))
+    state = LpaState(labels=labels0, active=active0,
                      iteration=jnp.int32(0), delta_n=jnp.int32(n))
 
     if n_real is None:

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.batch import lpa_run_batched, split_lp_batched
+from repro.core.batch import lpa_run_batched, split_lp_batched, warm_state_rows
 from repro.core.graph import Graph
 from repro.core.lpa import lpa_run
 from repro.core.split import split_lp
@@ -28,6 +28,7 @@ from repro.engine.bucketing import (
     BatchBucketKey,
     BucketKey,
     batch_index_arrays,
+    pad_active,
     pad_graph,
     pad_labels,
 )
@@ -51,11 +52,12 @@ class SegmentBackend:
         prune = config.split == "lpp"
         shortcut = config.shortcut
 
-        def _propagate(graph, n_real, labels0):
+        def _propagate(graph, n_real, labels0, active0):
             TRACE_LOG.record("segment:propagate")
             return lpa_run(graph, tau=tau, max_iterations=max_iterations,
                            init_labels=labels0,
-                           n_real=None if exact else n_real)
+                           n_real=None if exact else n_real,
+                           init_active=active0)
 
         def _split(graph, labels):
             TRACE_LOG.record("segment:split")
@@ -71,14 +73,16 @@ class SegmentBackend:
         return pad_graph(graph, bucket)
 
     def run(self, plan, inputs: Graph, n_real: int,
-            init_labels: np.ndarray | None) -> BackendRun:
+            init_labels: np.ndarray | None,
+            init_active: np.ndarray | None = None) -> BackendRun:
         g = inputs
         labels0 = jnp.asarray(pad_labels(
             np.arange(n_real, dtype=np.int32) if init_labels is None
             else init_labels, n_real, g.n))
+        active0 = jnp.asarray(pad_active(init_active, n_real, g.n))
 
         t0 = time.perf_counter()
-        state = plan.propagate(g, jnp.int32(n_real), labels0)
+        state = plan.propagate(g, jnp.int32(n_real), labels0, active0)
         labels = jax.block_until_ready(state.labels)
         lpa_iters = int(state.iteration)
         t1 = time.perf_counter()
@@ -103,9 +107,10 @@ class SegmentBackend:
         prune = config.split == "lpp"
         shortcut = config.shortcut
 
-        def _propagate(graph, sizes, graph_id, voffset):
+        def _propagate(graph, sizes, graph_id, voffset, labels0, active0):
             TRACE_LOG.record("segment:batch_propagate")
             return lpa_run_batched(graph, sizes, graph_id, voffset,
+                                   labels0, active0,
                                    tau=tau, max_iterations=max_iterations)
 
         def _split(graph, sizes, graph_id, voffset, comm):
@@ -126,12 +131,18 @@ class SegmentBackend:
         return (g, jnp.asarray(sizes), jnp.asarray(graph_id),
                 jnp.asarray(voffset))
 
-    def run_batch(self, plan, inputs) -> BatchBackendRun:
+    def run_batch(self, plan, inputs,
+                  init_labels: np.ndarray | None = None,
+                  init_active: np.ndarray | None = None) -> BatchBackendRun:
         g, sizes, graph_id, voffset = inputs
         k1 = sizes.shape[0]
+        labels0, active0 = warm_state_rows(g.n, voffset,
+                                           init_labels, init_active)
 
         t0 = time.perf_counter()
-        labels, iters = plan.propagate(g, sizes, graph_id, voffset)
+        labels, iters = plan.propagate(g, sizes, graph_id, voffset,
+                                       jnp.asarray(labels0),
+                                       jnp.asarray(active0))
         labels = jax.block_until_ready(labels)
         t1 = time.perf_counter()
 

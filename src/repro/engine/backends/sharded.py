@@ -30,7 +30,7 @@ from repro.core.distributed import (
 )
 from repro.core.graph import Graph
 from repro.engine.backends.tile import tile_rows
-from repro.engine.bucketing import BucketKey, pad_labels
+from repro.engine.bucketing import BucketKey, pad_active, pad_labels
 from repro.engine.cache import TRACE_LOG
 from repro.engine.config import EngineConfig
 from repro.engine.registry import BackendRun, register_backend
@@ -94,7 +94,8 @@ class ShardedBackend:
         return sg
 
     def run(self, plan, inputs, n_real: int,
-            init_labels: np.ndarray | None) -> BackendRun:
+            init_labels: np.ndarray | None,
+            init_active: np.ndarray | None = None) -> BackendRun:
         sg = inputs
         mesh = plan.mesh
         axes = tuple(mesh.axis_names)
@@ -104,7 +105,8 @@ class ShardedBackend:
             np.arange(n_real, dtype=np.int32) if init_labels is None
             else init_labels, n_real, plan.rows)), rep)
         active = jax.device_put(
-            jnp.arange(plan.rows, dtype=jnp.int32) < n_real, vec)
+            (jnp.arange(plan.rows, dtype=jnp.int32) < n_real)
+            & jnp.asarray(pad_active(init_active, n_real, plan.rows)), vec)
         threshold = int(np.float32(plan.tau) * np.float32(n_real))
         nr = jnp.int32(n_real)
 

@@ -21,12 +21,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.batch import warm_state_rows
 from repro.core.graph import Graph, _round_up, to_padded_neighbors
 from repro.core.lpa import _label_hash
 from repro.engine.bucketing import (
     BatchBucketKey,
     BucketKey,
     batch_index_arrays,
+    pad_active,
     pad_labels,
 )
 from repro.engine.cache import TRACE_LOG
@@ -78,7 +80,7 @@ class TileBackend:
 
         ids = np.arange(rows, dtype=np.int32)
 
-        def _propagate(nbr, nw, nmask, n_real, labels0):
+        def _propagate(nbr, nw, nmask, n_real, labels0, active0):
             TRACE_LOG.record("tile:propagate")
             vid = jnp.asarray(ids)
             parity = (_label_hash(vid, jnp.int32(-1)) & 1).astype(bool)
@@ -109,7 +111,7 @@ class TileBackend:
                     dn = dn + jnp.sum(changed.astype(jnp.int32))
                 return labels, active, it + jnp.int32(1), dn
 
-            init = (labels0, real, jnp.int32(0), jnp.int32(rows))
+            init = (labels0, active0 & real, jnp.int32(0), jnp.int32(rows))
             labels, _, it, _ = jax.lax.while_loop(cond, body, init)
             return labels, it
 
@@ -153,15 +155,17 @@ class TileBackend:
         return (jnp.asarray(nbr), jnp.asarray(nw), jnp.asarray(nmask))
 
     def run(self, plan, inputs, n_real: int,
-            init_labels: np.ndarray | None) -> BackendRun:
+            init_labels: np.ndarray | None,
+            init_active: np.ndarray | None = None) -> BackendRun:
         nbr, nw, nmask = inputs
         labels0 = jnp.asarray(pad_labels(
             np.arange(n_real, dtype=np.int32) if init_labels is None
             else init_labels, n_real, plan.rows))
+        active0 = jnp.asarray(pad_active(init_active, n_real, plan.rows))
 
         t0 = time.perf_counter()
         labels, it = plan.propagate(nbr, nw, nmask, jnp.int32(n_real),
-                                    labels0)
+                                    labels0, active0)
         labels = jax.block_until_ready(labels)
         lpa_iters = int(it)
         t1 = time.perf_counter()
@@ -196,7 +200,8 @@ class TileBackend:
 
         ids = np.arange(rows, dtype=np.int32)
 
-        def _propagate(nbr, nw, nmask, sizes, graph_id, voffset, n_total):
+        def _propagate(nbr, nw, nmask, sizes, graph_id, voffset, n_total,
+                       labels0, active0):
             TRACE_LOG.record("tile:batch_propagate")
             vid = jnp.asarray(ids)
             local = vid - voffset
@@ -233,8 +238,8 @@ class TileBackend:
                 return (labels, active, it + jnp.int32(1),
                         done | (dn <= thr), iters)
 
-            init = (local, real, jnp.int32(0), done0,
-                    jnp.zeros((k1,), jnp.int32))
+            init = (labels0.astype(jnp.int32), active0 & real, jnp.int32(0),
+                    done0, jnp.zeros((k1,), jnp.int32))
             labels, _, _, _, iters = jax.lax.while_loop(cond, body, init)
             return labels, iters
 
@@ -286,13 +291,19 @@ class TileBackend:
                 jnp.asarray(sizes), jnp.asarray(graph_id),
                 jnp.asarray(voffset), jnp.int32(batch.total_vertices))
 
-    def run_batch(self, plan, inputs) -> BatchBackendRun:
+    def run_batch(self, plan, inputs,
+                  init_labels: np.ndarray | None = None,
+                  init_active: np.ndarray | None = None) -> BatchBackendRun:
         nbr, nw, nmask, sizes, graph_id, voffset, n_total = inputs
         k1 = sizes.shape[0]
+        labels0, active0 = warm_state_rows(plan.rows, voffset,
+                                           init_labels, init_active)
 
         t0 = time.perf_counter()
         labels, iters = plan.propagate(nbr, nw, nmask, sizes, graph_id,
-                                       voffset, n_total)
+                                       voffset, n_total,
+                                       jnp.asarray(labels0),
+                                       jnp.asarray(active0))
         labels = jax.block_until_ready(labels)
         t1 = time.perf_counter()
 

@@ -141,6 +141,26 @@ def pad_graph(graph: Graph, bucket: BucketKey) -> Graph:
     )
 
 
+def pad_active(active: np.ndarray | None, n_real: int,
+               n_bucket: int) -> np.ndarray:
+    """Pad an (n_real,) unprocessed-seed mask to the bucket.
+
+    ``None`` (a full detection) seeds every row active — bit-identical
+    to the pre-init_active behaviour, including the padded rows, which
+    are edgeless and therefore inert either way.  An explicit mask (a
+    delta's affected frontier) seeds padded rows asleep.
+    """
+    if active is None:
+        return np.ones(n_bucket, dtype=bool)
+    active = np.asarray(active, dtype=bool).reshape(-1)
+    if len(active) != n_real:
+        raise ValueError(f"init_active has {len(active)} entries for a "
+                         f"graph with {n_real} vertices")
+    if n_bucket == n_real:
+        return active
+    return np.concatenate([active, np.zeros(n_bucket - n_real, dtype=bool)])
+
+
 def pad_labels(labels: np.ndarray, n_real: int, n_bucket: int) -> np.ndarray:
     """Pad an (n_real,) init-label vector to the bucket: padded vertices
     keep their own ids (singleton communities, the LPA invariant)."""

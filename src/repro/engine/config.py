@@ -33,10 +33,15 @@ class EngineConfig:
       ``gsl_lpa`` path — used by the compatibility wrappers).
     min_vertex_bucket / min_edge_bucket: floors for the pow2 buckets, so a
       stream of small graphs collapses into a single bucket.
-    warm_start: ``"auto"`` reuses the previous ``fit`` result's labels as
-      the initial assignment when the vertex count matches (incremental
-      re-detection on evolving graphs); ``"off"`` always starts from
-      singletons.  Explicit ``fit(..., init_labels=...)`` always wins.
+    warm_start: ``"auto"`` reuses a previous result's labels as the
+      initial assignment whenever a graph's structural fingerprint hits
+      the engine's warm-start cache (incremental re-detection on
+      evolving graphs; applies to ``fit`` and ``fit_many`` members
+      alike); ``"off"`` always starts from singletons.  Explicit
+      ``init_labels`` always wins.
+    warm_cache_size: bound on the per-engine warm-start cache (LRU over
+      graph fingerprints) — keeps a long streaming session from growing
+      one labels array per graph ever seen.
     compute_metrics: also report modularity and disconnected-community
       fraction on the result (extra device work; off on the hot path).
     exchange_every: sharded backend — label all-gather cadence (1 is
@@ -55,6 +60,7 @@ class EngineConfig:
     min_vertex_bucket: int = 256
     min_edge_bucket: int = 2048
     warm_start: str = "off"
+    warm_cache_size: int = 64
     compute_metrics: bool = False
     exchange_every: int = 1
     kernel_mode: str = "auto"
@@ -75,6 +81,8 @@ class EngineConfig:
                              f"got {self.warm_start!r}")
         if self.exchange_every < 1:
             raise ValueError("exchange_every must be >= 1")
+        if self.warm_cache_size < 1:
+            raise ValueError("warm_cache_size must be >= 1")
 
     def algo_key(self) -> tuple:
         """The hashable algorithm statics a compiled plan specialises on."""
@@ -101,6 +109,24 @@ class DetectionResult:
     # above are the batch totals attributed pro rata by work share.
     batch_size: int = 1
     batch_index: int = 0
+
+    def check_connected(self, graph) -> float:
+        """Disconnected-community fraction, computed lazily and cached.
+
+        Lets tests and serving assert the paper's headline invariant
+        (``check_connected(graph) == 0.0`` after any split mode) without
+        paying for full quality metrics on every fit
+        (``compute_metrics=True`` also reports modularity).  ``graph``
+        must be the graph this result was fitted on — the result itself
+        only holds labels.
+        """
+        if self.disconnected_fraction is None:
+            import jax.numpy as jnp
+
+            from repro.core.detect import disconnected_fraction
+            self.disconnected_fraction = float(
+                disconnected_fraction(graph, jnp.asarray(self.labels)))
+        return self.disconnected_fraction
 
     @property
     def lpa_seconds(self) -> float:

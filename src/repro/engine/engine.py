@@ -7,16 +7,29 @@
     result = eng.fit(graph2)                # same bucket -> no recompile
     result = eng.fit(graph2, init_labels=result.labels)   # warm start
     results = eng.fit_many([g1, g2, g3])    # one batched dispatch
+    results = eng.fit_many(posts, init_labels=prev_labels,
+                           init_active=frontiers)   # batched warm re-detect
 
 ``fit`` is backend-agnostic: it buckets the graph, fetches (or builds) the
 compiled plan from the shape-bucketed cache, runs the backend, applies the
 host split when requested, compacts labels, and optionally attaches
 quality metrics — returning the same :class:`DetectionResult` regardless
 of execution strategy.
+
+Warm starts: ``init_labels`` seeds propagation with an existing
+assignment; ``init_active`` seeds the unprocessed flags (GVE-LPA pruning
+rule — pass a delta's affected frontier so only changed neighborhoods
+get re-processed).  With ``warm_start="auto"`` the engine keeps a
+bounded LRU cache of ``graph_fingerprint -> last labels`` updated on
+every fit (solo or batched member), so re-fitting a structurally
+identical graph warm-starts automatically.  Batched warm re-detection is
+bit-identical to solo warm ``fit`` on each member (pinned in
+tests/test_stream.py).
 """
 from __future__ import annotations
 
 import time
+from collections import OrderedDict
 
 import jax.numpy as jnp
 import numpy as np
@@ -42,28 +55,133 @@ def _compact_host(labels: np.ndarray) -> tuple[np.ndarray, int]:
     return inv.astype(np.int32), len(uniq)
 
 
+def _check_init_labels(labels, n: int, name: str) -> np.ndarray:
+    """Validate warm-start labels: (n,) vertex-id-valued.  The usual way
+    to trip this is feeding *stale* labels from a pre-delta graph whose
+    vertex count has since changed — reject loudly, never truncate."""
+    labels = np.asarray(labels)
+    if labels.shape != (n,):
+        raise ValueError(
+            f"{name} has shape {labels.shape} for a graph with {n} "
+            f"vertices — stale warm-start labels from a different graph? "
+            f"Re-detect cold or extend the labels to the new vertex set.")
+    labels = labels.astype(np.int32)
+    if n and (labels.min() < 0 or labels.max() >= n):
+        raise ValueError(f"{name} must be vertex-id-valued in [0, {n})")
+    return labels
+
+
+def _check_init_active(active, n: int, name: str) -> np.ndarray:
+    active = np.asarray(active).astype(bool)
+    if active.shape != (n,):
+        raise ValueError(f"{name} has shape {active.shape} for a graph "
+                         f"with {n} vertices")
+    return active
+
+
+class _WarmCache:
+    """Bounded LRU of ``graph_fingerprint -> last compacted labels``.
+
+    Per-session state for ``warm_start="auto"``: every fit stores its
+    result labels under the graph's structural fingerprint, and a later
+    fit of a structurally identical graph starts from them.  The bound
+    keeps a long streaming session from accumulating one labels array
+    per graph ever served (tests pin the no-unbounded-growth property).
+    """
+
+    def __init__(self, max_entries: int):
+        self.max_entries = int(max_entries)
+        self._entries: OrderedDict[tuple, np.ndarray] = OrderedDict()
+
+    def get(self, fp: tuple) -> np.ndarray | None:
+        labels = self._entries.get(fp)
+        if labels is not None:
+            self._entries.move_to_end(fp)
+        return labels
+
+    def put(self, fp: tuple, labels: np.ndarray) -> None:
+        self._entries[fp] = labels
+        self._entries.move_to_end(fp)
+        while len(self._entries) > self.max_entries:
+            self._entries.popitem(last=False)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+
 class Engine:
     """Pluggable-backend GSL-LPA engine with a shape-bucketed jit cache.
 
     ``cache=None`` shares the process-wide :data:`GLOBAL_CACHE`, so
     independent Engine instances (and the legacy ``gsl_lpa`` wrapper)
-    reuse each other's compiled plans.
+    reuse each other's compiled plans.  The warm-start cache, by
+    contrast, is per-engine session state.
     """
 
     def __init__(self, config: EngineConfig | None = None,
                  cache: CompileCache | None = None):
         self.config = config if config is not None else EngineConfig()
         self.cache = cache if cache is not None else GLOBAL_CACHE
-        self._last: tuple[tuple, np.ndarray] | None = None  # (fingerprint, labels)
+        self._warm = _WarmCache(self.config.warm_cache_size)
 
-    def fit(self, graph: Graph, init_labels=None, *,
+    # --- warm-start resolution ---
+
+    def _auto_fp(self, graph: Graph) -> tuple | None:
+        return graph_fingerprint(graph) \
+            if self.config.warm_start == "auto" else None
+
+    def _resolve_warm(self, graph: Graph, init_labels, init_active,
+                      fp: tuple | None, name: str):
+        """Explicit init labels win; else consult the warm cache.
+
+        A frontier seed only means anything *relative to* a previous
+        assignment — restricting a cold singleton start to the frontier
+        would freeze every other vertex at its own label and return
+        garbage.  So when no warm labels resolve (explicit None plus a
+        cache miss, e.g. after LRU eviction), ``init_active`` is dropped
+        and the fit degrades to a full cold detection.
+        """
+        warm_started = init_labels is not None
+        if init_labels is None and fp is not None:
+            init_labels = self._warm.get(fp)
+            warm_started = init_labels is not None
+        if init_active is not None:  # validate even when about to drop it
+            init_active = _check_init_active(init_active, graph.n,
+                                             name.replace("labels", "active"))
+        if init_labels is not None:
+            init_labels = _check_init_labels(init_labels, graph.n, name)
+        else:
+            init_active = None
+        return init_labels, init_active, warm_started
+
+    # --- solo fit ---
+
+    def fit(self, graph: Graph, init_labels=None, init_active=None, *,
             backend: str | None = None) -> DetectionResult:
         """Detect communities; returns a unified :class:`DetectionResult`.
 
         ``init_labels``: optional (n,) vertex-id-valued initial assignment
-        (warm start / incremental re-detection).  ``backend`` overrides the
+        (warm start / incremental re-detection).  ``init_active``:
+        optional (n,) unprocessed-seed mask — pass the delta's affected
+        frontier (``repro.core.delta.affected_frontier``) so propagation
+        is restricted to changed neighborhoods; honored only alongside
+        warm labels (see ``_resolve_warm``).  ``backend`` overrides the
         configured strategy for this call only.
         """
+        fp = self._auto_fp(graph)
+        init_labels, init_active, warm_started = self._resolve_warm(
+            graph, init_labels, init_active, fp, "init_labels")
+        result = self._fit_resolved(graph, init_labels, init_active,
+                                    backend, warm_started)
+        if fp is not None:
+            self._warm.put(fp, result.labels)
+        return result
+
+    def _fit_resolved(self, graph: Graph, init_labels, init_active,
+                      backend: str | None, warm_started: bool,
+                      ) -> DetectionResult:
+        """One detection with warm state already resolved + validated
+        (no auto-cache lookups or updates — callers own those)."""
         cfg = self.config
         name = backend or cfg.backend
         if name == "auto":
@@ -77,20 +195,11 @@ class Engine:
         plan, cache_hit = self.cache.get_or_build(
             key, lambda: be.build(bucket, cfg))
 
-        warm_started = init_labels is not None
-        fp = graph_fingerprint(graph) if cfg.warm_start == "auto" else None
-        if init_labels is None and fp is not None \
-                and self._last is not None and self._last[0] == fp:
-            init_labels = self._last[1]
-            warm_started = True
-        if init_labels is not None:
-            init_labels = np.asarray(init_labels, dtype=np.int32)
-
         t0 = time.perf_counter()
         inputs = be.prepare(graph, bucket, cfg)
         t_prep = time.perf_counter() - t0
 
-        run = be.run(plan, inputs, graph.n, init_labels)
+        run = be.run(plan, inputs, graph.n, init_labels, init_active)
         labels = np.asarray(run.labels)[: graph.n]
 
         t0 = time.perf_counter()
@@ -113,18 +222,19 @@ class Engine:
             warm_started=warm_started,
         )
         if cfg.compute_metrics:
-            from repro.core.detect import disconnected_fraction
-            from repro.core.modularity import modularity
-            lab = jnp.asarray(labels)
-            result.modularity = float(modularity(graph, lab))
-            result.disconnected_fraction = float(
-                disconnected_fraction(graph, lab))
-        if fp is not None:
-            self._last = (fp, labels)
+            self._attach_metrics(result, graph)
         return result
 
-    def fit_many(self, graphs, *, backend: str | None = None,
-                 ) -> list[DetectionResult]:
+    def _attach_metrics(self, result: DetectionResult, graph: Graph) -> None:
+        from repro.core.modularity import modularity
+        result.modularity = float(
+            modularity(graph, jnp.asarray(result.labels)))
+        result.check_connected(graph)
+
+    # --- batched fit ---
+
+    def fit_many(self, graphs, *, init_labels=None, init_active=None,
+                 backend: str | None = None) -> list[DetectionResult]:
         """Detect communities for k graphs in one batched device dispatch.
 
         The graphs are packed into a disjoint-union super-graph
@@ -132,38 +242,77 @@ class Engine:
         backend's batched plan, cached per *batch bucket* — a
         (graph-count, total-vertex, total-edge, max-degree) shape key —
         so mixed traffic reuses compiled plans.  Per-graph results are
-        bit-identical to ``fit`` on each graph alone (the parity suite in
-        tests/test_batch.py pins this for ``segment`` and ``tile`` across
-        every split mode).  Backends without ``supports_batch`` (the
-        ``sharded`` strategy) fall back to sequential ``fit`` calls.
+        bit-identical to ``fit`` on each graph alone, cold or warm (the
+        parity suites in tests/test_batch.py and tests/test_stream.py
+        pin this for ``segment`` and ``tile`` across every split mode).
+        Backends without ``supports_batch`` (the ``sharded`` strategy)
+        fall back to sequential ``fit`` calls with identical warm-start
+        semantics.
+
+        ``init_labels`` / ``init_active``: optional length-k sequences of
+        per-member warm-start labels and unprocessed-seed masks (None
+        entries for cold members) — the streaming re-detection path:
+        apply each member's delta, then pass the previous labels and the
+        delta's affected frontier.  With ``warm_start="auto"``, members
+        without explicit labels consult the warm cache; lookups snapshot
+        the cache *before* the dispatch, so members never warm-start off
+        each other within one batch, and every member's result is stored
+        back afterwards.
 
         Batch-level timings (prepare/propagation/split) are attributed
         pro rata by each graph's share of packed work (vertices + edges);
-        compaction and the host BFS split are timed per graph.  Warm
-        starts do not apply to batched dispatch.
+        compaction and the host BFS split are timed per graph.
         """
         graphs = list(graphs)
         if not graphs:
             return []
         cfg = self.config
+        k = len(graphs)
+        init_labels = self._per_member(init_labels, k, "init_labels")
+        init_active = self._per_member(init_active, k, "init_active")
+
+        fps = [self._auto_fp(g) for g in graphs]
+        resolved = [
+            self._resolve_warm(g, init_labels[i], init_active[i], fps[i],
+                               f"init_labels[{i}]")
+            for i, g in enumerate(graphs)
+        ]
+        labels_r = [r[0] for r in resolved]
+        active_r = [r[1] for r in resolved]
+        warm_r = [r[2] for r in resolved]
+
         name = backend or cfg.backend
         if name == "auto":
             name = choose_backend_batch(graphs, cfg)
         be = get_backend(name)
         if not getattr(be, "supports_batch", False):
-            # Sequential fallback keeps batched semantics: no warm starts
-            # between batch members (suppress the auto-keying state, then
-            # restore it so interleaved fit() callers are unaffected).
-            saved = self._last
-            try:
-                results = []
-                for g in graphs:
-                    self._last = None
-                    results.append(self.fit(g, backend=name))
-            finally:
-                self._last = saved
-            return results
+            # Sequential fallback keeps batched semantics: warm state was
+            # resolved against the pre-dispatch cache snapshot above, so
+            # members never warm off each other mid-batch.
+            results = [self._fit_resolved(g, labels_r[i], active_r[i],
+                                          name, warm_r[i])
+                       for i, g in enumerate(graphs)]
+        else:
+            results = self._fit_many_packed(graphs, labels_r, active_r,
+                                            warm_r, name, be)
+        for fp, res in zip(fps, results):
+            if fp is not None:
+                self._warm.put(fp, res.labels)
+        return results
 
+    @staticmethod
+    def _per_member(seq, k: int, name: str) -> list:
+        if seq is None:
+            return [None] * k
+        seq = list(seq)
+        if len(seq) != k:
+            raise ValueError(f"{name} has {len(seq)} entries for a batch "
+                             f"of {k} graphs")
+        return seq
+
+    def _fit_many_packed(self, graphs, labels_r, active_r, warm_r,
+                         name: str, be) -> list[DetectionResult]:
+        cfg = self.config
         t0 = time.perf_counter()
         batch = GraphBatch.pack(graphs)
         bucket = batch_bucket_for(batch, bucketing=cfg.bucketing,
@@ -174,9 +323,14 @@ class Engine:
         plan, cache_hit = self.cache.get_or_build(
             key, lambda: be.build_batch(bucket, cfg))
         inputs = be.prepare_batch(batch, bucket, cfg)
+        # Per-member labels are local-coordinate by construction (a solo
+        # graph's vertex ids are its local ids), so packing is a plain
+        # offset-sliced concatenation.
+        labels0 = batch.pack_labels(labels_r)
+        active0 = batch.pack_active(active_r)
         t_prep = time.perf_counter() - t0
 
-        run = be.run_batch(plan, inputs)
+        run = be.run_batch(plan, inputs, labels0, active0)
         labels_all = np.asarray(run.labels)
 
         work = np.asarray(batch.sizes + batch.edge_counts, dtype=np.float64)
@@ -207,20 +361,17 @@ class Engine:
                          "propagation": run.lpa_seconds * w,
                          "split": split_seconds, "compact": t_compact},
                 bucket=tuple(bucket), cache_hit=cache_hit,
-                warm_started=False,
+                warm_started=warm_r[i],
                 batch_size=len(graphs), batch_index=i,
             )
             if cfg.compute_metrics:
-                from repro.core.detect import disconnected_fraction
-                from repro.core.modularity import modularity
-                lab = jnp.asarray(labels)
-                result.modularity = float(modularity(graph, lab))
-                result.disconnected_fraction = float(
-                    disconnected_fraction(graph, lab))
+                self._attach_metrics(result, graph)
             results.append(result)
         return results
 
     def stats(self) -> dict:
         """Cache + trace observability (for serving dashboards / tests)."""
         from repro.engine.cache import TRACE_LOG
-        return {**self.cache.stats(), "traces": TRACE_LOG.snapshot()}
+        return {**self.cache.stats(), "traces": TRACE_LOG.snapshot(),
+                "warm_entries": len(self._warm),
+                "warm_capacity": self._warm.max_entries}

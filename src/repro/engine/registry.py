@@ -8,15 +8,20 @@ A backend is a stateless strategy object with four hooks:
     specialised to the bucket shapes (cached by the engine);
   * ``prepare(graph, bucket, config)`` — per-graph host-side prep (padding
     to the bucket, tile construction, device placement);
-  * ``run(plan, inputs, n_real, init_labels)`` — execute, returning a
-    :class:`BackendRun`.
+  * ``run(plan, inputs, n_real, init_labels, init_active)`` — execute,
+    returning a :class:`BackendRun`.  ``init_labels`` seeds propagation
+    (warm start); ``init_active`` seeds the unprocessed flags (a delta's
+    affected frontier) — both optional, None means cold/full.
 
 Backends that set ``supports_batch = True`` additionally implement the
 batched trio — ``build_batch`` / ``prepare_batch`` / ``run_batch`` —
 executing a whole :class:`repro.core.batch.GraphBatch` in one dispatch
 and returning a :class:`BatchBackendRun` with per-graph iteration
-counts.  ``Engine.fit_many`` falls back to sequential ``fit`` calls for
-backends without the flag (e.g. ``sharded``).
+counts.  ``run_batch`` takes optional packed (total_vertices,) warm
+labels / active seeds (local coordinates; see ``GraphBatch.pack_labels``)
+and must treat them bit-identically to per-member solo warm runs.
+``Engine.fit_many`` falls back to sequential ``fit`` calls for backends
+without the flag (e.g. ``sharded``).
 
 Registration is open: third-party strategies can ``register_backend`` and
 be selected by name through ``EngineConfig.backend``.
@@ -68,14 +73,18 @@ class Backend(Protocol):
                 config: EngineConfig): ...
 
     def run(self, plan, inputs, n_real: int,
-            init_labels: np.ndarray | None) -> BackendRun: ...
+            init_labels: np.ndarray | None,
+            init_active: np.ndarray | None = None) -> BackendRun: ...
 
     def build_batch(self, bucket: BatchBucketKey, config: EngineConfig): ...
 
     def prepare_batch(self, batch, bucket: BatchBucketKey,
                       config: EngineConfig): ...
 
-    def run_batch(self, plan, inputs) -> BatchBackendRun: ...
+    def run_batch(self, plan, inputs,
+                  init_labels: np.ndarray | None = None,
+                  init_active: np.ndarray | None = None,
+                  ) -> BatchBackendRun: ...
 
 
 _BACKENDS: dict[str, Backend] = {}

@@ -30,8 +30,11 @@ import numpy as np
 class Submission:
     """Handle for one enqueued request; resolves to a DetectionResult."""
 
-    def __init__(self, graph, submitted: float):
+    def __init__(self, graph, submitted: float, init_labels=None,
+                 init_active=None):
         self.graph = graph
+        self.init_labels = init_labels  # warm-start labels (or None: cold)
+        self.init_active = init_active  # unprocessed-seed mask (frontier)
         self.submitted = submitted     # perf_counter at submit
         self.latency_s: float | None = None   # set when the result lands
         self.batch_size: int | None = None    # size of the batch it rode in
@@ -111,8 +114,16 @@ class MicroBatcher:
 
     # --- request path ---
 
-    def submit(self, graph) -> Submission:
-        sub = Submission(graph, time.perf_counter())
+    def submit(self, graph, init_labels=None, init_active=None) -> Submission:
+        """Enqueue one detection request.
+
+        ``init_labels`` / ``init_active``: optional per-request warm-start
+        labels and unprocessed-seed mask (a delta's affected frontier) —
+        the streaming re-detection path.  Warm and cold requests coalesce
+        into the same batches; the engine keeps per-member parity either
+        way.
+        """
+        sub = Submission(graph, time.perf_counter(), init_labels, init_active)
         # The lock orders accepted submissions before close()'s sentinel
         # (FIFO queue), so every accepted submission is dispatched before
         # the worker exits — a submit racing close() either lands before
@@ -150,8 +161,16 @@ class MicroBatcher:
 
     def _dispatch(self, batch: list[Submission]) -> None:
         try:
+            # Only thread warm-start kwargs through when some request
+            # actually carries them — cold-only traffic keeps the bare
+            # fit_many(graphs, backend=...) call shape.
+            kwargs = {}
+            if any(s.init_labels is not None for s in batch):
+                kwargs["init_labels"] = [s.init_labels for s in batch]
+            if any(s.init_active is not None for s in batch):
+                kwargs["init_active"] = [s.init_active for s in batch]
             results = self.engine.fit_many([s.graph for s in batch],
-                                           backend=self.backend)
+                                           backend=self.backend, **kwargs)
         except BaseException as e:  # propagate to every waiter
             for s in batch:
                 s._future.set_exception(e)

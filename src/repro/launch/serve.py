@@ -87,8 +87,9 @@ def serve_communities(num_requests: int = 24, backend: str = "auto",
     each batch is one ``Engine.fit_many`` device dispatch.  Returns
     per-request records + a summary dict (printed) with per-request
     latency percentiles, the batch-size histogram, and aggregate edges/s.
-    (No ``warm_start`` knob: the batched dispatch path never warm-starts;
-    incremental re-detection stays a solo-``fit`` feature.)
+    (Fresh-graph traffic, so every request is cold; evolving-graph
+    traffic goes through ``--mode streaming``, where requests carry
+    warm-start labels + delta frontiers through the same batcher.)
     """
     from repro.engine import Engine, EngineConfig
     from repro.graphgen import erdos_renyi
@@ -137,9 +138,99 @@ def serve_communities(num_requests: int = 24, backend: str = "auto",
     return records, summary
 
 
+def serve_streaming(num_streams: int = 6, rounds: int = 5, size: int = 150,
+                    avg_degree: float = 5.0, delta_edges: int = 4,
+                    backend: str = "auto", max_batch: int = 16,
+                    batch_timeout_ms: float = 2.0, seed: int = 0):
+    """Replay evolving-graph delta traces: warm batched vs cold re-detect.
+
+    ``num_streams`` evolving graphs (``evolving_sequence`` traces —
+    small per-round edge churn) are replayed two ways, each processing
+    the *same delta stream end to end* (delta application + re-detection
+    both inside the timed region — a serving system has to rebuild the
+    updated graph either way):
+
+      * **cold**: every round applies each stream's delta and re-detects
+        the post-delta graph from singletons, one solo ``fit`` per graph
+        — the full re-detection baseline;
+      * **warm**: a :class:`repro.launch.stream.StreamSession` applies
+        the same deltas and drives each round through the
+        :class:`MicroBatcher` as one batched dispatch, each member
+        warm-started from its stream's previous labels with the delta's
+        affected frontier seeded unprocessed.
+
+    Both replays get a warm-up detection per stream first so compile
+    cost cancels.  (For the pure-fit comparison with delta application
+    hoisted out of the timed regions entirely, see
+    ``benchmarks/bench_streaming_deltas.py``.)  Prints the
+    full-vs-warm speedup and returns (records, summary): one record per
+    stream with its final state.
+    """
+    from repro.core.delta import apply_delta
+    from repro.engine import Engine, EngineConfig
+    from repro.graphgen import evolving_sequence
+    from repro.launch.stream import StreamSession
+
+    traces = {f"s{i}": evolving_sequence(size, avg_degree, rounds,
+                                         delta_edges, seed=seed + i)
+              for i in range(num_streams)}
+
+    # cold baseline: apply delta + solo full re-detection, per stream/round
+    cold_eng = Engine(EngineConfig(backend=backend))
+    for sid, (base, _) in traces.items():  # warm-up: compile solo plans
+        cold_eng.fit(base)
+    cold_graphs = {sid: base for sid, (base, _) in traces.items()}
+    t0 = time.perf_counter()
+    for r in range(rounds):
+        for sid, (_, deltas) in traces.items():
+            cold_graphs[sid] = apply_delta(cold_graphs[sid], deltas[r])
+            cold_eng.fit(cold_graphs[sid])
+    cold_s = time.perf_counter() - t0
+
+    # warm streaming session: same deltas, batched + warm labels +
+    # frontier seeds (update_many re-applies them internally)
+    warm_eng = Engine(EngineConfig(backend=backend))
+    session = StreamSession(warm_eng, max_batch=max_batch,
+                            batch_timeout_ms=batch_timeout_ms)
+    session.add_many({sid: base for sid, (base, _) in traces.items()})
+    t0 = time.perf_counter()
+    last = {}
+    for r in range(rounds):
+        last = session.update_many({sid: deltas[r]
+                                    for sid, (_, deltas) in traces.items()})
+    warm_s = time.perf_counter() - t0
+    stats = session.stats()
+    records = [{"stream": sid, "n": session.graph(sid).n,
+                "edges": session.graph(sid).num_edges,
+                "communities": res.num_communities,
+                "warm_started": res.warm_started,
+                "lpa_iterations": res.lpa_iterations}
+               for sid, res in sorted(last.items())]
+    session.close()
+
+    total_fits = num_streams * rounds
+    summary = {
+        "streams": num_streams, "rounds": rounds,
+        "cold_s": cold_s, "warm_s": warm_s,
+        "speedup": cold_s / max(warm_s, 1e-9),
+        "mean_frontier_frac": stats["mean_frontier_frac"],
+        "p50_ms": stats["p50_ms"], "p95_ms": stats["p95_ms"],
+        "mean_batch": stats["mean_batch"],
+    }
+    print(f"[serve-streaming] {num_streams} streams x {rounds} rounds "
+          f"({total_fits} re-detections, ~{delta_edges} edges churned each): "
+          f"cold {cold_s:.2f}s, warm batched {warm_s:.2f}s "
+          f"({summary['speedup']:.1f}x), frontier "
+          f"{summary['mean_frontier_frac']:.1%} of vertices, mean batch "
+          f"{summary['mean_batch']:.1f}, p50 {summary['p50_ms']:.0f}ms",
+          flush=True)
+    return records, summary
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=("lm", "communities"), default="lm")
+    ap.add_argument("--mode", choices=("lm", "communities", "streaming"),
+                    default="lm")
     ap.add_argument("--arch")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
@@ -150,11 +241,22 @@ def main() -> None:
     ap.add_argument("--batch-timeout-ms", type=float, default=2.0,
                     help="linger after a batch's first request before "
                          "dispatching partial batches")
+    ap.add_argument("--streams", type=int, default=6,
+                    help="streaming mode: number of evolving graphs")
+    ap.add_argument("--rounds", type=int, default=5,
+                    help="streaming mode: delta rounds per stream")
+    ap.add_argument("--delta-edges", type=int, default=4,
+                    help="streaming mode: edges churned per delta")
     a = ap.parse_args()
     if a.mode == "communities":
         serve_communities(num_requests=a.requests, backend=a.backend,
                           max_batch=a.max_batch,
                           batch_timeout_ms=a.batch_timeout_ms)
+    elif a.mode == "streaming":
+        serve_streaming(num_streams=a.streams, rounds=a.rounds,
+                        delta_edges=a.delta_edges, backend=a.backend,
+                        max_batch=a.max_batch,
+                        batch_timeout_ms=a.batch_timeout_ms)
     else:
         if not a.arch:
             ap.error("--arch is required for --mode lm")

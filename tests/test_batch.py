@@ -150,6 +150,30 @@ def test_fit_many_sequential_fallback_without_capability():
         assert np.array_equal(r.labels, ref.fit(g, backend="segment").labels)
 
 
+@pytest.mark.parametrize("split", ("none", "lp", "bfs_host"))
+def test_fit_many_sharded_fallback_parity(split):
+    """The sharded sequential-fallback path is label-parity with the
+    batch-capable backends, per split mode (lpp is rejected by the
+    sharded backend, hence absent) — cold and warm-started alike."""
+    graphs = [erdos_renyi(60, 4.0, seed=1), random_graph(45, 3.0, seed=7),
+              karate_club()[0]]
+    eng = fresh_engine(split=split)
+    sharded = eng.fit_many(graphs, backend="sharded")
+    for i, g in enumerate(graphs):
+        for be in BATCH_BACKENDS:
+            assert np.array_equal(sharded[i].labels,
+                                  eng.fit(g, backend=be).labels), (split, be)
+
+    # warm fallback: per-member init labels thread through sequential fits
+    warm = [r.labels for r in sharded]
+    sharded_w = eng.fit_many(graphs, init_labels=warm, backend="sharded")
+    assert all(r.warm_started for r in sharded_w)
+    for i, g in enumerate(graphs):
+        assert np.array_equal(
+            sharded_w[i].labels,
+            eng.fit(g, init_labels=warm[i], backend="segment").labels)
+
+
 def test_fit_many_trivial_inputs():
     eng = fresh_engine()
     assert eng.fit_many([]) == []

@@ -6,6 +6,8 @@ pytest.importorskip(
     "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+pytestmark = pytest.mark.slow  # hypothesis suites ride the slow CI job
+
 from repro.core import GraphBatch  # noqa: E402
 from repro.core.graph import build_graph  # noqa: E402
 from conftest import random_graph  # noqa: E402

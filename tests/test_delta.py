@@ -1,0 +1,120 @@
+"""GraphDelta / apply_delta / affected_frontier: the streaming delta API."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    GraphDelta,
+    affected_frontier,
+    apply_delta,
+    graph_fingerprint,
+    undirected_edges,
+)
+from repro.core.graph import build_graph, to_numpy_adj
+from repro.graphgen import erdos_renyi, evolving_sequence, karate_club
+
+
+def adj_dict(graph):
+    """{(u, v): w} over u < v undirected edges (host oracle view)."""
+    out = {}
+    for u, nbrs in enumerate(to_numpy_adj(graph)):
+        for v, w in nbrs:
+            if u < v:
+                out[(u, v)] = w
+    return out
+
+
+def test_make_canonicalises_and_defaults():
+    d = GraphDelta.make(insert=[[5, 2], [3, 3], [1, 4]],
+                        delete=[[7, 0]])
+    # self loop dropped, endpoints ordered, unit default weights
+    assert d.insertions.tolist() == [[2, 5], [1, 4]]
+    assert d.insert_weights.tolist() == [1.0, 1.0]
+    assert d.deletions.tolist() == [[0, 7]]
+    assert d.touched_vertices().tolist() == [0, 1, 2, 4, 5, 7]
+    assert not d.is_empty()
+    assert GraphDelta.make().is_empty()
+    with pytest.raises(ValueError):
+        GraphDelta.make(insert=[[0, 1], [1, 2]], weights=[1.0])
+    with pytest.raises(ValueError):
+        GraphDelta.make(insert=[[-1, 2]])
+
+
+def test_apply_delta_insert_delete_roundtrip():
+    g = build_graph(np.array([[0, 1], [1, 2], [2, 3], [3, 0]]), n=5)
+    d = GraphDelta.make(insert=[[0, 2], [1, 4]], delete=[[2, 3]])
+    g2 = apply_delta(g, d)
+    assert g2.n == 5
+    assert adj_dict(g2) == {(0, 1): 1.0, (1, 2): 1.0, (0, 3): 1.0,
+                            (0, 2): 1.0, (1, 4): 1.0}
+    # the original graph is untouched (immutable pytree)
+    assert adj_dict(g) == {(0, 1): 1.0, (1, 2): 1.0, (2, 3): 1.0,
+                           (0, 3): 1.0}
+
+
+def test_apply_delta_weight_semantics():
+    g = build_graph(np.array([[0, 1], [1, 2]]),
+                    np.array([2.0, 3.0], np.float32), n=3)
+    # inserting an existing edge merges weights by summation
+    g2 = apply_delta(g, GraphDelta.make(insert=[[1, 0]], weights=[0.5]))
+    assert adj_dict(g2) == {(0, 1): 2.5, (1, 2): 3.0}
+    # deleting removes the edge entirely, whatever its weight;
+    # deleting a non-existent edge is a silent no-op
+    g3 = apply_delta(g, GraphDelta.make(delete=[[0, 1], [0, 2]]))
+    assert adj_dict(g3) == {(1, 2): 3.0}
+
+
+def test_delete_with_out_of_range_endpoint_is_a_true_noop():
+    """Regression: (2, 25) on a 10-vertex graph keys to 2*10+25 == 45 ==
+    the key of real edge (4, 5) — the collision must not delete it."""
+    g = build_graph(np.array([[0, 1], [4, 5]]), n=10)
+    g2 = apply_delta(g, GraphDelta.make(delete=[[2, 25]]))
+    assert adj_dict(g2) == {(0, 1): 1.0, (4, 5): 1.0}
+
+
+def test_apply_delta_grows_but_never_shrinks():
+    g = build_graph(np.array([[0, 1]]), n=2)
+    g2 = apply_delta(g, GraphDelta.make(insert=[[1, 4]]))
+    assert g2.n == 5  # endpoint beyond range grows the vertex set
+    g3 = apply_delta(g, GraphDelta.make(num_vertices=6))
+    assert g3.n == 6 and adj_dict(g3) == {(0, 1): 1.0}
+    with pytest.raises(ValueError):
+        apply_delta(g2, GraphDelta.make(num_vertices=3))
+
+
+def test_empty_delta_preserves_fingerprint():
+    g, _ = karate_club()
+    assert graph_fingerprint(apply_delta(g, GraphDelta.make())) \
+        == graph_fingerprint(g)
+
+
+def test_undirected_edges_halves_directed():
+    g = erdos_renyi(60, 4.0, seed=3)
+    edges, wgt = undirected_edges(g)
+    assert 2 * len(edges) == g.num_edges
+    assert np.all(edges[:, 0] < edges[:, 1])
+    assert len(wgt) == len(edges)
+
+
+def test_affected_frontier_marks_endpoints_only():
+    d = GraphDelta.make(insert=[[0, 3]], delete=[[2, 5]])
+    f = affected_frontier(d, 8)
+    assert f.tolist() == [True, False, True, True, False, True, False, False]
+    assert not affected_frontier(GraphDelta.make(), 4).any()
+
+
+def test_evolving_sequence_is_consistent_and_deterministic():
+    base, deltas = evolving_sequence(80, 4.0, rounds=4, delta_edges=3, seed=7)
+    base2, deltas2 = evolving_sequence(80, 4.0, rounds=4, delta_edges=3,
+                                       seed=7)
+    assert graph_fingerprint(base) == graph_fingerprint(base2)
+    g, g2 = base, base2
+    for d, d2 in zip(deltas, deltas2):
+        assert d.num_insertions == 3 and d.num_deletions == 3
+        # deletions target live edges, insertions are genuinely new
+        live = set(map(tuple, undirected_edges(g)[0].tolist()))
+        assert all(tuple(e) in live for e in d.deletions.tolist())
+        assert all(tuple(e) not in live for e in d.insertions.tolist())
+        g = apply_delta(g, d)
+        g2 = apply_delta(g2, d2)
+        assert graph_fingerprint(g) == graph_fingerprint(g2)
+    assert g.num_edges == base.num_edges  # equal churn in and out

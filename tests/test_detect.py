@@ -11,6 +11,8 @@ from repro.core import disconnected_communities, disconnected_communities_host
 from repro.graphgen import figure1_graph
 from conftest import random_graph
 
+pytestmark = pytest.mark.slow  # hypothesis suites ride the slow CI job
+
 
 @settings(max_examples=30, deadline=None)
 @given(st.integers(2, 50), st.integers(0, 10_000), st.integers(1, 6))

@@ -1,0 +1,99 @@
+"""The paper's headline guarantee as an invariant suite: after GSL-LPA
+with any splitting mode, *zero* communities are internally disconnected —
+for every backend, solo and batched, on adversarial fixtures and (when
+hypothesis is installed; marked ``slow``) on generated graphs.
+"""
+import numpy as np
+import pytest
+
+from repro.core import disconnected_communities_host
+from repro.engine import CompileCache, Engine, EngineConfig
+from repro.graphgen import (
+    erdos_renyi,
+    figure1_graph,
+    grid2d,
+    karate_club,
+    planted_partition,
+    ring_of_cliques,
+)
+from repro.core.graph import build_graph
+from conftest import random_graph
+
+BACKENDS = ("segment", "tile", "sharded")
+SPLITS = ("lp", "lpp", "bfs_host")  # the modes that promise the invariant
+
+
+def adversarial_fixtures():
+    """Graphs engineered to provoke internally-disconnected communities:
+    the paper's Figure 1 cut-vertex defection, bridge-of-cliques rings,
+    low-degree lattices, disconnected + weighted random graphs, and an
+    edgeless graph."""
+    return {
+        "figure1": figure1_graph()[0],
+        "ring_of_cliques": ring_of_cliques(6, 5),
+        "grid2d": grid2d(6),
+        "karate": karate_club()[0],
+        "disconnected_random": random_graph(64, 2.0, seed=13),
+        "weighted_random": random_graph(48, 4.0, seed=17, weighted=True),
+        "planted": planted_partition(4, 16, 0.4, 0.02, seed=5)[0],
+        "edgeless": build_graph(np.zeros((0, 2), np.int64), n=11),
+    }
+
+
+def fresh_engine(**kw):
+    return Engine(EngineConfig(**kw), cache=CompileCache())
+
+
+def assert_connected(graph, result, ctx):
+    """Invariant via the lazy helper + the host BFS oracle (Alg. 4)."""
+    assert result.check_connected(graph) == 0.0, ctx
+    flags = disconnected_communities_host(graph, result.labels)
+    assert not any(flags.values()), (ctx, flags)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("split", SPLITS)
+def test_no_disconnected_communities_fit(backend, split):
+    if backend == "sharded" and split == "lpp":
+        pytest.skip("sharded backend has no pruning split variant")
+    eng = fresh_engine(backend=backend, split=split)
+    for name, g in adversarial_fixtures().items():
+        assert_connected(g, eng.fit(g), (backend, split, name))
+
+
+@pytest.mark.parametrize("backend", ("segment", "tile"))
+@pytest.mark.parametrize("split", SPLITS)
+def test_no_disconnected_communities_fit_many(backend, split):
+    graphs = list(adversarial_fixtures().values())
+    eng = fresh_engine(backend=backend, split=split)
+    results = eng.fit_many(graphs)
+    for i, (name, g) in enumerate(adversarial_fixtures().items()):
+        assert_connected(g, results[i], (backend, split, name))
+
+
+def test_adversarial_warm_start_still_repairs():
+    """Figure 1/2: warm-starting from the internally-disconnected
+    assignment (vertex 3 defected to C2) must still come out clean —
+    Split-Last runs regardless of where propagation started."""
+    g, _before, after = figure1_graph()
+    for backend in ("segment", "tile"):
+        for split in SPLITS:
+            eng = fresh_engine(backend=backend, split=split)
+            res = eng.fit(g, init_labels=after)
+            assert_connected(g, res, (backend, split))
+            (res_b,) = eng.fit_many([g], init_labels=[after])
+            assert np.array_equal(res_b.labels, res.labels)
+
+
+def test_split_none_can_violate_the_invariant():
+    """Sanity check that the suite can fail: plain LPA (split='none') on
+    the Figure 1 graph, seeded from the defected assignment, keeps C1
+    internally disconnected — exactly what Split-Last exists to fix."""
+    g, _before, after = figure1_graph()
+    res = fresh_engine(split="none").fit(g, init_labels=after)
+    assert res.check_connected(g) > 0.0
+
+
+# The hypothesis-generated half of this suite lives in
+# tests/test_invariants_props.py (module-level importorskip must not
+# take these deterministic fixtures down with it).

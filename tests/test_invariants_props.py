@@ -1,0 +1,56 @@
+"""Hypothesis half of the invariant suite (see tests/test_invariants.py):
+the zero-internally-disconnected-communities guarantee on *generated*
+graphs, across backends and split modes.  Marked ``slow`` — the dedicated
+CI job runs ``-m slow`` with hypothesis installed; the default run skips
+cleanly when it is absent.
+"""
+import numpy as np
+import pytest
+
+from repro.core.graph import build_graph
+from repro.engine import Engine, EngineConfig
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+pytestmark = pytest.mark.slow
+
+SPLITS = ("lp", "lpp", "bfs_host")
+
+# Module-level engines: every example reuses the same pow2-bucketed
+# compiled plans, so the suite pays trace+compile once per (backend,
+# split), not once per generated graph.
+_ENGINES = {(be, sp): Engine(EngineConfig(backend=be, split=sp))
+            for be in ("segment", "tile") for sp in SPLITS}
+
+
+@st.composite
+def edge_lists(draw):
+    n = draw(st.integers(min_value=2, max_value=48))
+    m = draw(st.integers(min_value=0, max_value=4 * n))
+    edges = draw(st.lists(
+        st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+        min_size=m, max_size=m))
+    return n, np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(edge_lists())
+def test_property_no_disconnected_communities(ne):
+    n, edges = ne
+    g = build_graph(edges, n=n)
+    for (be, sp), eng in _ENGINES.items():
+        res = eng.fit(g)
+        assert res.check_connected(g) == 0.0, (be, sp)
+
+
+@settings(max_examples=25, deadline=None)
+@given(edge_lists())
+def test_property_batched_matches_solo_and_stays_connected(ne):
+    n, edges = ne
+    g = build_graph(edges, n=n)
+    eng = _ENGINES[("segment", "lp")]
+    (batched,) = eng.fit_many([g])
+    solo = eng.fit(g)
+    assert np.array_equal(batched.labels, solo.labels)
+    assert batched.check_connected(g) == 0.0

@@ -1,0 +1,221 @@
+"""Streaming re-detection: batched warm-start parity, the engine's
+warm-start cache, and StreamSession semantics.
+
+The central parity obligation of the streaming path: for the batch-capable
+backends and every split mode, warm batched re-detection over applied
+deltas — ``fit_many(posts, init_labels=prev, init_active=frontiers)[i]``
+— must be bit-identical to the solo warm ``fit(posts[i],
+init_labels=prev[i], init_active=frontiers[i])``.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (
+    GraphDelta,
+    affected_frontier,
+    apply_delta,
+    disconnected_fraction,
+)
+from repro.engine import CompileCache, Engine, EngineConfig
+from repro.graphgen import erdos_renyi, evolving_sequence
+from repro.launch.stream import StreamSession
+
+BATCH_BACKENDS = ("segment", "tile")
+SPLITS = ("none", "lp", "lpp", "bfs_host")
+
+
+def fresh_engine(**kw):
+    return Engine(EngineConfig(**kw), cache=CompileCache())
+
+
+def make_stream_mix(sizes=(90, 60, 120), rounds=2, delta_edges=3):
+    """Per-stream (base, deltas) traces of mixed sizes."""
+    return [evolving_sequence(n, 4.0, rounds, delta_edges, seed=40 + i)
+            for i, n in enumerate(sizes)]
+
+
+# --- the warm batched parity suite (the PR's acceptance bar) ---
+
+@pytest.mark.parametrize("backend", BATCH_BACKENDS)
+@pytest.mark.parametrize("split", SPLITS)
+def test_fit_many_warm_delta_parity(backend, split):
+    """Warm batched re-detection over applied deltas is bit-identical to
+    a solo warm fit on each post-delta graph — for every round of the
+    trace, labels carried forward."""
+    traces = make_stream_mix()
+    eng = fresh_engine(backend=backend, split=split)
+    prev = [eng.fit(base).labels for base, _ in traces]
+    graphs = [base for base, _ in traces]
+
+    for r in range(len(traces[0][1])):
+        deltas = [ds[r] for _, ds in traces]
+        graphs = [apply_delta(g, d) for g, d in zip(graphs, deltas)]
+        fronts = [affected_frontier(d, g.n)
+                  for d, g in zip(deltas, graphs)]
+        batched = eng.fit_many(graphs, init_labels=prev, init_active=fronts)
+        for i, g in enumerate(graphs):
+            solo = eng.fit(g, init_labels=prev[i], init_active=fronts[i])
+            assert np.array_equal(batched[i].labels, solo.labels), \
+                (backend, split, r, i)
+            assert batched[i].lpa_iterations == solo.lpa_iterations
+            assert batched[i].split_iterations == solo.split_iterations
+            assert batched[i].warm_started and solo.warm_started
+            if split != "none":
+                assert float(disconnected_fraction(
+                    g, jnp.asarray(batched[i].labels))) == 0.0
+        prev = [res.labels for res in batched]
+
+
+def test_fit_many_mixed_warm_and_cold_members():
+    """None entries in init_labels/init_active stay cold members; parity
+    holds member-by-member."""
+    g1, g2 = erdos_renyi(80, 4.0, seed=1), erdos_renyi(95, 4.0, seed=2)
+    eng = fresh_engine()
+    warm1 = eng.fit(g1).labels
+    batched = eng.fit_many([g1, g2], init_labels=[warm1, None])
+    assert batched[0].warm_started and not batched[1].warm_started
+    assert np.array_equal(batched[0].labels,
+                          eng.fit(g1, init_labels=warm1).labels)
+    assert np.array_equal(batched[1].labels, eng.fit(g2).labels)
+
+
+# --- warm-start cache regressions ---
+
+def test_warm_cache_hits_and_misses_on_structural_change():
+    """A delta changes the fingerprint -> no warm start until that exact
+    structure has been fitted once; re-fits of either structure hit."""
+    base = erdos_renyi(70, 4.0, seed=5)
+    post = apply_delta(base, GraphDelta.make(insert=[[0, 9], [0, 11]]))
+    eng = fresh_engine(warm_start="auto")
+    assert not eng.fit(base).warm_started
+    assert eng.fit(base).warm_started          # same structure -> hit
+    assert not eng.fit(post).warm_started      # delta -> structural miss
+    assert eng.fit(post).warm_started          # post structure now cached
+    assert eng.fit(base).warm_started          # old entry still alive
+
+
+def test_warm_cache_applies_to_fit_many_members():
+    graphs = [erdos_renyi(60, 4.0, seed=i) for i in range(3)]
+    eng = fresh_engine(warm_start="auto")
+    first = eng.fit_many(graphs)
+    assert not any(r.warm_started for r in first)
+    second = eng.fit_many(graphs)
+    assert all(r.warm_started for r in second)
+    oracle = fresh_engine()
+    for g, f, s in zip(graphs, first, second):
+        # auto-warm member == explicit solo warm start from the same labels
+        assert np.array_equal(
+            s.labels, oracle.fit(g, init_labels=f.labels).labels)
+
+
+def test_stale_labels_shape_mismatch_rejected():
+    """Labels from the pre-delta graph must not silently truncate/pad
+    when the vertex count changed — loud ValueError instead."""
+    g = erdos_renyi(50, 4.0, seed=3)
+    grown = apply_delta(g, GraphDelta.make(insert=[[0, 55]]))
+    eng = fresh_engine()
+    stale = eng.fit(g).labels
+    with pytest.raises(ValueError, match="stale"):
+        eng.fit(grown, init_labels=stale)
+    with pytest.raises(ValueError, match=r"init_labels\[1\]"):
+        eng.fit_many([g, grown], init_labels=[stale, stale])
+    with pytest.raises(ValueError):
+        eng.fit(g, init_labels=np.full(g.n, g.n + 2))       # out of range
+    with pytest.raises(ValueError):
+        eng.fit(g, init_active=np.ones(g.n - 1, dtype=bool))  # bad mask
+    with pytest.raises(ValueError):
+        eng.fit_many([g, grown], init_labels=[stale])       # wrong length
+
+
+def test_frontier_without_warm_labels_degrades_to_full_cold_fit():
+    """Regression: a frontier seed is only meaningful relative to warm
+    labels — with none resolved (explicit None, or an auto-cache miss
+    after eviction) it must be dropped, not restrict a cold sweep."""
+    g = erdos_renyi(60, 4.0, seed=21)
+    front = np.zeros(g.n, dtype=bool)
+    front[:3] = True
+    ref = fresh_engine().fit(g)
+
+    res = fresh_engine().fit(g, init_active=front)
+    assert not res.warm_started
+    assert np.array_equal(res.labels, ref.labels)
+
+    eng = fresh_engine(warm_start="auto", warm_cache_size=1)
+    eng.fit(g)
+    eng.fit(erdos_renyi(70, 4.0, seed=22))    # evicts g's cache entry
+    res = eng.fit(g, init_active=front)       # miss -> full cold detect
+    assert not res.warm_started
+    assert np.array_equal(res.labels, ref.labels)
+
+    batched = fresh_engine().fit_many([g], init_active=[front])
+    assert np.array_equal(batched[0].labels, ref.labels)
+
+
+def test_warm_cache_eviction_is_bounded():
+    """A long session over many distinct structures never grows the
+    cache beyond warm_cache_size (LRU eviction)."""
+    eng = fresh_engine(warm_start="auto", warm_cache_size=3)
+    graphs = [erdos_renyi(40 + 2 * i, 3.0, seed=i) for i in range(8)]
+    for g in graphs:
+        eng.fit(g)
+        assert eng.stats()["warm_entries"] <= 3
+    stats = eng.stats()
+    assert stats["warm_capacity"] == 3 and stats["warm_entries"] == 3
+    assert eng.fit(graphs[-1]).warm_started        # most recent survives
+    assert not eng.fit(graphs[0]).warm_started     # oldest evicted
+    with pytest.raises(ValueError):
+        EngineConfig(warm_cache_size=0)
+
+
+# --- StreamSession ---
+
+def test_stream_session_update_many_matches_solo_warm_fits():
+    traces = make_stream_mix(sizes=(70, 50), rounds=2)
+    eng = fresh_engine()
+    oracle = fresh_engine()
+
+    with StreamSession(eng, max_batch=8) as sess:
+        added = sess.add_many({i: base for i, (base, _) in enumerate(traces)})
+        ref_graphs = [base for base, _ in traces]
+        ref_labels = [oracle.fit(g).labels for g in ref_graphs]
+        for i in range(len(traces)):
+            assert np.array_equal(added[i].labels, ref_labels[i])
+
+        for r in range(2):
+            deltas = {i: ds[r] for i, (_, ds) in enumerate(traces)}
+            results = sess.update_many(deltas)
+            for i, (_, ds) in enumerate(traces):
+                ref_graphs[i] = apply_delta(ref_graphs[i], ds[r])
+                front = affected_frontier(ds[r], ref_graphs[i].n)
+                ref = oracle.fit(ref_graphs[i], init_labels=ref_labels[i],
+                                 init_active=front)
+                ref_labels[i] = ref.labels
+                assert results[i].warm_started
+                assert np.array_equal(results[i].labels, ref.labels), (r, i)
+                assert np.array_equal(sess.labels(i), ref.labels)
+
+        stats = sess.stats()
+        assert stats["streams"] == 2 and stats["updates"] == 4
+        assert stats["warm_updates"] == 4
+        assert 0.0 < stats["mean_frontier_frac"] < 1.0
+
+
+def test_stream_session_handles_vertex_growth_and_cold_mode():
+    base, _ = evolving_sequence(40, 4.0, 1, 2, seed=9)
+    grow = GraphDelta.make(insert=[[0, 45], [45, 46]])
+    with StreamSession(fresh_engine(), max_batch=4) as sess:
+        sess.add("g", base)
+        res = sess.update("g", grow)
+        assert sess.graph("g").n == 47 and len(res.labels) == 47
+        assert res.warm_started
+    with StreamSession(fresh_engine(), warm=False) as cold:
+        cold.add("g", base)
+        res = cold.update("g", grow)
+        assert not res.warm_started
+        assert cold.stats()["warm_updates"] == 0
+    with pytest.raises(ValueError):
+        with StreamSession(fresh_engine()) as sess:
+            sess.add("g", base)
+            sess.add("g", base)
