@@ -1,0 +1,131 @@
+"""Ingestion throughput: parse / preprocess / CSR-cache-hit rates.
+
+Generates a deterministic mid-size edge list (seeded RMAT-style power
+law, so the file bytes — and therefore the CSR store key — are stable
+across runs), writes it in both supported formats, and measures:
+
+  * ``parse_mtx`` / ``parse_snap``   chunked text -> raw EdgeList (edges/s)
+  * ``preprocess``                   §4.1 cleaning passes (edges/s)
+  * ``ingest_cold``                  full load_graph with ``force=True``
+                                     (parse + preprocess + build + save)
+  * ``ingest_hit``                   load_graph on a warm store (content
+                                     hash + mmap read, no parsing)
+
+Acceptance bar (asserted, JSON artifact in CI): the cache-hit load is
+>= 10x faster than the text parse alone — the store must make repeat
+loads effectively free relative to parsing.
+
+    PYTHONPATH=src python benchmarks/bench_io_ingest.py [out.json]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+import numpy as np
+
+from common import emit
+
+from repro.io import (
+    PreprocessOptions,
+    load_graph,
+    parse_mtx,
+    parse_snap,
+    preprocess,
+    write_mtx,
+    write_snap,
+)
+
+SCALE_VERTICES = 1 << 15
+UNDIRECTED_EDGES = 250_000
+REPEATS = 3
+HIT_SPEEDUP_FLOOR = 10.0
+
+
+def make_edges() -> tuple[np.ndarray, int]:
+    """Deterministic power-law-ish edge list (stable file bytes)."""
+    rng = np.random.default_rng(42)
+    n = SCALE_VERTICES
+    # heavy-tailed endpoints: squash uniform^2 toward low ids
+    u = (rng.random(UNDIRECTED_EDGES) ** 2 * n).astype(np.int64)
+    v = (rng.random(UNDIRECTED_EDGES) ** 2 * n).astype(np.int64)
+    return np.stack([u, v], axis=1), n
+
+
+def median_time(fn, repeats: int = REPEATS) -> float:
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return sorted(times)[len(times) // 2]
+
+
+def main() -> None:
+    out_path = sys.argv[1] if len(sys.argv) > 1 else "io_ingest.json"
+    edges, n = make_edges()
+    workdir = Path(tempfile.mkdtemp(prefix="bench-io-"))
+    cache_dir = os.environ.get("REPRO_GRAPH_CACHE",
+                               str(workdir / "csr-cache"))
+    mtx = workdir / "bench_ingest.mtx"
+    snap = workdir / "bench_ingest.snap.txt"
+    write_mtx(mtx, edges, n=n, symmetric=True)
+    write_snap(snap, edges)
+    raw_entries = len(edges)
+
+    rows = []
+
+    def add(bench: str, seconds: float, edge_count: int, **extra):
+        rows.append({"bench": bench, "seconds": seconds,
+                     "edges_per_s": round(edge_count / max(seconds, 1e-9)),
+                     **extra})
+
+    parse_mtx_s = median_time(lambda: parse_mtx(mtx))
+    add("parse_mtx", parse_mtx_s, raw_entries,
+        file_mb=round(mtx.stat().st_size / 1e6, 1))
+    parse_snap_s = median_time(lambda: parse_snap(snap))
+    add("parse_snap", parse_snap_s, raw_entries,
+        file_mb=round(snap.stat().st_size / 1e6, 1))
+
+    raw = parse_mtx(mtx)
+    pre_s = median_time(lambda: preprocess(raw, PreprocessOptions()))
+    add("preprocess", pre_s, raw.num_edges)
+
+    cold_s = median_time(lambda: load_graph(
+        mtx, cache_dir=cache_dir, force=True))
+    add("ingest_cold", cold_s, raw_entries)
+
+    hit_reports = []
+
+    def hit():
+        _, rep = load_graph(mtx, cache_dir=cache_dir, return_report=True)
+        hit_reports.append(rep)
+
+    hit_s = median_time(hit)
+    assert all(r.cache_hit for r in hit_reports), \
+        "warm loads missed the CSR store"
+    speedup = parse_mtx_s / max(hit_s, 1e-9)
+    add("ingest_hit", hit_s, raw_entries,
+        speedup_vs_parse=round(speedup, 1))
+
+    emit(rows, "io_ingest")
+    with open(out_path, "w") as f:
+        json.dump(rows, f, indent=2)
+    print(f"[bench-io-ingest] wrote {out_path}")
+
+    assert speedup >= HIT_SPEEDUP_FLOOR, (
+        f"CSR cache hit ({hit_s * 1e3:.1f}ms) is only {speedup:.1f}x the "
+        f"parse ({parse_mtx_s * 1e3:.1f}ms); floor is "
+        f"{HIT_SPEEDUP_FLOOR:.0f}x")
+    print(f"[bench-io-ingest] cache hit {speedup:.0f}x faster than parse "
+          f"({raw_entries} raw entries): OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""GSL-LPA reproduction: fast label propagation with connected communities.
+
+Top-level convenience surface (lazy — importing :mod:`repro` stays
+cheap; jax and the engine load on first attribute access):
+
+    from repro import Engine, EngineConfig, load_graph, datasets
+
+    eng = Engine(EngineConfig(backend="auto"))
+    result = eng.fit("com-orkut.mtx")          # parse-once file ingest
+    result = eng.fit(datasets.get("web_rmat"))  # registry lookup
+
+Submodules keep their own focused surfaces: :mod:`repro.core` (the
+algorithm), :mod:`repro.engine` (execution strategies + caches),
+:mod:`repro.io` (real-graph ingestion), :mod:`repro.graphgen`
+(synthetic suites), :mod:`repro.launch` (CLIs).
+"""
+from __future__ import annotations
+
+_LAZY = {
+    # engine surface
+    "Engine": ("repro.engine", "Engine"),
+    "EngineConfig": ("repro.engine", "EngineConfig"),
+    "DetectionResult": ("repro.engine", "DetectionResult"),
+    # core graph + deltas
+    "Graph": ("repro.core.graph", "Graph"),
+    "build_graph": ("repro.core.graph", "build_graph"),
+    "graph_fingerprint": ("repro.core.graph", "graph_fingerprint"),
+    "GraphDelta": ("repro.core.delta", "GraphDelta"),
+    "apply_delta": ("repro.core.delta", "apply_delta"),
+    "apply_delta_patch": ("repro.core.delta", "apply_delta_patch"),
+    "affected_frontier": ("repro.core.delta", "affected_frontier"),
+    # facades
+    "gsl_lpa": ("repro.core.gsl", "gsl_lpa"),
+    "gve_lpa": ("repro.core.gsl", "gve_lpa"),
+    "modularity": ("repro.core.modularity", "modularity"),
+    # io / ingestion
+    "load_graph": ("repro.io.store", "load_graph"),
+    "PreprocessOptions": ("repro.io.preprocess", "PreprocessOptions"),
+    "CsrStore": ("repro.io.store", "CsrStore"),
+    "datasets": ("repro.io", "datasets"),
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name: str):
+    try:
+        module, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module 'repro' has no attribute {name!r}") \
+            from None
+    import importlib
+    value = getattr(importlib.import_module(module), attr)
+    globals()[name] = value  # cache: next access skips the import
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

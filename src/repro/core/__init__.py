@@ -4,6 +4,7 @@ from repro.core.delta import (  # noqa: F401
     GraphDelta,
     affected_frontier,
     apply_delta,
+    apply_delta_patch,
     undirected_edges,
 )
 from repro.core.graph import Graph, build_graph, graph_fingerprint  # noqa: F401

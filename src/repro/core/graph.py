@@ -105,12 +105,27 @@ def build_graph(edges: np.ndarray, weights: np.ndarray | None = None,
     kdeg = np.zeros(n, dtype=np.float64)
     np.add.at(kdeg, usrc, wsum)
 
-    return Graph(
+    graph = Graph(
         n=int(n), m_pad=int(m_pad), num_edges=int(num_edges),
         row_ptr=jnp.asarray(row_ptr),
         src=jnp.asarray(src), dst=jnp.asarray(dst), wgt=jnp.asarray(wgt),
         edge_mask=jnp.asarray(mask), kdeg=jnp.asarray(kdeg, dtype=jnp.float32),
     )
+    # Fingerprint eagerly while the CSR is still host memory: every later
+    # graph_fingerprint() (warm-cache lookups, StreamSession bookkeeping)
+    # is then a dict read instead of a device->host copy + CRC.
+    _set_fingerprint(graph, row_ptr, dst)
+    return graph
+
+
+def _set_fingerprint(graph: Graph, row_ptr: np.ndarray,
+                     dst: np.ndarray) -> None:
+    """Attach the structural fingerprint from host-side CSR arrays."""
+    import zlib
+    fp = (graph.n, graph.num_edges,
+          zlib.crc32(np.ascontiguousarray(row_ptr).tobytes()),
+          zlib.crc32(np.ascontiguousarray(dst).tobytes()))
+    object.__setattr__(graph, "_fingerprint", fp)
 
 
 def graph_fingerprint(graph: Graph) -> tuple:

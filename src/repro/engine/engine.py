@@ -48,6 +48,22 @@ from repro.engine.registry import (
 )
 
 
+def _as_graph(graph) -> Graph:
+    """Accept a Graph or a path to a graph file (mtx / SNAP edge list).
+
+    Paths go through :func:`repro.io.load_graph` — first fit of a file
+    parses + caches the CSR on disk, later fits (any process) mmap it
+    back.  Imported lazily: the io layer is optional on the hot path.
+    """
+    if isinstance(graph, Graph):
+        return graph
+    if isinstance(graph, str) or hasattr(graph, "__fspath__"):
+        from repro.io import load_graph
+        return load_graph(graph)
+    raise TypeError(f"fit expects a Graph or a graph-file path, got "
+                    f"{type(graph).__name__}")
+
+
 def _compact_host(labels: np.ndarray) -> tuple[np.ndarray, int]:
     """Dense [0, K) relabeling, host-side (same rank order as
     ``split.compact_labels``, but shape-polymorphic for free)."""
@@ -156,9 +172,14 @@ class Engine:
 
     # --- solo fit ---
 
-    def fit(self, graph: Graph, init_labels=None, init_active=None, *,
+    def fit(self, graph, init_labels=None, init_active=None, *,
             backend: str | None = None) -> DetectionResult:
         """Detect communities; returns a unified :class:`DetectionResult`.
+
+        ``graph`` may be a :class:`Graph` or a path to a graph file
+        (``.mtx`` / SNAP edge list): paths route through
+        :func:`repro.io.load_graph`, so the parse is paid once per file
+        content and later fits mmap the cached CSR.
 
         ``init_labels``: optional (n,) vertex-id-valued initial assignment
         (warm start / incremental re-detection).  ``init_active``:
@@ -168,6 +189,7 @@ class Engine:
         warm labels (see ``_resolve_warm``).  ``backend`` overrides the
         configured strategy for this call only.
         """
+        graph = _as_graph(graph)
         fp = self._auto_fp(graph)
         init_labels, init_active, warm_started = self._resolve_warm(
             graph, init_labels, init_active, fp, "init_labels")
@@ -263,7 +285,7 @@ class Engine:
         pro rata by each graph's share of packed work (vertices + edges);
         compaction and the host BFS split are timed per graph.
         """
-        graphs = list(graphs)
+        graphs = [_as_graph(g) for g in graphs]
         if not graphs:
             return []
         cfg = self.config

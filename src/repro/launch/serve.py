@@ -77,7 +77,8 @@ def serve(arch: str, reduced: bool = True, batch: int = 4,
 def serve_communities(num_requests: int = 24, backend: str = "auto",
                       size_classes=(150, 400, 900), avg_degree: float = 6.0,
                       seed: int = 0, max_batch: int = 8,
-                      batch_timeout_ms: float = 2.0):
+                      batch_timeout_ms: float = 2.0,
+                      graph_path: str | None = None):
     """Drive a community-detection request stream through the scheduler.
 
     Requests (random graphs drawn from a few size classes — a traffic
@@ -98,10 +99,26 @@ def serve_communities(num_requests: int = 24, backend: str = "auto",
     eng = Engine(EngineConfig(backend=backend))
     rng = np.random.default_rng(seed)
     # generation stays outside the timed region: request timers measure
-    # serving latency, not graphgen
-    graphs = [erdos_renyi(int(rng.choice(size_classes)), avg_degree,
-                          seed=int(rng.integers(1 << 30)))
-              for _ in range(num_requests)]
+    # serving latency, not graphgen (nor file ingest — a real graph is
+    # loaded once through the parse-once CSR store up front)
+    if graph_path is not None:
+        from repro.io import load_graph
+        real, rep = load_graph(graph_path, return_report=True)
+        print(f"[serve-communities] serving {graph_path}: n={real.n} "
+              f"m={real.num_edges} "
+              f"({'CSR cache hit' if rep.cache_hit else 'ingested'})",
+              flush=True)
+        graphs = [real] * num_requests
+        # Batching k copies of one real graph would pack k disjoint-union
+        # replicas of its CSR into a single device dispatch — k times the
+        # memory of a solo fit, on exactly the files big enough to care —
+        # while measuring nothing a mixed stream would.  Dispatch solo;
+        # repeat fits still exercise the compile + warm caches.
+        max_batch = 1
+    else:
+        graphs = [erdos_renyi(int(rng.choice(size_classes)), avg_degree,
+                              seed=int(rng.integers(1 << 30)))
+                  for _ in range(num_requests)]
 
     batcher = MicroBatcher(eng, max_batch=max_batch,
                            batch_timeout_ms=batch_timeout_ms,
@@ -235,6 +252,10 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--graph", default=None, metavar="PATH",
+                    help="communities mode: serve a real graph file "
+                         "(.mtx / SNAP edge list; parse-once CSR cache) "
+                         "instead of the synthetic traffic mix")
     ap.add_argument("--backend", default="auto")
     ap.add_argument("--max-batch", type=int, default=8,
                     help="largest request batch per device dispatch")
@@ -251,7 +272,8 @@ def main() -> None:
     if a.mode == "communities":
         serve_communities(num_requests=a.requests, backend=a.backend,
                           max_batch=a.max_batch,
-                          batch_timeout_ms=a.batch_timeout_ms)
+                          batch_timeout_ms=a.batch_timeout_ms,
+                          graph_path=a.graph)
     elif a.mode == "streaming":
         serve_streaming(num_streams=a.streams, rounds=a.rounds,
                         delta_edges=a.delta_edges, backend=a.backend,

@@ -26,7 +26,12 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.delta import GraphDelta, affected_frontier, apply_delta
+from repro.core.delta import (
+    GraphDelta,
+    affected_frontier,
+    apply_delta,
+    apply_delta_patch,
+)
 from repro.core.graph import Graph
 from repro.launch.microbatch import MicroBatcher, Submission
 
@@ -119,7 +124,13 @@ class StreamSession:
         graphs, warm_state = {}, {}
         for sid, delta in deltas.items():
             st = self.streams[sid]
-            post = apply_delta(st.graph, delta)
+            # Tiny deltas (the streaming norm) take the splice patch —
+            # bit-identical to the rebuild, without the O(m log m) sort;
+            # heavy churn falls back to the vectorized rebuild, which
+            # wins once most rows need touching anyway.
+            small = len(delta.touched_vertices()) < 0.25 * max(st.graph.n, 1)
+            post = (apply_delta_patch if small else apply_delta)(
+                st.graph, delta)
             init = act = None
             if self.warm and st.labels is not None:
                 init = st.labels

@@ -1,0 +1,116 @@
+"""apply_delta_patch: splice-based CSR patch, bit-parity with apply_delta."""
+import numpy as np
+import pytest
+
+from repro.core.delta import (
+    GraphDelta,
+    apply_delta,
+    apply_delta_patch,
+    undirected_edges,
+)
+from repro.core.graph import build_graph, graph_fingerprint
+from conftest import random_graph
+
+FIELDS = ("row_ptr", "src", "dst", "wgt", "edge_mask", "kdeg")
+
+
+def assert_bit_identical(a, b, ctx=""):
+    assert (a.n, a.m_pad, a.num_edges) == (b.n, b.m_pad, b.num_edges), ctx
+    for f in FIELDS:
+        x, y = np.asarray(getattr(a, f)), np.asarray(getattr(b, f))
+        assert x.dtype == y.dtype, (ctx, f)
+        assert np.array_equal(x, y), (ctx, f)
+    assert graph_fingerprint(a) == graph_fingerprint(b), ctx
+
+
+def test_patch_insert_delete_parity():
+    g = build_graph(np.array([[0, 1], [1, 2], [2, 3], [3, 0]]), n=5)
+    d = GraphDelta.make(insert=[[0, 2], [1, 4]], delete=[[2, 3]])
+    assert_bit_identical(apply_delta(g, d), apply_delta_patch(g, d))
+
+
+def test_patch_weight_merge_parity():
+    """Merged weights accumulate float64 in build_graph's add order."""
+    g = build_graph(np.array([[0, 1], [1, 2]]),
+                    np.array([0.1, 0.2], np.float32), n=3)
+    # duplicate insertions of an existing edge: orig + ins1 + ins2 order
+    d = GraphDelta.make(insert=[[1, 0], [0, 1], [1, 2]],
+                        weights=[0.3, 0.7, 0.111])
+    assert_bit_identical(apply_delta(g, d), apply_delta_patch(g, d))
+
+
+def test_patch_delete_then_reinsert_starts_fresh():
+    g = build_graph(np.array([[0, 1], [1, 2]]),
+                    np.array([5.0, 1.0], np.float32), n=3)
+    d = GraphDelta.make(insert=[[0, 1]], weights=[0.25], delete=[[0, 1]])
+    patched = apply_delta_patch(g, d)
+    assert_bit_identical(apply_delta(g, d), patched)
+    src = np.asarray(patched.src)[: patched.num_edges]
+    dst = np.asarray(patched.dst)[: patched.num_edges]
+    wgt = np.asarray(patched.wgt)[: patched.num_edges]
+    idx = np.flatnonzero((src == 0) & (dst == 1))[0]
+    assert wgt[idx] == np.float32(0.25)  # not 5.25: deletion wins first
+
+
+def test_patch_vertex_growth_and_out_of_range_deletes():
+    g = build_graph(np.array([[0, 1], [4, 5]]), n=10)
+    # (2, 25) keys-collides with (4, 5) under a naive (u*n+v) scheme
+    d = GraphDelta.make(insert=[[9, 12]], delete=[[2, 25]], num_vertices=11)
+    assert_bit_identical(apply_delta(g, d), apply_delta_patch(g, d))
+    assert apply_delta_patch(g, d).n == 13
+
+
+def test_patch_empty_delta_returns_input_object():
+    """The documented exception: a no-op delta skips the rebuild (which
+    would re-round sum-merged duplicate weights through float32)."""
+    g = random_graph(40, 3.0, seed=5, weighted=True)
+    assert apply_delta_patch(g, GraphDelta.make()) is g
+    grown = apply_delta_patch(g, GraphDelta.make(num_vertices=50))
+    assert grown.n == 50  # pure growth is not a no-op
+    assert_bit_identical(apply_delta(g, GraphDelta.make(num_vertices=50)),
+                         grown)
+
+
+def test_patch_shrink_rejected():
+    g = build_graph(np.array([[0, 1]]), n=4)
+    with pytest.raises(ValueError):
+        apply_delta_patch(g, GraphDelta.make(num_vertices=2))
+
+
+@pytest.mark.parametrize("weighted", (False, True))
+def test_patch_randomized_parity_sweep(weighted):
+    """Random graphs (duplicate weighted input edges on purpose — the
+    kdeg float-order adversary) x random deltas: patch == rebuild."""
+    rng = np.random.default_rng(11 + weighted)
+    for trial in range(40):
+        n = int(rng.integers(2, 50))
+        g = random_graph(n, float(rng.uniform(0.5, 6.0)),
+                         seed=int(rng.integers(1 << 30)), weighted=weighted)
+        live, _ = undirected_edges(g)
+        dels = live[rng.integers(0, len(live), size=3)].tolist() \
+            if len(live) else []
+        ins = rng.integers(0, n + 2, size=(3, 2)).tolist()
+        if dels:
+            ins.append(dels[0])  # delete + reinsert in one delta
+        if len(live):
+            ins += [live[0].tolist()] * 2  # double merge on one edge
+        iw = rng.uniform(0.05, 3.0, size=len(ins)).astype(np.float32) \
+            if weighted else None
+        d = GraphDelta.make(insert=ins, delete=dels or None, weights=iw)
+        if d.is_empty():
+            continue
+        assert_bit_identical(apply_delta(g, d), apply_delta_patch(g, d),
+                             f"trial {trial}")
+
+
+def test_patch_fingerprint_is_precomputed():
+    """The patch attaches the fingerprint from host arrays — no lazy
+    CRC recompute on first access (warm-cache lookups stay sync-free)."""
+    from unittest import mock
+    g = build_graph(np.array([[0, 1], [1, 2]]), n=3)
+    patched = apply_delta_patch(g, GraphDelta.make(insert=[[0, 2]]))
+    with mock.patch("zlib.crc32",
+                    side_effect=AssertionError("lazy recompute")):
+        fp = graph_fingerprint(patched)
+    assert fp == graph_fingerprint(apply_delta(g, GraphDelta.make(
+        insert=[[0, 2]])))

@@ -127,6 +127,22 @@ def test_warm_start_auto_keys_on_graph_fingerprint():
     assert r3.warm_started  # same structure -> warm start still applies
 
 
+def test_fingerprint_precomputed_no_recompute_on_repeat_fits():
+    """Regression: ``build_graph`` now fingerprints from the host-side
+    CSR before device transfer, so warm_start="auto" fits (and
+    StreamSession updates) never pay a device->host copy + CRC per fit.
+    A lazy recompute inside fit would call zlib.crc32 — assert it
+    doesn't."""
+    from unittest import mock
+    g = erdos_renyi(80, 4.0, seed=3)
+    eng = fresh_engine(warm_start="auto")
+    with mock.patch("zlib.crc32",
+                    side_effect=AssertionError("fingerprint recomputed")):
+        r1 = eng.fit(g)
+        r2 = eng.fit(g)
+    assert not r1.warm_started and r2.warm_started
+
+
 def test_warm_start_auto_and_explicit():
     g, _ = planted_partition(8, 30, 0.3, 0.005, seed=5)
     eng = fresh_engine(warm_start="auto")

@@ -1,0 +1,353 @@
+"""Real-graph ingestion: parsers, preprocessing, CSR store, registry.
+
+The acceptance contract this suite pins:
+  * ``load_graph(fixture)`` is bit-identical (row_ptr/src/dst/wgt) to
+    ``build_graph`` on the hand-written edge list, for both formats;
+  * the second ``load_graph`` call is a cache hit that skips parsing;
+  * ``Engine.fit`` on a loaded graph passes ``check_connected`` across
+    the segment and tile backends.
+"""
+import numpy as np
+import pytest
+
+from repro.core.graph import build_graph, graph_fingerprint
+from repro.io import (
+    CsrStore,
+    EdgeList,
+    FormatError,
+    PreprocessOptions,
+    datasets,
+    file_content_hash,
+    load_graph,
+    parse_edge_file,
+    parse_mtx,
+    parse_snap,
+    preprocess,
+    sniff_format,
+    write_mtx,
+    write_snap,
+)
+from repro.io.preprocess import connected_components
+
+from pathlib import Path
+
+FIXTURES = Path(__file__).parent / "fixtures"
+
+# the graph hand-written into toy_general.mtx / toy.snap.txt
+TOY_EDGES = np.array([[0, 1], [0, 2], [1, 2], [2, 3], [3, 4], [0, 4]])
+TOY_WEIGHTS = np.array([1.5, 2.0, 1.0, 0.5, 2.25, 1.0])
+# the graph hand-written into toy_symmetric.mtx (two bridged triangles)
+TRI_EDGES = np.array([[0, 1], [1, 2], [0, 2], [3, 4], [4, 5], [3, 5],
+                      [0, 3]])
+
+CSR_FIELDS = ("row_ptr", "src", "dst", "wgt")
+
+
+def assert_csr_identical(got, want):
+    for f in CSR_FIELDS:
+        x, y = np.asarray(getattr(got, f)), np.asarray(getattr(want, f))
+        assert x.dtype == y.dtype and np.array_equal(x, y), f
+
+
+# --- parsers ---------------------------------------------------------------
+
+def test_parse_mtx_general_weighted():
+    el = parse_mtx(FIXTURES / "toy_general.mtx")
+    assert el.n == 5 and el.num_edges == 6
+    assert np.array_equal(el.edges, TOY_EDGES)
+    assert np.array_equal(el.weights, TOY_WEIGHTS)
+    assert el.meta["field"] == "real"
+    assert el.meta["symmetry"] == "general"
+
+
+def test_parse_mtx_symmetric_pattern_mirrors():
+    el = parse_mtx(FIXTURES / "toy_symmetric.mtx")
+    assert el.n == 6 and el.weights is None
+    assert el.meta["mirrored_entries"] == 7
+    assert el.num_edges == 14  # 7 stored + 7 mirrored
+    have = {tuple(sorted(e)) for e in el.edges.tolist()}
+    assert have == {tuple(e) for e in TRI_EDGES.tolist()}
+
+
+def test_parse_snap_with_comments():
+    el = parse_snap(FIXTURES / "toy.snap.txt")
+    assert el.n == 5 and el.num_edges == 6
+    assert np.array_equal(el.edges, TOY_EDGES)
+    assert el.weights is None
+    assert el.meta["comment_lines"] == 3
+
+
+def test_parse_snap_weighted_and_one_based():
+    el = parse_snap(FIXTURES / "messy.snap.txt")
+    assert el.num_edges == 7 and el.weights is not None
+    # shifting a 0-based file with --one-based underflows to a negative
+    # id, which the parser rejects loudly instead of mangling the graph
+    with pytest.raises(FormatError):
+        parse_edge_file(FIXTURES / "toy.snap.txt", fmt="snap",
+                        one_based=True)
+
+
+def test_sniff_format():
+    assert sniff_format(FIXTURES / "toy_general.mtx") == "mtx"
+    assert sniff_format(FIXTURES / "toy.snap.txt") == "snap"
+    assert sniff_format(FIXTURES / "messy.snap.txt") == "snap"
+
+
+def test_parse_mtx_rejects_malformed(tmp_path):
+    bad = tmp_path / "bad.mtx"
+    bad.write_text("%%MatrixMarket matrix array real general\n2 2\n1\n")
+    with pytest.raises(FormatError):
+        parse_mtx(bad)
+    # rectangular coordinate data is bipartite, not an adjacency matrix:
+    # folding row and column ids into one vertex set would silently
+    # connect unrelated entities
+    rect = tmp_path / "rect.mtx"
+    rect.write_text("%%MatrixMarket matrix coordinate real general\n"
+                    "3 1000 1\n1 500 1.0\n")
+    with pytest.raises(FormatError, match="rectangular"):
+        parse_mtx(rect)
+    truncated = tmp_path / "trunc.mtx"
+    truncated.write_text(
+        "%%MatrixMarket matrix coordinate pattern general\n3 3 5\n1 2\n2 3\n")
+    with pytest.raises(FormatError):
+        parse_mtx(truncated)
+
+
+def test_chunked_parse_matches_single_block(tmp_path):
+    """Tiny block sizes force many chunk boundaries mid-file; the parse
+    must be identical to one-shot."""
+    rng = np.random.default_rng(3)
+    edges = rng.integers(0, 200, size=(500, 2))
+    w = rng.uniform(0.1, 5.0, size=500)
+    p = tmp_path / "chunky.mtx"
+    write_mtx(p, edges, w, n=200)
+    full = parse_mtx(p)
+    tiny = parse_mtx(p, block_bytes=64)
+    assert np.array_equal(full.edges, tiny.edges)
+    assert np.array_equal(full.weights, tiny.weights)
+    p2 = tmp_path / "chunky.snap.txt"
+    write_snap(p2, edges, w)
+    assert np.array_equal(parse_snap(p2).edges,
+                          parse_snap(p2, block_bytes=64).edges)
+
+
+# --- preprocessing ---------------------------------------------------------
+
+def test_preprocess_messy_stats():
+    el = parse_snap(FIXTURES / "messy.snap.txt")
+    cleaned, stats = preprocess(el, PreprocessOptions(unit_weights=False))
+    assert stats.raw_edges == 7
+    assert stats.self_loops == 1
+    assert stats.duplicates == 2     # (0,1) stored three ways
+    assert stats.edges == 4
+    assert stats.isolated_vertices == 1  # id 4 touches no edge
+    # dedup keeps the max weight of (0,1): 2.5, not the 1.0+2.5+0.5 sum
+    d = {tuple(e): w for e, w in zip(cleaned.edges.tolist(),
+                                     cleaned.weights.tolist())}
+    assert d[(0, 1)] == 2.5
+
+
+def test_preprocess_unit_weights_default():
+    el = parse_snap(FIXTURES / "messy.snap.txt")
+    cleaned, stats = preprocess(el)
+    assert cleaned.weights is None and not stats.weighted
+
+
+def test_preprocess_largest_component_compacts():
+    # two components: a path 0-1-2 and an edge 5-6; vertex 3,4 isolated
+    el = EdgeList(edges=np.array([[0, 1], [1, 2], [5, 6]]),
+                  weights=None, n=7)
+    cleaned, stats = preprocess(
+        el, PreprocessOptions(largest_component=True))
+    assert stats.component_vertices_dropped == 4  # 3, 4, 5, 6
+    # off-LCC vertices must not double-count as "isolated" after their
+    # edges are removed: only 3 and 4 touch no edge in the cleaned graph
+    assert stats.isolated_vertices == 2
+    assert cleaned.n == 3
+    assert cleaned.edges.tolist() == [[0, 1], [1, 2]]
+
+
+def test_connected_components_vectorized():
+    edges = np.array([[0, 1], [1, 2], [3, 4], [6, 5], [5, 3]])
+    comp = connected_components(edges, 8)
+    assert comp.tolist() == [0, 0, 0, 3, 3, 3, 3, 7]
+    assert connected_components(np.zeros((0, 2), np.int64), 3).tolist() \
+        == [0, 1, 2]
+
+
+# --- load_graph + CSR store (the acceptance contract) ----------------------
+
+def test_load_graph_mtx_bit_identical_and_cache_hit(tmp_path):
+    ref = build_graph(TOY_EDGES, n=5)  # §4.1 default: unit weights
+    g, rep = load_graph(FIXTURES / "toy_general.mtx",
+                        cache_dir=tmp_path, return_report=True)
+    assert not rep.cache_hit and rep.parse_seconds > 0
+    assert_csr_identical(g, ref)
+    assert graph_fingerprint(g) == graph_fingerprint(ref)
+
+    g2, rep2 = load_graph(FIXTURES / "toy_general.mtx",
+                          cache_dir=tmp_path, return_report=True)
+    assert rep2.cache_hit and rep2.parse_seconds == 0.0  # no re-parse
+    assert rep2.stats["raw_edges"] == 6  # stats replay from the entry
+    assert_csr_identical(g2, ref)
+    assert graph_fingerprint(g2) == graph_fingerprint(ref)
+
+
+def test_load_graph_snap_bit_identical(tmp_path):
+    ref = build_graph(TOY_EDGES, n=5)
+    g, rep = load_graph(FIXTURES / "toy.snap.txt", cache_dir=tmp_path,
+                        return_report=True)
+    assert_csr_identical(g, ref)
+    # both formats of the same graph build the same CSR
+    g2 = load_graph(FIXTURES / "toy_general.mtx", cache_dir=tmp_path)
+    assert_csr_identical(g2, ref)
+
+
+def test_load_graph_symmetric_mtx(tmp_path):
+    ref = build_graph(TRI_EDGES, n=6)
+    g = load_graph(FIXTURES / "toy_symmetric.mtx", cache_dir=tmp_path)
+    assert_csr_identical(g, ref)
+
+
+def test_load_graph_weighted_options_key_separately(tmp_path):
+    unit = load_graph(FIXTURES / "toy_general.mtx", cache_dir=tmp_path)
+    wopt = PreprocessOptions(unit_weights=False)
+    weighted, rep = load_graph(FIXTURES / "toy_general.mtx", wopt,
+                               cache_dir=tmp_path, return_report=True)
+    assert not rep.cache_hit  # different options -> different entry
+    assert_csr_identical(weighted, build_graph(TOY_EDGES, TOY_WEIGHTS, n=5))
+    assert not np.array_equal(np.asarray(unit.wgt),
+                              np.asarray(weighted.wgt))
+
+
+def test_load_graph_rejects_snap_only_kwargs_for_mtx(tmp_path):
+    """n / one_based are meaningless for .mtx (its header declares both)
+    — silently ignoring them while folding them into the cache key would
+    fork duplicate store entries for byte-identical graphs."""
+    with pytest.raises(ValueError, match="mtx"):
+        load_graph(FIXTURES / "toy_general.mtx", cache_dir=tmp_path, n=50)
+    with pytest.raises(ValueError, match="mtx"):
+        load_graph(FIXTURES / "toy_general.mtx", cache_dir=tmp_path,
+                   one_based=True)
+
+
+def test_load_graph_cache_keys_on_content_not_name(tmp_path):
+    src = (FIXTURES / "toy_general.mtx").read_text()
+    a = tmp_path / "a.mtx"
+    a.write_text(src)
+    cache = tmp_path / "cache"
+    _, rep1 = load_graph(a, cache_dir=cache, return_report=True)
+    renamed = tmp_path / "renamed.mtx"
+    renamed.write_text(src)
+    _, rep2 = load_graph(renamed, cache_dir=cache, return_report=True)
+    assert rep2.cache_hit and rep2.key == rep1.key  # same bytes, same entry
+    a.write_text(src.replace("1 2 1.5", "1 2 7.5"))
+    _, rep3 = load_graph(a, cache_dir=cache, return_report=True)
+    assert not rep3.cache_hit  # content changed -> re-ingest
+
+
+def test_load_graph_force_and_no_cache(tmp_path):
+    _, rep = load_graph(FIXTURES / "toy.snap.txt", cache_dir=tmp_path,
+                        return_report=True)
+    _, rep2 = load_graph(FIXTURES / "toy.snap.txt", cache_dir=tmp_path,
+                         force=True, return_report=True)
+    assert not rep2.cache_hit and rep2.parse_seconds > 0
+    _, rep3 = load_graph(FIXTURES / "toy.snap.txt", cache=False,
+                         return_report=True)
+    assert rep3.key == "" and not rep3.cache_hit
+
+
+def test_store_repairs_corrupt_entry(tmp_path):
+    _, rep = load_graph(FIXTURES / "toy.snap.txt", cache_dir=tmp_path,
+                        return_report=True)
+    store = CsrStore(tmp_path)
+    assert store.has(rep.key)
+    (store.entry_dir(rep.key) / "arrays.bin").write_bytes(b"garbage")
+    assert store.load(rep.key) is None  # corrupt entry reads as a miss
+    g = load_graph(FIXTURES / "toy.snap.txt", cache_dir=tmp_path)
+    assert_csr_identical(g, build_graph(TOY_EDGES, n=5))
+    # the re-ingest replaced the corrupt entry: next load is a hit again
+    assert store.load(rep.key) is not None
+    _, rep2 = load_graph(FIXTURES / "toy.snap.txt", cache_dir=tmp_path,
+                         return_report=True)
+    assert rep2.cache_hit
+    assert store.evict(rep.key) and not store.has(rep.key)
+
+
+def test_fingerprint_continuity_across_store(tmp_path):
+    """A cache-hit load re-attaches the saved fingerprint — no CRC
+    recompute, and warm caches keyed on it stay valid across processes."""
+    from unittest import mock
+    ref = build_graph(TOY_EDGES, n=5)
+    load_graph(FIXTURES / "toy.snap.txt", cache_dir=tmp_path)  # ingest
+    g = load_graph(FIXTURES / "toy.snap.txt", cache_dir=tmp_path)
+    with mock.patch("zlib.crc32",
+                    side_effect=AssertionError("fingerprint recomputed")):
+        assert graph_fingerprint(g) == graph_fingerprint(ref)
+
+
+def test_file_content_hash_streams(tmp_path):
+    p = tmp_path / "blob.txt"
+    p.write_bytes(b"x" * 1000)
+    import hashlib
+    assert file_content_hash(p) == hashlib.sha256(b"x" * 1000).hexdigest()
+
+
+# --- engine integration ----------------------------------------------------
+
+@pytest.mark.parametrize("backend", ("segment", "tile"))
+def test_engine_fit_loaded_graph_connected(tmp_path, backend):
+    """Acceptance: Engine.fit on a loaded real graph passes the
+    connected-communities invariant on both single-device backends."""
+    from repro.engine import Engine, EngineConfig
+    g = load_graph(FIXTURES / "toy_symmetric.mtx", cache_dir=tmp_path)
+    res = Engine(EngineConfig(backend=backend)).fit(g)
+    assert res.check_connected(g) == 0.0
+    assert res.num_communities >= 2  # the two triangles split
+
+
+def test_engine_fit_accepts_path(tmp_path):
+    from repro.engine import Engine, EngineConfig
+    eng = Engine(EngineConfig(backend="segment"))
+    res = eng.fit(str(FIXTURES / "toy_general.mtx"))
+    assert res.labels.shape == (5,)
+    with pytest.raises(TypeError):
+        eng.fit(42)
+
+
+# --- dataset registry ------------------------------------------------------
+
+def test_registry_builtins_match_suite():
+    assert {"web_rmat", "social_rmat", "road_grid", "kmer_sparse",
+            "planted"} <= set(datasets.names())
+    g = datasets.get("planted")
+    assert g.n == 1024
+    assert datasets.get("planted") is g  # memoized per process
+
+
+def test_registry_file_entries(tmp_path):
+    name = "toy_fixture_test"
+    datasets.unregister(name)
+    datasets.register_file(name, FIXTURES / "toy_general.mtx",
+                           description="fixture", cache_dir=tmp_path)
+    try:
+        g, stats = datasets.get_with_stats(name)
+        assert_csr_identical(g, build_graph(TOY_EDGES, n=5))
+        assert stats["raw_edges"] == 6
+        with pytest.raises(ValueError):
+            datasets.register_file(name, "elsewhere.mtx")
+    finally:
+        datasets.unregister(name)
+
+
+def test_registry_missing_file_and_unknown_name(tmp_path):
+    name = "missing_file_test"
+    datasets.unregister(name)
+    datasets.register_file(name, tmp_path / "nope.mtx")
+    try:
+        with pytest.raises(FileNotFoundError):
+            datasets.get(name)
+    finally:
+        datasets.unregister(name)
+    with pytest.raises(KeyError):
+        datasets.get("definitely-not-registered")

@@ -1,0 +1,115 @@
+"""Property tests: file-format round trips are bit-exact.
+
+For random edge lists across every (format x symmetry x weighting)
+variant: write the file, parse it back, run the §4.1 pipeline, and
+``build_graph`` — the CSR must be bit-identical to ``build_graph`` on
+the original in-memory edges.  Text serialisation (%.17g) must not
+perturb a single weight bit.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+pytestmark = pytest.mark.slow  # hypothesis suites ride the slow CI job
+
+from repro.core.graph import build_graph, graph_fingerprint  # noqa: E402
+from repro.io import (  # noqa: E402
+    PreprocessOptions,
+    load_graph,
+    parse_mtx,
+    parse_snap,
+    preprocess,
+    write_mtx,
+    write_snap,
+)
+
+CSR_FIELDS = ("row_ptr", "src", "dst", "wgt", "edge_mask", "kdeg")
+
+
+def assert_graph_identical(a, b):
+    assert (a.n, a.m_pad, a.num_edges) == (b.n, b.m_pad, b.num_edges)
+    for f in CSR_FIELDS:
+        x, y = np.asarray(getattr(a, f)), np.asarray(getattr(b, f))
+        assert x.dtype == y.dtype and np.array_equal(x, y), f
+    assert graph_fingerprint(a) == graph_fingerprint(b)
+
+
+# Unique canonical undirected edges (no self loops): the write side
+# stores each edge once, so duplicate-merge ambiguity is out of scope —
+# preprocessing dedup has its own unit tests.
+@st.composite
+def edge_sets(draw):
+    n = draw(st.integers(2, 40))
+    pairs = draw(st.sets(
+        st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+        min_size=1, max_size=80))
+    edges = np.array([(min(u, v), max(u, v)) for u, v in pairs
+                      if u != v], dtype=np.int64)
+    if not len(edges):
+        edges = np.array([[0, 1]], dtype=np.int64)
+    edges = np.unique(edges, axis=0)
+    return n, edges
+
+
+weight_floats = st.floats(min_value=1e-3, max_value=1e3,
+                          allow_nan=False, allow_infinity=False)
+
+
+@settings(max_examples=25, deadline=None)
+@given(edge_sets(), st.booleans(), st.booleans(), st.data())
+def test_mtx_roundtrip_bit_identical(tmp_path_factory, ne, symmetric,
+                                     weighted, data):
+    n, edges = ne
+    weights = np.array(data.draw(st.lists(
+        weight_floats, min_size=len(edges), max_size=len(edges)))) \
+        if weighted else None
+    path = tmp_path_factory.mktemp("mtx") / "g.mtx"
+    write_mtx(path, edges, weights, n=n, symmetric=symmetric)
+
+    parsed = parse_mtx(path)
+    cleaned, stats = preprocess(
+        parsed, PreprocessOptions(unit_weights=not weighted))
+    assert stats.edges == len(edges)
+    got = build_graph(cleaned.edges, cleaned.weights, n=cleaned.n)
+    want = build_graph(edges, weights, n=n)
+    assert_graph_identical(got, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(edge_sets(), st.booleans(), st.data())
+def test_snap_roundtrip_bit_identical(tmp_path_factory, ne, weighted, data):
+    n, edges = ne
+    weights = np.array(data.draw(st.lists(
+        weight_floats, min_size=len(edges), max_size=len(edges)))) \
+        if weighted else None
+    path = tmp_path_factory.mktemp("snap") / "g.snap.txt"
+    write_snap(path, edges, weights)
+
+    parsed = parse_snap(path, n=n)
+    cleaned, _ = preprocess(
+        parsed, PreprocessOptions(unit_weights=not weighted))
+    got = build_graph(cleaned.edges, cleaned.weights, n=cleaned.n)
+    want = build_graph(edges, weights, n=n)
+    assert_graph_identical(got, want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(edge_sets())
+def test_load_graph_roundtrip_through_store(tmp_path_factory, ne):
+    """End to end: write -> load_graph (cold ingest) -> load_graph
+    (cache hit) both bit-identical to build_graph on the edges."""
+    n, edges = ne
+    d = tmp_path_factory.mktemp("store")
+    path = d / "g.mtx"
+    write_mtx(path, edges, n=n, symmetric=True)
+    want = build_graph(edges, n=n)
+    cold, rep_cold = load_graph(path, cache_dir=d / "cache",
+                                return_report=True)
+    warm, rep_warm = load_graph(path, cache_dir=d / "cache",
+                                return_report=True)
+    assert not rep_cold.cache_hit and rep_warm.cache_hit
+    assert_graph_identical(cold, want)
+    assert_graph_identical(warm, want)
