@@ -141,6 +141,61 @@ def bench_delta_apply() -> list[dict]:
     return rows
 
 
+def bench_churn_crossover() -> list[dict]:
+    """Sweep delta churn to find the patch-vs-rebuild crossover.
+
+    ``StreamSession`` routes a delta through ``apply_delta_patch`` below
+    ``EngineConfig.patch_churn_threshold`` (fraction of vertices the
+    delta touches) and through the full ``apply_delta`` rebuild above
+    it.  This sweep measures both on the same deltas across churn
+    fractions and reports the first fraction where the rebuild wins —
+    the config default is set from this measurement (re-run with
+    different hardware to recalibrate).
+    """
+    from repro.core.delta import GraphDelta, apply_delta, apply_delta_patch
+    from repro.graphgen import rmat
+
+    graph = rmat(13, 8, seed=7)   # ~8k vertices, ~100k directed edges
+    rng = np.random.default_rng(1)
+    fractions = (0.02, 0.05, 0.10, 0.20, 0.35, 0.50, 0.70, 0.90)
+
+    rows, crossover = [], None
+    for frac in fractions:
+        touched = max(int(frac * graph.n), 2)
+        deltas = [GraphDelta.make(insert=rng.choice(
+            graph.n, size=(touched // 2, 2), replace=False))
+            for _ in range(3)]
+
+        def run(fn) -> float:
+            fn(graph, deltas[0])  # warm-up
+            times = []
+            for _ in range(REPEATS):
+                t0 = time.perf_counter()
+                for d in deltas:
+                    fn(graph, d)
+                times.append(time.perf_counter() - t0)
+            return sorted(times)[len(times) // 2] / len(deltas)
+
+        rebuild_s, patch_s = run(apply_delta), run(apply_delta_patch)
+        actual = float(np.mean([len(d.touched_vertices()) / graph.n
+                                for d in deltas]))
+        if crossover is None and patch_s > rebuild_s:
+            crossover = actual
+        rows.append({"bench": f"churn_{frac:.2f}", "mode": "churn_sweep",
+                     "seconds": patch_s, "churn_frac": round(actual, 3),
+                     "rebuild_seconds": rebuild_s,
+                     "patch_speedup": round(rebuild_s / patch_s, 2)})
+
+    measured = crossover if crossover is not None else 1.0
+    rows.append({"bench": "churn_crossover", "mode": "churn_sweep",
+                 "seconds": 0.0, "measured_crossover": round(measured, 3)})
+    from repro.engine import EngineConfig
+    print(f"[bench-streaming-deltas] patch-vs-rebuild crossover at "
+          f"~{measured:.0%} churn (config default "
+          f"{EngineConfig().patch_churn_threshold:.0%})")
+    return rows
+
+
 def main() -> None:
     out_path = sys.argv[1] if len(sys.argv) > 1 else "streaming_deltas.json"
     traces = build_traces()
@@ -165,6 +220,7 @@ def main() -> None:
         r["speedup_vs_cold_solo"] = round(base["seconds"] / r["seconds"], 2)
 
     rows += bench_delta_apply()
+    rows += bench_churn_crossover()
     emit(rows, "streaming_deltas")
     with open(out_path, "w") as f:
         json.dump(rows, f, indent=2)

@@ -35,9 +35,13 @@ _LAZY = {
     "modularity": ("repro.core.modularity", "modularity"),
     # io / ingestion
     "load_graph": ("repro.io.store", "load_graph"),
+    "open_graph": ("repro.io.store", "open_graph"),
     "PreprocessOptions": ("repro.io.preprocess", "PreprocessOptions"),
     "CsrStore": ("repro.io.store", "CsrStore"),
     "datasets": ("repro.io", "datasets"),
+    # out-of-core partitioned detection
+    "fit_out_of_core": ("repro.partition.ooc", "fit_out_of_core"),
+    "plan_partitions": ("repro.partition.plan", "plan_partitions"),
 }
 
 __all__ = sorted(_LAZY)

@@ -53,14 +53,24 @@ class LpaState(NamedTuple):
     delta_n: jnp.ndarray   # () int32   label changes in last iteration
 
 
-def _scan_communities(graph: Graph, labels: jnp.ndarray):
+def _scan_communities(graph: Graph, labels: jnp.ndarray,
+                      label_bound: jnp.ndarray | int | None = None):
     """Steps 1-3: per-(src, community) connecting weights via sort+segments.
 
     Returns (run_src, run_label, run_wgt, run_valid), each (m_pad,).
+
+    ``label_bound``: exclusive upper bound on real label *values*, used as
+    the padding sentinel.  Defaults to ``graph.n`` — the solo/in-core case
+    where labels are vertex ids of this very graph.  The out-of-core
+    partition path runs sweeps over compact local row spaces whose labels
+    are *global* vertex ids, so the bound there is the full graph's vertex
+    count (may be traced; one executable serves every partition).
     """
     n, m_pad = graph.n, graph.m_pad
-    # Padding edges get label sentinel n so they sort last and never match.
-    lab_dst = jnp.where(graph.edge_mask, labels[graph.dst], n).astype(jnp.int32)
+    bound = n if label_bound is None else label_bound
+    # Padding edges get the label sentinel so they sort last and never match.
+    lab_dst = jnp.where(graph.edge_mask, labels[graph.dst],
+                        bound).astype(jnp.int32)
     src = jnp.where(graph.edge_mask, graph.src, n).astype(jnp.int32)
     src_s, lab_s, wgt_s = jax.lax.sort((src, lab_dst, graph.wgt), num_keys=2)
 
@@ -74,7 +84,7 @@ def _scan_communities(graph: Graph, labels: jnp.ndarray):
     run_lab = jax.ops.segment_max(lab_s, run_id, num_segments=m_pad)
     run_valid = (jax.ops.segment_max(is_start.astype(jnp.int32), run_id,
                                      num_segments=m_pad) > 0)
-    run_valid &= (run_lab < n) & (run_src < n)
+    run_valid &= (run_lab < bound) & (run_src < n)
     return run_src, run_lab, run_wgt, run_valid
 
 
@@ -97,13 +107,17 @@ def neighbors_of(graph: Graph, mask: jnp.ndarray) -> jnp.ndarray:
 
 def lpa_move(graph: Graph, labels: jnp.ndarray, active: jnp.ndarray,
              iteration: jnp.ndarray | int = 0,
+             label_bound: jnp.ndarray | int | None = None,
              ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """One synchronous LPA sweep (the paper's ``lpaMove``) over ``active``.
 
-    Returns (new_labels, changed_mask, delta_n).
+    Returns (new_labels, changed_mask, delta_n).  ``label_bound``: see
+    :func:`_scan_communities` — only the partition path passes it.
     """
     n = graph.n
-    run_src, run_lab, run_wgt, run_valid = _scan_communities(graph, labels)
+    bound = n if label_bound is None else label_bound
+    run_src, run_lab, run_wgt, run_valid = _scan_communities(graph, labels,
+                                                             label_bound)
     seg_src = jnp.where(run_valid, run_src, n - 1)  # dump invalid runs on a real id
     w = jnp.where(run_valid, run_wgt, _NEG)
 
@@ -114,7 +128,7 @@ def lpa_move(graph: Graph, labels: jnp.ndarray, active: jnp.ndarray,
     best_h = jax.ops.segment_max(jnp.where(is_best, run_h, -1), seg_src,
                                  num_segments=n)
     pick = is_best & (run_h == best_h[seg_src])
-    best_lab = jax.ops.segment_min(jnp.where(pick, run_lab, n), seg_src,
+    best_lab = jax.ops.segment_min(jnp.where(pick, run_lab, bound), seg_src,
                                    num_segments=n)
 
     # Connecting weight to the *current* community (keep unless strictly worse).
@@ -122,7 +136,7 @@ def lpa_move(graph: Graph, labels: jnp.ndarray, active: jnp.ndarray,
     cur_w = jax.ops.segment_max(jnp.where(to_cur, run_wgt, _NEG), seg_src,
                                 num_segments=n)
 
-    adopt = active & (best_lab < n) & (best_w > jnp.maximum(cur_w, 0.0))
+    adopt = active & (best_lab < bound) & (best_w > jnp.maximum(cur_w, 0.0))
     new_labels = jnp.where(adopt, best_lab.astype(labels.dtype), labels)
     changed = new_labels != labels
     delta_n = jnp.sum(changed.astype(jnp.int32))

@@ -37,17 +37,25 @@ class SplitState(NamedTuple):
 
 def _min_label_sweep(graph: Graph, comm: jnp.ndarray, labels: jnp.ndarray,
                      active: jnp.ndarray, prune: bool, shortcut: bool,
-                     voffset: jnp.ndarray | None = None):
+                     voffset: jnp.ndarray | None = None,
+                     label_bound: jnp.ndarray | int | None = None):
     """One sweep of Algorithm 1's loop body (lines 8-21), vectorised.
 
     ``voffset``: per-vertex owner offsets when labels are in per-graph
     *local* coordinates (the batched path) — the shortcut's pointer jump
     must gather at the label's global row, ``label + voffset``.
+
+    ``label_bound``: exclusive upper bound on real label values, used as
+    the no-same-community-neighbor sentinel.  Defaults to ``graph.n``;
+    the out-of-core partition path sweeps compact local row spaces whose
+    labels are *global* vertex ids and passes the full graph's vertex
+    count (traced — one executable serves every partition).
     """
     n = graph.n
+    bound = n if label_bound is None else label_bound
     same = graph.edge_mask & (comm[graph.src] == comm[graph.dst])
-    # min over same-community neighbors; sentinel n elsewhere
-    cand = jnp.where(same, labels[graph.dst], n).astype(jnp.int32)
+    # min over same-community neighbors; sentinel `bound` elsewhere
+    cand = jnp.where(same, labels[graph.dst], bound).astype(jnp.int32)
     nbr_min = jax.ops.segment_min(cand, graph.src, num_segments=n)
     new = jnp.minimum(labels, nbr_min.astype(labels.dtype))
     if prune:
@@ -94,6 +102,50 @@ def split_lp(graph: Graph, comm: jnp.ndarray, prune: bool = False,
 
 def split_lpp(graph: Graph, comm: jnp.ndarray, shortcut: bool = False):
     return split_lp(graph, comm, prune=True, shortcut=shortcut)
+
+
+@partial(jax.jit, static_argnames=("prune",))
+def min_label_sweep(graph: Graph, comm: jnp.ndarray, labels: jnp.ndarray,
+                    active: jnp.ndarray, label_bound: jnp.ndarray,
+                    prune: bool = False) -> jnp.ndarray:
+    """Partition-local split sweep: one Algorithm-1 step over a CSR slice.
+
+    The out-of-core driver (:mod:`repro.partition.ooc`) runs the §3.3
+    split phase one partition at a time: ``graph`` is a compact local
+    subgraph (partition rows followed by halo rows), ``comm`` / ``labels``
+    carry *global* community ids and split labels gathered for those rows,
+    and ``label_bound`` is the full graph's vertex count.  Because the
+    sweep is synchronous (new labels are a pure function of the pre-sweep
+    snapshot), sweeping partitions sequentially against a shared snapshot
+    and double-buffering the results is bit-identical to the in-core
+    :func:`split_lp` sweep — the cross-partition label unification is the
+    outer fixed-point loop over these sweeps.  The pointer-shortcut jump
+    needs the full label array, so it is *not* applied here; the driver
+    applies it globally after assembling the sweep (same ordering as the
+    in-core sweep body).  Returns the new labels (pre-shortcut).
+    """
+    new, _, _, _ = _min_label_sweep(graph, comm, labels, active,
+                                    prune=prune, shortcut=False,
+                                    label_bound=label_bound)
+    return new
+
+
+@jax.jit
+def min_label_wake(graph: Graph, comm: jnp.ndarray,
+                   changed: jnp.ndarray) -> jnp.ndarray:
+    """Pruning reactivation for a partition-local split sweep.
+
+    A vertex re-enters the SL-LPP worklist exactly when one of its
+    same-community neighbors changed label in the previous sweep
+    (Algorithm 1 lines 20-21).  ``changed`` holds the previous sweep's
+    global changed flags gathered to this slice's local rows; only the
+    slice's own edges are needed because the reactivation rule reads each
+    vertex's *own* neighborhood.
+    """
+    same = graph.edge_mask & (comm[graph.src] == comm[graph.dst])
+    return jax.ops.segment_max(
+        (changed[graph.dst] & same).astype(jnp.int32), graph.src,
+        num_segments=graph.n) > 0
 
 
 def split_bfs_host(graph: Graph, comm: np.ndarray) -> np.ndarray:

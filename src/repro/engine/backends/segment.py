@@ -22,8 +22,8 @@ import numpy as np
 
 from repro.core.batch import lpa_run_batched, split_lp_batched, warm_state_rows
 from repro.core.graph import Graph
-from repro.core.lpa import lpa_run
-from repro.core.split import split_lp
+from repro.core.lpa import lpa_move, lpa_run, neighbors_of
+from repro.core.split import min_label_sweep, min_label_wake, split_lp
 from repro.engine.bucketing import (
     BatchBucketKey,
     BucketKey,
@@ -41,6 +41,7 @@ from repro.engine.registry import BackendRun, BatchBackendRun, register_backend
 class SegmentBackend:
     name = "segment"
     supports_batch = True
+    supports_partition = True
 
     def plan_key(self, config: EngineConfig) -> tuple:
         return ()
@@ -130,6 +131,105 @@ class SegmentBackend:
                                                       bucket.n)
         return (g, jnp.asarray(sizes), jnp.asarray(graph_id),
                 jnp.asarray(voffset))
+
+    # --- out-of-core partition sweeps (repro.partition.ooc driver) ---
+    #
+    # One partition's edge window runs as a compact local Graph: rows
+    # [0, size) are the owned vertex range, rows [size, n_local) the
+    # halo imports (no out-edges, so they can never adopt).  Label
+    # *values* stay global vertex ids — the tie-break hash is a function
+    # of the raw value — so every sweep takes the full graph's vertex
+    # count as a traced ``label_bound`` sentinel; local row counts and
+    # edge windows are padded to one uniform per-run shape, so all
+    # partitions share a single jitted executable per stage.
+
+    def build_partition(self, config: EngineConfig):
+        prune = config.split == "lpp"
+
+        def _move(graph, labels, cand, seed, bound):
+            TRACE_LOG.record("segment:part_move")
+            new, _, _ = lpa_move(graph, labels, cand, seed,
+                                 label_bound=bound)
+            return new
+
+        def _wake(graph, changed):
+            TRACE_LOG.record("segment:part_wake")
+            return neighbors_of(graph, changed)
+
+        def _split(graph, comm, labels, active, bound):
+            TRACE_LOG.record("segment:part_split")
+            return min_label_sweep(graph, comm, labels, active, bound,
+                                   prune=prune)
+
+        def _split_wake(graph, comm, changed):
+            TRACE_LOG.record("segment:part_split_wake")
+            return min_label_wake(graph, comm, changed)
+
+        return SimpleNamespace(
+            move=jax.jit(_move), wake=jax.jit(_wake),
+            split=jax.jit(_split), split_wake=jax.jit(_split_wake),
+        )
+
+    def partition_caps(self, budget: int, d_bucket: int):
+        """(max_edges, max_vertices) per partition for a byte budget.
+
+        One resident partition costs ~12 B/edge of locally-remapped
+        window plus ~13 B/edge × pow2 padding of device CSR and ~24
+        B/row of vertex-indexed locals; halving the budget leaves the
+        LRU headroom for per-sweep transient gathers.
+        """
+        half = max(budget // 2, 1)
+        return max(half // 64, 1), max(half // 48, 8)
+
+    def partition_prepare_nbytes(self, shapes) -> int:
+        return shapes.m * 13 + (shapes.n_loc + 1) * 4 + shapes.n_loc * 4
+
+    def prepare_partition(self, resident, shapes, config: EngineConfig):
+        """Pad a resident slice to the run's uniform local-Graph shape."""
+        n_loc, m = shapes.n_loc, shapes.m
+        m_w = len(resident.src)
+        src = np.zeros(m, np.int32)
+        dst = np.zeros(m, np.int32)
+        wgt = np.zeros(m, np.float32)
+        mask = np.zeros(m, bool)
+        src[:m_w] = resident.src
+        dst[:m_w] = resident.dst
+        wgt[:m_w] = resident.wgt
+        mask[:m_w] = True
+        row_ptr = np.full(n_loc + 1, m_w, np.int32)
+        row_ptr[: resident.size + 1] = resident.row_ptr
+        g = Graph(n=n_loc, m_pad=m, num_edges=m_w,
+                  row_ptr=jnp.asarray(row_ptr), src=jnp.asarray(src),
+                  dst=jnp.asarray(dst), wgt=jnp.asarray(wgt),
+                  edge_mask=jnp.asarray(mask),
+                  kdeg=jnp.zeros(n_loc, jnp.float32))
+        return g, self.partition_prepare_nbytes(shapes)
+
+    def partition_move(self, ops_ns, inputs, labels_loc, cand_owned,
+                       seed, bound) -> np.ndarray:
+        g = inputs
+        cand = np.zeros(g.n, bool)
+        cand[: len(cand_owned)] = cand_owned
+        return np.asarray(ops_ns.move(g, jnp.asarray(labels_loc),
+                                      jnp.asarray(cand),
+                                      jnp.int32(seed), bound))
+
+    def partition_wake(self, ops_ns, inputs, changed_loc) -> np.ndarray:
+        return np.asarray(ops_ns.wake(inputs, jnp.asarray(changed_loc)))
+
+    def partition_split(self, ops_ns, inputs, comm_loc, labels_loc,
+                        active_owned, bound) -> np.ndarray:
+        g = inputs
+        active = np.zeros(g.n, bool)
+        active[: len(active_owned)] = active_owned
+        return np.asarray(ops_ns.split(g, jnp.asarray(comm_loc),
+                                       jnp.asarray(labels_loc),
+                                       jnp.asarray(active), bound))
+
+    def partition_split_wake(self, ops_ns, inputs, comm_loc,
+                             changed_loc) -> np.ndarray:
+        return np.asarray(ops_ns.split_wake(inputs, jnp.asarray(comm_loc),
+                                            jnp.asarray(changed_loc)))
 
     def run_batch(self, plan, inputs,
                   init_labels: np.ndarray | None = None,

@@ -66,6 +66,7 @@ def pad_tile_rows(nbr: np.ndarray, nw: np.ndarray, nmask: np.ndarray,
 class TileBackend:
     name = "tile"
     supports_batch = True
+    supports_partition = True
 
     def plan_key(self, config: EngineConfig) -> tuple:
         return ()
@@ -182,6 +183,114 @@ class TileBackend:
                           lpa_iterations=lpa_iters,
                           split_iterations=split_iters,
                           lpa_seconds=t1 - t0, split_seconds=t2 - t1)
+
+    # --- out-of-core partition sweeps (repro.partition.ooc driver) ---
+    #
+    # A partition's tiles hold only its *owned* rows (``shapes.rows``
+    # high), but neighbor ids index the full local row space (owned +
+    # halo), so the per-sweep ``labels_loc`` gather covers halo imports
+    # for free.  Label values are global vertex ids — the argmax hash is
+    # a function of the raw value, and the kernels' sentinel is INT32_MAX,
+    # so no label_bound plumbing is needed on this path.  Tile width is
+    # the in-core d bucket: per-row reductions run at identical widths,
+    # keeping the float sums bit-identical to the in-core tile fit.
+
+    def build_partition(self, config: EngineConfig):
+        mode = config.kernel_mode
+        prune = config.split == "lpp"
+
+        def _move(nbr, nw, nmask, labels, cand, seed):
+            TRACE_LOG.record("tile:part_move")
+            row_lab = labels[: nbr.shape[0]]
+            best_lab, best_w, cur_w = ops.label_argmax(
+                labels[nbr], nw, nmask, row_lab, seed, mode=mode)
+            adopt = cand & (best_w > jnp.maximum(cur_w, 0.0))
+            return jnp.where(adopt, best_lab.astype(jnp.int32), row_lab)
+
+        def _wake(nbr, nmask, changed):
+            TRACE_LOG.record("tile:part_wake")
+            return jnp.any(changed[nbr] & nmask, axis=1)
+
+        def _split(nbr, nmask, comm, labels, active):
+            TRACE_LOG.record("tile:part_split")
+            rows = nbr.shape[0]
+            new = ops.min_label(labels[nbr], comm[nbr], nmask,
+                                labels[:rows], comm[:rows], mode=mode)
+            if prune:
+                new = jnp.where(active, new, labels[:rows])
+            return new
+
+        def _split_wake(nbr, nmask, comm, changed):
+            TRACE_LOG.record("tile:part_split_wake")
+            rows = nbr.shape[0]
+            same = (comm[nbr] == comm[:rows, None]) & nmask
+            return jnp.any(changed[nbr] & same, axis=1)
+
+        return SimpleNamespace(
+            move=jax.jit(_move), wake=jax.jit(_wake),
+            split=jax.jit(_split), split_wake=jax.jit(_split_wake),
+        )
+
+    def partition_caps(self, budget: int, d_bucket: int):
+        """(max_edges, max_vertices) for a byte budget: the dense tiles
+        cost ~9 B/cell at ``d_bucket`` cells per row, padded ≤ 2x."""
+        half = max(budget // 2, 1)
+        return max(half // 40, 1), max(half // (18 * max(d_bucket, 1)), 8)
+
+    def partition_prepare_nbytes(self, shapes) -> int:
+        return shapes.rows * shapes.d * 9
+
+    def prepare_partition(self, resident, shapes, config: EngineConfig):
+        """Dense (rows, d) neighbor tiles of one partition's owned rows.
+
+        Same padding semantics as ``to_padded_neighbors`` (self-pointing
+        ids, zero weight, masked out), built vectorized off the local
+        window so residency setup is O(window), not a Python row loop.
+        """
+        rows, d = shapes.rows, shapes.d
+        size = resident.size
+        row_ptr = resident.row_ptr.astype(np.int64)
+        deg = row_ptr[1:] - row_ptr[:-1]
+        nbr = np.repeat(np.arange(rows, dtype=np.int32)[:, None], d, axis=1)
+        nw = np.zeros((rows, d), np.float32)
+        nmask = np.zeros((rows, d), bool)
+        if size and len(resident.dst):
+            ridx = np.repeat(np.arange(size), deg)
+            cidx = np.arange(len(resident.dst)) - np.repeat(row_ptr[:-1], deg)
+            nbr[ridx, cidx] = resident.dst
+            nw[ridx, cidx] = resident.wgt
+            nmask[ridx, cidx] = True
+        return ((jnp.asarray(nbr), jnp.asarray(nw), jnp.asarray(nmask)),
+                self.partition_prepare_nbytes(shapes))
+
+    def partition_move(self, ops_ns, inputs, labels_loc, cand_owned,
+                       seed, bound) -> np.ndarray:
+        nbr, nw, nmask = inputs
+        cand = np.zeros(nbr.shape[0], bool)
+        cand[: len(cand_owned)] = cand_owned
+        return np.asarray(ops_ns.move(nbr, nw, nmask,
+                                      jnp.asarray(labels_loc),
+                                      jnp.asarray(cand), jnp.int32(seed)))
+
+    def partition_wake(self, ops_ns, inputs, changed_loc) -> np.ndarray:
+        nbr, _nw, nmask = inputs
+        return np.asarray(ops_ns.wake(nbr, nmask, jnp.asarray(changed_loc)))
+
+    def partition_split(self, ops_ns, inputs, comm_loc, labels_loc,
+                        active_owned, bound) -> np.ndarray:
+        nbr, _nw, nmask = inputs
+        active = np.zeros(nbr.shape[0], bool)
+        active[: len(active_owned)] = active_owned
+        return np.asarray(ops_ns.split(nbr, nmask, jnp.asarray(comm_loc),
+                                       jnp.asarray(labels_loc),
+                                       jnp.asarray(active)))
+
+    def partition_split_wake(self, ops_ns, inputs, comm_loc,
+                             changed_loc) -> np.ndarray:
+        nbr, _nw, nmask = inputs
+        return np.asarray(ops_ns.split_wake(nbr, nmask,
+                                            jnp.asarray(comm_loc),
+                                            jnp.asarray(changed_loc)))
 
     # --- batched dispatch: one tile launch over the packed super-graph.
     # Labels live in per-graph *local* coordinates (the argmax tie-break

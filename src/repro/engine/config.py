@@ -39,6 +39,18 @@ class EngineConfig:
       evolving graphs; applies to ``fit`` and ``fit_many`` members
       alike); ``"off"`` always starts from singletons.  Explicit
       ``init_labels`` always wins.
+    memory_budget: resident edge-byte cap for ``Engine.fit`` (bytes, or
+      a string like ``"64MB"``).  A graph whose edge arrays exceed it is
+      detected out-of-core: partitioned into contiguous CSR slices swept
+      one-resident-at-a-time with halo-label exchange
+      (:mod:`repro.partition`) — labels bit-identical to the in-core
+      fit.  ``None`` (default) always fits in core.  Per-call override:
+      ``fit(graph, memory_budget=...)``.
+    patch_churn_threshold: streaming sessions route a delta through the
+      in-place CSR splice patch when it touches fewer than this fraction
+      of vertices, and through the full vectorized rebuild above it.
+      Default from the measured crossover on this container's CPU
+      (``bench_streaming_deltas.py --churn-sweep`` reports the sweep).
     warm_cache_size: bound on the per-engine warm-start cache (LRU over
       graph fingerprints) — keeps a long streaming session from growing
       one labels array per graph ever seen.
@@ -61,6 +73,12 @@ class EngineConfig:
     min_edge_bucket: int = 2048
     warm_start: str = "off"
     warm_cache_size: int = 64
+    memory_budget: int | str | None = None
+    # Measured: the splice patch ties the rebuild at ~20% churn on this
+    # container's CPU (3.7x faster at 2%, 2x slower at 50%) — see
+    # bench_streaming_deltas.py's churn sweep, which reports the live
+    # crossover so other hardware can recalibrate.
+    patch_churn_threshold: float = 0.20
     compute_metrics: bool = False
     exchange_every: int = 1
     kernel_mode: str = "auto"
@@ -83,6 +101,14 @@ class EngineConfig:
             raise ValueError("exchange_every must be >= 1")
         if self.warm_cache_size < 1:
             raise ValueError("warm_cache_size must be >= 1")
+        if self.memory_budget is not None:
+            from repro.partition.plan import parse_bytes
+            budget = parse_bytes(self.memory_budget)
+            if budget < 1:
+                raise ValueError("memory_budget must be >= 1 byte")
+            object.__setattr__(self, "memory_budget", budget)
+        if not 0.0 <= self.patch_churn_threshold <= 1.0:
+            raise ValueError("patch_churn_threshold must be in [0, 1]")
 
     def algo_key(self) -> tuple:
         """The hashable algorithm statics a compiled plan specialises on."""
@@ -109,6 +135,11 @@ class DetectionResult:
     # above are the batch totals attributed pro rata by work share.
     batch_size: int = 1
     batch_index: int = 0
+    # Out-of-core provenance: partition count of the fit (1 = in-core)
+    # and the driver's observability counters (peak resident bytes, halo
+    # exchange volume, partition loads) when it ran partitioned.
+    partitions: int = 1
+    ooc: dict | None = None
 
     def check_connected(self, graph) -> float:
         """Disconnected-community fraction, computed lazily and cached.

@@ -146,7 +146,7 @@ class Engine:
         return graph_fingerprint(graph) \
             if self.config.warm_start == "auto" else None
 
-    def _resolve_warm(self, graph: Graph, init_labels, init_active,
+    def _resolve_warm(self, n: int, init_labels, init_active,
                       fp: tuple | None, name: str):
         """Explicit init labels win; else consult the warm cache.
 
@@ -162,10 +162,10 @@ class Engine:
             init_labels = self._warm.get(fp)
             warm_started = init_labels is not None
         if init_active is not None:  # validate even when about to drop it
-            init_active = _check_init_active(init_active, graph.n,
+            init_active = _check_init_active(init_active, n,
                                              name.replace("labels", "active"))
         if init_labels is not None:
-            init_labels = _check_init_labels(init_labels, graph.n, name)
+            init_labels = _check_init_labels(init_labels, n, name)
         else:
             init_active = None
         return init_labels, init_active, warm_started
@@ -173,13 +173,23 @@ class Engine:
     # --- solo fit ---
 
     def fit(self, graph, init_labels=None, init_active=None, *,
-            backend: str | None = None) -> DetectionResult:
+            backend: str | None = None,
+            memory_budget: int | str | None = None) -> DetectionResult:
         """Detect communities; returns a unified :class:`DetectionResult`.
 
         ``graph`` may be a :class:`Graph` or a path to a graph file
         (``.mtx`` / SNAP edge list): paths route through
         :func:`repro.io.load_graph`, so the parse is paid once per file
         content and later fits mmap the cached CSR.
+
+        ``memory_budget`` (bytes, or ``"64MB"``-style; defaults to
+        ``config.memory_budget``) auto-routes the fit: in-core when the
+        graph's edge arrays fit the budget, otherwise out-of-core —
+        partitioned CSR slices swept one-resident-at-a-time with
+        halo-label exchange (:mod:`repro.partition`), labels
+        bit-identical to the in-core path.  For paths the routing
+        decision reads only the store entry's metadata, so a
+        bigger-than-budget file is never materialized.
 
         ``init_labels``: optional (n,) vertex-id-valued initial assignment
         (warm start / incremental re-detection).  ``init_active``:
@@ -189,12 +199,74 @@ class Engine:
         warm labels (see ``_resolve_warm``).  ``backend`` overrides the
         configured strategy for this call only.
         """
+        budget = memory_budget if memory_budget is not None \
+            else self.config.memory_budget
+        if budget is not None:
+            from repro.partition.ooc import (
+                IN_CORE_EDGE_BYTES,
+                in_core_edge_bytes,
+                open_source,
+            )
+            from repro.partition.plan import parse_bytes
+            budget = parse_bytes(budget)
+            if isinstance(graph, Graph):
+                # metadata-only routing check; build no source unless
+                # the partitioned path is actually taken
+                too_big = graph.m_pad * IN_CORE_EDGE_BYTES > budget
+                source = open_source(graph) if too_big else None
+            else:
+                source = open_source(graph)  # store-metadata handle
+                too_big = in_core_edge_bytes(source) > budget
+            if too_big:
+                return self._fit_ooc(source, budget, init_labels,
+                                     init_active, backend)
+            if source is not None:
+                # fits in core: materialize from the handle we already
+                # opened — no second content hash / store open
+                graph = source.to_graph()
         graph = _as_graph(graph)
         fp = self._auto_fp(graph)
         init_labels, init_active, warm_started = self._resolve_warm(
-            graph, init_labels, init_active, fp, "init_labels")
+            graph.n, init_labels, init_active, fp, "init_labels")
         result = self._fit_resolved(graph, init_labels, init_active,
                                     backend, warm_started)
+        if fp is not None:
+            self._warm.put(fp, result.labels)
+        return result
+
+    def _fit_ooc(self, source, budget: int, init_labels, init_active,
+                 backend: str | None) -> DetectionResult:
+        """Out-of-core partitioned fit over an array source."""
+        from repro.partition.ooc import fit_out_of_core
+        cfg = self.config
+        if cfg.compute_metrics:
+            raise ValueError(
+                "compute_metrics needs the full graph on device; compute "
+                "quality metrics separately after an out-of-core fit")
+        fp = tuple(source.fingerprint()) \
+            if cfg.warm_start == "auto" and source.fingerprint() else None
+        init_labels, init_active, warm_started = self._resolve_warm(
+            source.n, init_labels, init_active, fp, "init_labels")
+
+        run = fit_out_of_core(source, cfg, memory_budget=budget,
+                              backend=backend, cache=self.cache,
+                              init_labels=init_labels,
+                              init_active=init_active)
+        t0 = time.perf_counter()
+        labels, k = _compact_host(run.labels)
+        t_compact = time.perf_counter() - t0
+
+        result = DetectionResult(
+            labels=labels, num_communities=k, backend=run.backend,
+            lpa_iterations=run.lpa_iterations,
+            split_iterations=run.split_iterations,
+            timings={"prepare": run.plan_seconds,
+                     "propagation": run.lpa_seconds,
+                     "split": run.split_seconds, "compact": t_compact},
+            bucket=(source.n, source.num_edges), cache_hit=run.cache_hit,
+            warm_started=warm_started,
+            partitions=run.num_partitions, ooc=run.stats(),
+        )
         if fp is not None:
             self._warm.put(fp, result.labels)
         return result
@@ -295,7 +367,7 @@ class Engine:
 
         fps = [self._auto_fp(g) for g in graphs]
         resolved = [
-            self._resolve_warm(g, init_labels[i], init_active[i], fps[i],
+            self._resolve_warm(g.n, init_labels[i], init_active[i], fps[i],
                                f"init_labels[{i}]")
             for i, g in enumerate(graphs)
         ]

@@ -17,6 +17,7 @@ from repro.io import registry as datasets  # noqa: F401
 from repro.io.formats import (  # noqa: F401
     EdgeList,
     FormatError,
+    open_graph_bytes,
     parse_edge_file,
     parse_mtx,
     parse_snap,
@@ -32,8 +33,10 @@ from repro.io.preprocess import (  # noqa: F401
 )
 from repro.io.store import (  # noqa: F401
     CsrStore,
+    EntryHandle,
     IngestReport,
     default_cache_dir,
     file_content_hash,
     load_graph,
+    open_graph,
 )

@@ -29,15 +29,37 @@ Format notes:
   ``#``-comment lines, ``u v [w]`` per line, 0- or 1-based (SNAP files
   are 0-based; ``one_based=True`` shifts).  No vertex-count header —
   ``n`` is inferred as ``max_id + 1`` unless given.
+* gzip: both parsers read through :func:`open_graph_bytes`, which
+  detects the gzip magic bytes and streams the decompressed member
+  block-by-block — SuiteSparse/SNAP downloads ship compressed, and a
+  ``.mtx.gz`` never has to be unpacked on disk.
 """
 from __future__ import annotations
 
 import dataclasses
+import gzip
 from pathlib import Path
 
 import numpy as np
 
 DEFAULT_BLOCK_BYTES = 4 << 20  # 4 MiB per streamed block
+_GZIP_MAGIC = b"\x1f\x8b"
+
+
+def open_graph_bytes(path):
+    """Binary reader for a graph file, transparently gunzipping.
+
+    Detection is by magic bytes, not extension, so ``file.mtx.gz`` and a
+    misnamed ``file.mtx`` that is really gzip both work.  The gzip
+    member streams block-by-block through the same
+    :func:`_iter_blocks` path as plain files — the decompressed file is
+    never materialized.
+    """
+    with open(path, "rb") as probe:
+        magic = probe.read(2)
+    if magic == _GZIP_MAGIC:
+        return gzip.open(path, "rb")
+    return open(path, "rb")
 
 
 @dataclasses.dataclass
@@ -172,7 +194,7 @@ def parse_mtx(path, block_bytes: int = DEFAULT_BLOCK_BYTES) -> EdgeList:
     the same graph would hold.  Pattern files yield ``weights=None``.
     """
     path = Path(path)
-    with open(path, "rb") as fh:
+    with open_graph_bytes(path) as fh:
         field, symmetry, (rows, cols, nnz), _ = _read_mtx_header(fh)
         ncols = 2 if field == "pattern" else 3
         chunks, comment_lines = [], 0
@@ -221,7 +243,7 @@ def parse_snap(path, one_based: bool = False, n: int | None = None,
     """
     path = Path(path)
     chunks, comment_lines, ncols = [], 0, None
-    with open(path, "rb") as fh:
+    with open_graph_bytes(path) as fh:
         for block in _iter_blocks(fh, block_bytes):
             tokens, dropped = _tokenize(block, b"#")
             comment_lines += dropped
@@ -264,14 +286,19 @@ def parse_snap(path, one_based: bool = False, n: int | None = None,
 # --- format dispatch -------------------------------------------------------
 
 def sniff_format(path) -> str:
-    """``"mtx"`` or ``"snap"``, by extension then content."""
+    """``"mtx"`` or ``"snap"``, by extension then content.
+
+    A trailing ``.gz`` is ignored for extension sniffing, and content
+    sniffing reads through the transparent-decompression layer, so
+    gzipped files resolve to the format of their payload.
+    """
     path = Path(path)
-    suffixes = [s.lower() for s in path.suffixes]
+    suffixes = [s.lower() for s in path.suffixes if s.lower() != ".gz"]
     if ".mtx" in suffixes:
         return "mtx"
     if any(s in suffixes for s in (".snap", ".edges", ".el")):
         return "snap"
-    with open(path, "rb") as fh:
+    with open_graph_bytes(path) as fh:
         head = fh.read(64)
     return "mtx" if head.startswith(b"%%MatrixMarket") else "snap"
 

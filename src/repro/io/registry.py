@@ -10,7 +10,8 @@ cache), and every consumer — Table-1 benchmarks, the ingest CLI,
 
     from repro.io import datasets
     g = datasets.get("web_rmat")                     # built-in synthetic
-    datasets.register_file("orkut", "com-orkut.mtx")  # downloaded corpus
+    datasets.register_file("orkut", "com-orkut.mtx")  # local corpus file
+    datasets.fetch("orkut", URL, SHA256)     # download + verify + register
     g, stats = datasets.get_with_stats("orkut")       # + §4.1 stats
 
 The built-in entries are the paper's Table-1 class analogues (this
@@ -20,6 +21,11 @@ entries on hardware that fits them — same names, same call sites).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import os
+import tempfile
+import urllib.parse
+import urllib.request
 from pathlib import Path
 from typing import Callable
 
@@ -123,6 +129,71 @@ def get_with_stats(name: str):
 def clear_graph_cache() -> None:
     """Drop memoized graphs (tests; registrations stay)."""
     _GRAPH_CACHE.clear()
+
+
+# --- corpus downloads -------------------------------------------------------
+
+_DOWNLOAD_BLOCK = 4 << 20
+
+
+def download_dir() -> Path:
+    """Where fetched corpus files land (sibling of the CSR store)."""
+    from repro.io.store import default_cache_dir
+    return default_cache_dir().parent / "downloads"
+
+
+def fetch(name: str, url: str, sha256: str, *, description: str = "",
+          filename: str | None = None, cache_dir=None,
+          options: PreprocessOptions | None = None,
+          overwrite: bool = False, timeout: float = 60.0,
+          **load_kwargs) -> DatasetEntry:
+    """Download a corpus file, verify its checksum, register it.
+
+    The SuiteSparse/SNAP onboarding path: one call turns a URL +
+    published sha256 into a named dataset every consumer (Table-1
+    benchmarks, ``serve --graph``, the ingest CLI) can resolve.  The
+    download is atomic (temp file + rename) and idempotent — a file
+    already present with the right checksum is never re-fetched; a
+    present file with the *wrong* checksum is treated as a damaged
+    partial and re-downloaded.  A checksum mismatch on the fresh bytes
+    raises and leaves nothing behind.  ``file://`` URLs work (offline
+    CI exercises exactly that).  Gzipped payloads can register as-is —
+    the chunked readers decompress transparently.  ``timeout`` guards
+    every socket operation (a mirror that stalls mid-transfer raises
+    instead of hanging the caller).
+    """
+    from repro.io.store import file_content_hash
+    dest_dir = Path(cache_dir) if cache_dir is not None else download_dir()
+    dest = dest_dir / (filename or os.path.basename(
+        urllib.parse.urlparse(url).path) or name)
+    if not dest.is_file() or file_content_hash(dest) != sha256.lower():
+        dest_dir.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=dest_dir, prefix=f".{dest.name}-")
+        try:
+            h = hashlib.sha256()
+            with os.fdopen(fd, "wb") as out, \
+                    urllib.request.urlopen(url, timeout=timeout) as resp:
+                while True:
+                    block = resp.read(_DOWNLOAD_BLOCK)
+                    if not block:
+                        break
+                    h.update(block)
+                    out.write(block)
+            if h.hexdigest() != sha256.lower():
+                raise ValueError(
+                    f"checksum mismatch for {url}: expected {sha256}, "
+                    f"got {h.hexdigest()} — upstream changed or the "
+                    "transfer was corrupted; nothing was registered")
+            os.replace(tmp, dest)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+    return register_file(name, dest, description=description,
+                         options=options, overwrite=overwrite,
+                         **load_kwargs)
 
 
 # --- built-in synthetic suite (the paper's Table-1 class analogues) --------

@@ -95,6 +95,61 @@ class IngestReport:
         return dataclasses.asdict(self)
 
 
+class EntryHandle:
+    """Windowed zero-copy reads over one cached entry's ``arrays.bin``.
+
+    The out-of-core partition path (:mod:`repro.partition`) must slice
+    ``row_ptr`` / ``src`` / ``dst`` / ``wgt`` windows of a multi-GB
+    entry without ever materializing the full arrays — exactly what the
+    single-mmap layout was built for.  A handle maps the blob once;
+    :meth:`window` returns a zero-copy view, so the only host memory a
+    read costs is the pages the caller actually touches.
+    """
+
+    def __init__(self, key: str, entry_dir: Path, meta: dict):
+        self.key = key
+        self.meta = meta
+        self.n = int(meta["n"])
+        self.m_pad = int(meta["m_pad"])
+        self.num_edges = int(meta["num_edges"])
+        fp = meta.get("fingerprint")
+        self.fingerprint = tuple(fp) if fp is not None else None
+        blob = np.memmap(entry_dir / "arrays.bin", dtype=np.uint8, mode="r")
+        self._views = {}
+        for name, dtype, shape, off, nbytes in meta["array_table"]:
+            view = blob[off:off + nbytes].view(np.dtype(dtype))
+            self._views[name] = view.reshape([int(s) for s in shape])
+
+    def array(self, name: str) -> np.ndarray:
+        """Full zero-copy view of one stored array (mmap-backed)."""
+        return self._views[name]
+
+    def window(self, name: str, lo: int, hi: int) -> np.ndarray:
+        """Zero-copy ``[lo, hi)`` slice of one stored array."""
+        return self._views[name][lo:hi]
+
+    def to_graph(self) -> Graph:
+        """Materialize the full in-core :class:`Graph` from this handle.
+
+        Same result as :meth:`CsrStore.load` on the entry, without
+        re-opening or re-hashing anything — the routing path that opened
+        a handle for its metadata and then decided the graph fits in
+        core converts it directly.
+        """
+        graph = Graph(
+            n=self.n, m_pad=self.m_pad, num_edges=self.num_edges,
+            row_ptr=jnp.asarray(self._views["row_ptr"]),
+            src=jnp.asarray(self._views["src"]),
+            dst=jnp.asarray(self._views["dst"]),
+            wgt=jnp.asarray(self._views["wgt"]),
+            edge_mask=jnp.asarray(self._views["edge_mask"]),
+            kdeg=jnp.asarray(self._views["kdeg"]),
+        )
+        if self.fingerprint is not None:
+            object.__setattr__(graph, "_fingerprint", self.fingerprint)
+        return graph
+
+
 class CsrStore:
     """Directory of cached CSR graphs keyed by content + options."""
 
@@ -151,6 +206,21 @@ class CsrStore:
             # identity as the build that produced the entry, CRC-free
             object.__setattr__(graph, "_fingerprint", tuple(fp))
         return graph, meta
+
+    def open(self, key: str) -> EntryHandle | None:
+        """Windowed-read handle for an entry, or None on miss/corruption."""
+        d = self.entry_dir(key)
+        try:
+            with open(d / "meta.json") as fh:
+                meta = json.load(fh)
+            if meta.get("store_version") != STORE_VERSION:
+                return None
+            handle = EntryHandle(key, d, meta)
+            if not set(_ARRAYS) <= set(handle._views):
+                return None
+        except (OSError, ValueError, json.JSONDecodeError, KeyError):
+            return None
+        return handle
 
     def save(self, key: str, graph: Graph, meta: dict) -> None:
         from repro.core.graph import graph_fingerprint
@@ -223,6 +293,26 @@ class CsrStore:
         return False
 
 
+def _entry_identity(path, opts: PreprocessOptions, fmt: str | None,
+                    one_based: bool, n: int | None) -> tuple[str, str]:
+    """(resolved format, fmt_token) for a file's cache-key identity.
+
+    The single source of truth shared by :func:`load_graph` and
+    :func:`open_graph` — the two must compute byte-identical keys or
+    windowed opens would miss entries the loader just wrote.
+    """
+    fmt = fmt or sniff_format(path)
+    if fmt == "mtx" and (one_based or n is not None):
+        # .mtx is 1-based with a declared dimension by definition; a
+        # caller passing these expected them to matter — and silently
+        # folding them into the cache key would fork duplicate store
+        # entries for byte-identical graphs.
+        raise ValueError("one_based/n only apply to edge-list (snap) "
+                         "files; .mtx declares both in its header")
+    token = f"{fmt}-base{int(one_based)}-n{n if n is not None else 'auto'}"
+    return fmt, token
+
+
 def load_graph(path, options: PreprocessOptions | None = None, *,
                fmt: str | None = None, one_based: bool = False,
                n: int | None = None, cache: bool = True,
@@ -243,16 +333,8 @@ def load_graph(path, options: PreprocessOptions | None = None, *,
     ``parse_seconds == 0``).
     """
     path = Path(path)
-    fmt = fmt or sniff_format(path)
     opts = options or PreprocessOptions()
-    if fmt == "mtx" and (one_based or n is not None):
-        # .mtx is 1-based with a declared dimension by definition; a
-        # caller passing these expected them to matter — and silently
-        # folding them into the cache key would fork duplicate store
-        # entries for byte-identical graphs.
-        raise ValueError("one_based/n only apply to edge-list (snap) "
-                         "files; .mtx declares both in its header")
-    fmt_token = f"{fmt}-base{int(one_based)}-n{n if n is not None else 'auto'}"
+    fmt, fmt_token = _entry_identity(path, opts, fmt, one_based, n)
 
     store = CsrStore(cache_dir) if cache else None
     key = ""
@@ -300,3 +382,35 @@ def load_graph(path, options: PreprocessOptions | None = None, *,
                           build_seconds=t_build, hash_seconds=t_hash,
                           stats=stats.as_dict(), meta=meta)
     return (graph, report) if return_report else graph
+
+
+def open_graph(path, options: PreprocessOptions | None = None, *,
+               fmt: str | None = None, one_based: bool = False,
+               n: int | None = None, cache_dir=None,
+               force: bool = False) -> EntryHandle:
+    """Windowed-read handle for a graph file's cached CSR entry.
+
+    The out-of-core entry point: where :func:`load_graph` materializes
+    the full (device) arrays, ``open_graph`` returns an
+    :class:`EntryHandle` whose windows are zero-copy slices of the
+    store's mmap — O(1) host memory regardless of graph size.  A file
+    not yet in the store is ingested first via :func:`load_graph` (the
+    ingest itself holds the parsed arrays once; re-opens never do).
+    """
+    path = Path(path)
+    opts = options or PreprocessOptions()
+    fmt, fmt_token = _entry_identity(path, opts, fmt, one_based, n)
+    store = CsrStore(cache_dir)
+    key = CsrStore.key_for(file_content_hash(path), opts, fmt_token)
+    if not force:
+        handle = store.open(key)
+        if handle is not None:
+            return handle
+    load_graph(path, opts, fmt=fmt,
+               **({"one_based": one_based, "n": n} if fmt == "snap" else {}),
+               cache_dir=cache_dir, force=force)
+    handle = store.open(key)
+    if handle is None:
+        raise RuntimeError(f"ingest of {path} did not produce store "
+                           f"entry {key} (cache_dir misconfigured?)")
+    return handle

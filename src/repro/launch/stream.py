@@ -122,13 +122,17 @@ class StreamSession:
         DetectionResult}``.
         """
         graphs, warm_state = {}, {}
+        churn_threshold = self.engine.config.patch_churn_threshold
         for sid, delta in deltas.items():
             st = self.streams[sid]
             # Tiny deltas (the streaming norm) take the splice patch —
             # bit-identical to the rebuild, without the O(m log m) sort;
             # heavy churn falls back to the vectorized rebuild, which
-            # wins once most rows need touching anyway.
-            small = len(delta.touched_vertices()) < 0.25 * max(st.graph.n, 1)
+            # wins once most rows need touching anyway.  The crossover
+            # is EngineConfig.patch_churn_threshold, defaulted from the
+            # measured sweep in bench_streaming_deltas.py.
+            small = len(delta.touched_vertices()) \
+                < churn_threshold * max(st.graph.n, 1)
             post = (apply_delta_patch if small else apply_delta)(
                 st.graph, delta)
             init = act = None

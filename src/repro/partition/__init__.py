@@ -1,0 +1,36 @@
+"""Out-of-core partitioned detection: graphs bigger than RAM.
+
+The vertical slice behind ``Engine.fit(path, memory_budget=...)``:
+
+  * :mod:`repro.partition.plan`    degree-balanced contiguous CSR
+    partitioning + per-partition halo sets, from ``row_ptr`` alone.
+  * :mod:`repro.partition.slices`  zero-copy partition windows off the
+    store's single mmap, under a hard resident-byte budget (ledger +
+    budget-bounded LRU of resident partitions).
+  * :mod:`repro.partition.ooc`     the sweep driver: shared global label
+    array, halo-label gather/scatter per sweep, per-partition §3.3 split
+    with cross-partition unification — labels bit-identical to the
+    in-core fit.
+"""
+from repro.partition.ooc import (  # noqa: F401
+    OocRun,
+    fit_out_of_core,
+    in_core_edge_bytes,
+    open_source,
+)
+from repro.partition.plan import (  # noqa: F401
+    Partition,
+    PartitionPlan,
+    attach_halos,
+    halo_of,
+    parse_bytes,
+    plan_partitions,
+)
+from repro.partition.slices import (  # noqa: F401
+    InMemorySource,
+    MemoryBudgetExceeded,
+    MemoryLedger,
+    SliceLoader,
+    StoreEntrySource,
+    load_partition,
+)

@@ -1,0 +1,372 @@
+"""Out-of-core partitioned GSL-LPA: detect graphs bigger than RAM.
+
+The driver sweeps a :class:`~repro.partition.plan.PartitionPlan` one
+resident partition at a time through a backend's partition-sweep kernels
+(``segment`` / ``tile`` — see their ``build_partition`` hooks), keeping
+only O(n) vertex-indexed state resident (the shared global label array,
+active flags, ``row_ptr``) while the O(m) edge windows stream under a
+hard byte budget (:class:`~repro.partition.slices.MemoryLedger`).
+
+**Bit-parity with the in-core fit is by construction, not by luck.**
+Every in-core sweep — ``lpa_move`` sub-sweeps and the §3.3 split's
+min-label sweeps — is *synchronous*: new labels are a pure function of
+the pre-sweep label snapshot.  So processing partitions sequentially
+against that same snapshot (halo labels gathered from the shared global
+array) and double-buffering the results reproduces the in-core sweep
+exactly, whatever the partition count; the per-partition split phase
+converges to one label per (community x component) through the outer
+fixed-point loop, which *is* the cross-partition label-unification pass.
+Three details make it exact rather than approximate:
+
+* pruning reactivation is evaluated **lazily**: a sweep's wake-up mask
+  depends on the sweep's final changed flags, which are only complete
+  after the last partition — so each partition refreshes its own rows'
+  active flags at the start of its *next* sweep, from its own edge
+  window (the rule reads each vertex's own neighborhood, so no second
+  edge pass is needed);
+* the Shiloach-Vishkin pointer shortcut gathers at arbitrary label
+  values, so it runs as a global O(n) vertex pass after each assembled
+  sweep — the exact position it occupies in the in-core sweep body;
+* convergence thresholds replicate the in-core float semantics per
+  (backend, bucketing) combination.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lpa import _label_hash
+from repro.engine.config import EngineConfig
+from repro.partition.plan import (
+    PartitionPlan,
+    attach_halos,
+    parse_bytes,
+    plan_partitions,
+)
+from repro.partition.slices import (
+    InMemorySource,
+    MemoryLedger,
+    PartitionShapes,
+    SliceLoader,
+    StoreEntrySource,
+)
+
+# In-core residency of one directed edge slot: src + dst + wgt + mask.
+IN_CORE_EDGE_BYTES = 13
+
+
+@dataclasses.dataclass
+class OocRun:
+    """Raw out-of-core run result + observability counters."""
+    labels: np.ndarray            # (n,) int32 — uncompacted global labels
+    backend: str
+    lpa_iterations: int
+    split_iterations: int
+    lpa_seconds: float
+    split_seconds: float
+    plan_seconds: float           # partitioning + halo scan + first prep
+    num_partitions: int
+    peak_resident_bytes: int
+    budget: int
+    halo_vertices: int            # total halo rows across partitions
+    exchange_bytes: int           # label bytes gathered/scattered, all sweeps
+    partition_loads: int          # slice loads actually paid (LRU misses)
+    cache_hit: bool               # sweep kernels came from the engine cache
+    plan_stats: dict
+
+    def stats(self) -> dict:
+        return {
+            "backend": self.backend, "partitions": self.num_partitions,
+            "budget": self.budget,
+            "peak_resident_bytes": self.peak_resident_bytes,
+            "halo_vertices": self.halo_vertices,
+            "exchange_bytes": self.exchange_bytes,
+            "partition_loads": self.partition_loads,
+            "lpa_iterations": self.lpa_iterations,
+            "split_iterations": self.split_iterations,
+            **{f"plan_{k}": v for k, v in self.plan_stats.items()},
+        }
+
+
+def open_source(graph, **load_kwargs):
+    """Graph -> :class:`InMemorySource`; path -> store-backed windows.
+
+    Paths route through :func:`repro.io.store.open_graph`, which ingests
+    on first contact and afterwards serves zero-copy windows off the
+    store's single mmap — the only path that truly never materializes
+    the edge arrays.
+    """
+    from repro.core.graph import Graph
+    if isinstance(graph, Graph):
+        return InMemorySource(graph)
+    if isinstance(graph, str) or hasattr(graph, "__fspath__"):
+        from repro.io.store import open_graph
+        return StoreEntrySource(open_graph(graph, **load_kwargs))
+    raise TypeError(f"expected a Graph or a graph-file path, "
+                    f"got {type(graph).__name__}")
+
+
+def in_core_edge_bytes(source) -> int:
+    """Edge-array bytes an in-core fit would hold resident."""
+    return int(source.m_pad) * IN_CORE_EDGE_BYTES
+
+
+def choose_partition_backend(config: EngineConfig, d_bucket: int,
+                             n: int) -> str:
+    """OOC flavor of the engine's auto policy (sharded never applies:
+    the driver is a single-device streaming loop)."""
+    import jax
+
+    from repro.engine.registry import _TILE_MAX_CELLS, _TILE_MAX_DEGREE
+    if (jax.default_backend() == "tpu" and d_bucket <= _TILE_MAX_DEGREE
+            and n * d_bucket <= _TILE_MAX_CELLS):
+        return "tile"
+    return "segment"
+
+
+def _host_parity(n: int) -> np.ndarray:
+    """The semi-synchronous sub-sweep classes, via the real device hash
+    (zero drift risk vs. a host reimplementation)."""
+    return np.asarray((_label_hash(jnp.arange(n, dtype=jnp.int32),
+                                   jnp.int32(-1)) & 1).astype(bool))
+
+
+def _host_threshold(n: int, tau: float, backend: str,
+                    bucketing: str) -> int:
+    """Replicate the in-core convergence threshold bit-for-bit.
+
+    The segment backend in ``exact`` bucketing bakes ``tau * n`` in with
+    Python float semantics; every other combination computes
+    ``float32(tau) * float32(n)`` from the traced real vertex count.
+    Both truncate toward zero on the int cast.
+    """
+    if backend == "segment" and bucketing == "exact":
+        return int(np.int32(tau * n))
+    return int(np.int32(np.float32(tau) * np.float32(n)))
+
+
+def _shapes_for(plan: PartitionPlan, bucketing: str) -> PartitionShapes:
+    from repro.core.graph import _LANE, _round_up
+    from repro.engine.bucketing import next_pow2
+    rows = next_pow2(plan.max_part_size, 8)
+    n_loc = max(next_pow2(plan.max_n_local, 8), rows)
+    m = max(_round_up(next_pow2(plan.max_part_edges), _LANE), _LANE)
+    if bucketing == "exact":
+        d = _round_up(plan.d_max, _LANE)
+    else:
+        d = _round_up(next_pow2(plan.d_max), _LANE)
+    return PartitionShapes(n_loc=n_loc, m=m, rows=rows, d=d)
+
+
+def fit_out_of_core(source, config: EngineConfig | None = None, *,
+                    memory_budget, backend: str | None = None,
+                    cache=None, num_partitions: int | None = None,
+                    init_labels: np.ndarray | None = None,
+                    init_active: np.ndarray | None = None) -> OocRun:
+    """Detect communities with edge residency capped at ``memory_budget``.
+
+    ``source``: an array source from :func:`open_source`.  ``config``:
+    the usual :class:`EngineConfig` algorithm knobs (``split`` must be
+    device-side — ``bfs_host`` needs the full adjacency in host memory).
+    ``cache``: optional engine :class:`CompileCache` for the partition
+    sweep kernels.  ``num_partitions`` overrides the budget-derived
+    partition count (benchmarks); the byte budget stays enforced either
+    way.  Warm starts (``init_labels`` / ``init_active``) behave exactly
+    like ``Engine.fit``'s — they are O(n) vertex state, which the
+    semi-external model keeps resident anyway.
+
+    Returns an :class:`OocRun`; ``labels`` are bit-identical to the
+    in-core ``Engine.fit`` labels for the same (backend, config).
+    """
+    cfg = config if config is not None else EngineConfig()
+    if cfg.split == "bfs_host":
+        raise ValueError(
+            "split='bfs_host' walks the full adjacency in host memory and "
+            "cannot run out-of-core; use split='lp' or 'lpp'")
+    budget = parse_bytes(memory_budget)
+
+    t0 = time.perf_counter()
+    row_ptr = np.asarray(source.row_ptr())
+    n = int(source.n)
+
+    from repro.core.graph import _LANE, _round_up
+    from repro.engine.bucketing import next_pow2
+    degrees = row_ptr[1:] - row_ptr[:-1]
+    d_real = int(degrees.max()) if n else 1
+    d_bucket = _round_up(next_pow2(max(d_real, 1)), _LANE)
+
+    name = backend or cfg.backend
+    if name == "auto":
+        name = choose_partition_backend(cfg, d_bucket, n)
+    import repro.engine.backends  # noqa: F401  (registers built-ins)
+    from repro.engine.registry import get_backend
+    be = get_backend(name)
+    if not getattr(be, "supports_partition", False):
+        raise ValueError(f"backend {name!r} has no partition sweeps; "
+                         "out-of-core fits support segment and tile")
+
+    if num_partitions is not None:
+        plan = plan_partitions(row_ptr, num_partitions=num_partitions)
+    else:
+        max_edges, max_vertices = be.partition_caps(budget, d_bucket)
+        plan = plan_partitions(row_ptr, max_edges=max_edges,
+                               max_vertices=max_vertices)
+    plan = attach_halos(plan, lambda lo, hi: source.window("dst", lo, hi))
+    shapes = _shapes_for(plan, cfg.bucketing)
+
+    if cache is not None:
+        key = ("partition", name, cfg.algo_key(), be.plan_key(cfg))
+        sweeps, cache_hit = cache.get_or_build(
+            key, lambda: be.build_partition(cfg))
+    else:
+        sweeps, cache_hit = be.build_partition(cfg), False
+
+    ledger = MemoryLedger(budget)
+    loader = SliceLoader(source, plan, ledger)
+    prepare = _Prepare(be, shapes, cfg)
+
+    # --- resident O(n) vertex state (the semi-external model's half) ---
+    labels = (np.arange(n, dtype=np.int32) if init_labels is None
+              else np.asarray(init_labels, dtype=np.int32).copy())
+    active = (np.ones(n, dtype=bool) if init_active is None
+              else np.asarray(init_active, dtype=bool).copy())
+    parity = _host_parity(n)
+    threshold = _host_threshold(n, cfg.tau, name, cfg.bucketing)
+    bound = jnp.int32(n)
+    exchange = Exchange(shapes)
+    t_plan = time.perf_counter() - t0
+
+    # --- propagation: Algorithm 3 lines 1-6, partitioned ---
+    t0 = time.perf_counter()
+    changed_prev: np.ndarray | None = None
+    klass_prev: np.ndarray | None = None
+    it, delta = 0, n
+    while delta > threshold and it < cfg.max_iterations:
+        delta = 0
+        for sweep in (0, 1):
+            klass = parity if sweep else ~parity
+            seed = 2 * it + sweep
+            labels_next = labels.copy()
+            changed_next = np.zeros(n, dtype=bool)
+            for i in range(plan.num_partitions):
+                res = loader.load(i, prepare)
+                part, rng = res.part, slice(res.part.lo, res.part.hi)
+                loc = res.local_ids
+                if changed_prev is not None:
+                    # lazy pruning update: finish the previous sweep's
+                    # active refresh for this partition's rows
+                    wake = be.partition_wake(
+                        sweeps, res.inputs,
+                        exchange.gather(changed_prev, loc))[: part.size]
+                    was_cand = active[rng] & klass_prev[rng]
+                    active[rng] = (active[rng] & ~was_cand) | wake
+                cand = active[rng] & klass[rng]
+                new = be.partition_move(
+                    sweeps, res.inputs, exchange.gather(labels, loc),
+                    cand, seed, bound)[: part.size]
+                exchange.scatter(labels_next, rng, new)
+                ch = new != labels[rng]
+                changed_next[rng] = ch
+                delta += int(ch.sum())
+            labels = labels_next
+            changed_prev, klass_prev = changed_next, klass
+        it += 1
+    lpa_iterations = it
+    t_lpa = time.perf_counter() - t0
+
+    # --- §3.3 split phase, per-partition with cross-partition
+    # unification via the shared global label array ---
+    t0 = time.perf_counter()
+    split_iterations = 0
+    if cfg.split in ("lp", "lpp"):
+        prune = cfg.split == "lpp"
+        comm = labels                      # frozen community assignment
+        slab = np.arange(n, dtype=np.int32)
+        sactive = np.ones(n, dtype=bool)
+        changed_prev = None
+        delta = 1
+        while delta > 0:
+            slab_next = slab.copy()
+            for i in range(plan.num_partitions):
+                res = loader.load(i, prepare)
+                part, rng = res.part, slice(res.part.lo, res.part.hi)
+                loc = res.local_ids
+                comm_loc = exchange.gather(comm, loc)
+                if prune and changed_prev is not None:
+                    sactive[rng] = be.partition_split_wake(
+                        sweeps, res.inputs, comm_loc,
+                        exchange.gather(changed_prev, loc))[: part.size]
+                new = be.partition_split(
+                    sweeps, res.inputs, comm_loc,
+                    exchange.gather(slab, loc), sactive[rng],
+                    bound)[: part.size]
+                exchange.scatter(slab_next, rng, new)
+            if cfg.shortcut:
+                # global pointer jump — O(n) vertex pass, same position
+                # as the in-core sweep body's `min(new, new[new])`
+                slab_next = np.minimum(slab_next, slab_next[slab_next])
+            changed = slab_next != slab
+            delta = int(changed.sum())
+            changed_prev = changed
+            slab = slab_next
+            split_iterations += 1
+        labels = slab
+    t_split = time.perf_counter() - t0
+
+    peak = ledger.peak
+    loads = loader.loads
+    loader.clear()
+    return OocRun(
+        labels=labels, backend=name, lpa_iterations=lpa_iterations,
+        split_iterations=split_iterations, lpa_seconds=t_lpa,
+        split_seconds=t_split, plan_seconds=t_plan,
+        num_partitions=plan.num_partitions, peak_resident_bytes=peak,
+        budget=budget, halo_vertices=plan.halo_vertices,
+        exchange_bytes=exchange.bytes, partition_loads=loads,
+        cache_hit=cache_hit, plan_stats=plan.stats(),
+    )
+
+
+class _Prepare:
+    """Adapter handing the loader the backend's device-side prep."""
+
+    def __init__(self, backend, shapes: PartitionShapes,
+                 config: EngineConfig):
+        self.backend, self.shapes, self.config = backend, shapes, config
+
+    def estimate(self, part) -> int:
+        return self.backend.partition_prepare_nbytes(self.shapes)
+
+    def build(self, resident):
+        return self.backend.prepare_partition(resident, self.shapes,
+                                              self.config)
+
+
+class Exchange:
+    """Per-sweep halo-label gather/scatter, with byte accounting.
+
+    ``gather`` pulls a partition's local view (owned rows followed by
+    halo imports) out of a shared global array, padded to the run's
+    uniform local length; ``scatter`` writes the owned rows back.  The
+    accumulated byte count is the label traffic a multi-process layout
+    would put on the wire — reported in ``OocRun.exchange_bytes``.
+    """
+
+    def __init__(self, shapes: PartitionShapes):
+        self.shapes = shapes
+        self.bytes = 0
+
+    def gather(self, global_arr: np.ndarray, local_ids: np.ndarray,
+               ) -> np.ndarray:
+        out = np.zeros(self.shapes.n_loc, dtype=global_arr.dtype)
+        out[: len(local_ids)] = global_arr[local_ids]
+        self.bytes += int(len(local_ids)) * global_arr.itemsize
+        return out
+
+    def scatter(self, global_arr: np.ndarray, rng: slice,
+                values: np.ndarray) -> None:
+        global_arr[rng] = values
+        self.bytes += values.nbytes

@@ -1,0 +1,301 @@
+"""Zero-copy partition loading under an explicit resident-byte budget.
+
+The out-of-core contract is *semi-external*: O(n) vertex-indexed state
+(labels, active flags, ``row_ptr``, degrees) stays resident for the whole
+fit, while the O(m) edge arrays only ever appear as per-partition
+windows.  This module owns that edge side:
+
+* an :class:`ArraySource` yields ``src`` / ``dst`` / ``wgt`` windows —
+  either zero-copy slices of the store's single-mmap ``arrays.bin``
+  (:class:`StoreEntrySource`) or host views of an already-built
+  :class:`~repro.core.graph.Graph` (:class:`InMemorySource`, the
+  parity-testing path);
+* a :class:`MemoryLedger` accounts every edge-proportional allocation
+  the driver makes (local index remaps, padded device inputs, neighbor
+  tiles) and **hard-fails** past the budget — the acceptance tests and
+  ``BENCH_ooc.json`` assert on its ``peak``;
+* a :class:`SliceLoader` LRU-caches resident partitions inside the
+  budget: a generous budget keeps every partition warm after the first
+  sweep, a tight one degrades gracefully to one-resident-at-a-time.
+
+Window *reads* from an mmap are lazily paged by the OS; the ledger
+charges them while held because a sweep actually touches every byte.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+
+import numpy as np
+
+from repro.partition.plan import Partition, PartitionPlan
+
+EDGE_ARRAYS = ("src", "dst", "wgt")
+
+
+class PartitionShapes:
+    """Uniform padded shapes shared by every partition of one run.
+
+    All partitions pad to one (rows, edges, labels) shape so each jitted
+    sweep stage compiles exactly once per run (and reuses across runs
+    that land in the same shapes — jax's jit cache keys on them).
+
+    n_loc: padded local row count (owned + halo rows; the label/active
+      buffers' length, and the segment backend's local-Graph ``n``).
+    m: padded edge-window length (multiple of 128).
+    rows: padded owned-row count (the tile backend's tile height).
+    d: padded max-degree (tile width; matches the in-core d bucket so
+      tile sweeps reduce over identical widths).
+    """
+
+    def __init__(self, n_loc: int, m: int, rows: int, d: int):
+        self.n_loc, self.m, self.rows, self.d = n_loc, m, rows, d
+
+    def __repr__(self):
+        return (f"PartitionShapes(n_loc={self.n_loc}, m={self.m}, "
+                f"rows={self.rows}, d={self.d})")
+
+
+class MemoryBudgetExceeded(RuntimeError):
+    """A single partition's resident set cannot fit the byte budget."""
+
+
+class MemoryLedger:
+    """Tracks resident edge-proportional bytes against a hard budget."""
+
+    def __init__(self, budget: int | None):
+        self.budget = None if budget is None else int(budget)
+        self.current = 0
+        self.peak = 0
+
+    def acquire(self, nbytes: int, what: str = "") -> int:
+        nbytes = int(nbytes)
+        if self.budget is not None and self.current + nbytes > self.budget:
+            raise MemoryBudgetExceeded(
+                f"acquiring {nbytes} bytes for {what or 'a partition'} "
+                f"would put {self.current + nbytes} resident edge bytes "
+                f"over the {self.budget}-byte budget")
+        self.current += nbytes
+        self.peak = max(self.peak, self.current)
+        return nbytes
+
+    def release(self, nbytes: int) -> None:
+        self.current -= int(nbytes)
+
+    def stats(self) -> dict:
+        return {"budget": self.budget, "current": self.current,
+                "peak": self.peak}
+
+
+# --- array sources ---------------------------------------------------------
+
+class StoreEntrySource:
+    """Windows straight off a :class:`repro.io.store.CsrStore` entry.
+
+    Wraps an ``EntryHandle`` (one mmap of ``arrays.bin``); every window
+    is a zero-copy slice of that mapping — the full edge arrays are
+    never materialized in host memory.
+    """
+
+    def __init__(self, handle):
+        self.handle = handle
+        self.n = int(handle.n)
+        self.num_edges = int(handle.num_edges)
+        self.m_pad = int(handle.m_pad)
+
+    def row_ptr(self) -> np.ndarray:
+        return self.handle.array("row_ptr")
+
+    def window(self, name: str, lo: int, hi: int) -> np.ndarray:
+        return self.handle.window(name, lo, hi)
+
+    def fingerprint(self):
+        return self.handle.fingerprint
+
+    def to_graph(self):
+        """Materialize the full in-core Graph (no re-open, no re-hash)."""
+        return self.handle.to_graph()
+
+    def describe(self) -> str:
+        return f"store:{self.handle.key}"
+
+
+class InMemorySource:
+    """Windows over an already-built Graph's host arrays.
+
+    The graph is by definition already in core, so this source exists
+    for parity tests and for partitioned fits of graphs that *fit* in
+    RAM but whose per-fit working set (device copies, tiles) should not
+    — the ledger still only charges the per-partition windows.
+    """
+
+    def __init__(self, graph):
+        self.graph = graph
+        self.n = int(graph.n)
+        self.num_edges = int(graph.num_edges)
+        self.m_pad = int(graph.m_pad)
+        self._arrays = {
+            "row_ptr": np.asarray(graph.row_ptr),
+            "src": np.asarray(graph.src),
+            "dst": np.asarray(graph.dst),
+            "wgt": np.asarray(graph.wgt),
+        }
+
+    def row_ptr(self) -> np.ndarray:
+        return self._arrays["row_ptr"]
+
+    def window(self, name: str, lo: int, hi: int) -> np.ndarray:
+        return self._arrays[name][lo:hi]
+
+    def fingerprint(self):
+        from repro.core.graph import graph_fingerprint
+        return graph_fingerprint(self.graph)
+
+    def to_graph(self):
+        return self.graph
+
+    def describe(self) -> str:
+        return f"graph:n={self.n}:m={self.num_edges}"
+
+
+# --- resident partitions ---------------------------------------------------
+
+@dataclasses.dataclass
+class ResidentPartition:
+    """One partition's loaded, locally-indexed slice (+ prepared inputs).
+
+    Local row space: rows ``[0, size)`` are the owned vertices
+    ``[lo, hi)``, rows ``[size, n_local)`` the halo imports.  ``src`` /
+    ``dst`` are remapped into that space; ``wgt`` is the raw window.
+    ``inputs`` caches the backend's device-side preparation (padded
+    local CSR or neighbor tiles) for as long as the partition stays
+    resident.
+    """
+    part: Partition
+    local_ids: np.ndarray   # (n_local,) int32 global id per local row
+    row_ptr: np.ndarray     # (size + 1,) int32 window offsets per owned row
+    src: np.ndarray         # (window,) int32 local source rows
+    dst: np.ndarray         # (window,) int32 local destination rows
+    wgt: np.ndarray         # (window,) float32
+    nbytes: int             # ledger charge for the arrays above
+    inputs: object = None   # backend-prepared device inputs
+    inputs_nbytes: int = 0
+
+    @property
+    def size(self) -> int:
+        return self.part.size
+
+    @property
+    def n_local(self) -> int:
+        return self.part.n_local
+
+
+def load_partition(source, part: Partition) -> ResidentPartition:
+    """Slice + locally remap one partition's edge window.
+
+    Owned destinations shift by ``-lo``; halo destinations map to
+    ``size + rank`` via binary search in the (sorted) halo set.  The
+    remap is recomputed on every load rather than persisted — it is
+    edge-proportional, so caching it for *all* partitions is exactly
+    what the budget forbids.
+    """
+    if part.halo is None:
+        raise ValueError(f"partition {part.index} has no halo set; run "
+                         "attach_halos on the plan first")
+    lo, hi = part.lo, part.hi
+    src_w = source.window("src", part.e_lo, part.e_hi)
+    dst_w = source.window("dst", part.e_lo, part.e_hi)
+    wgt_w = np.asarray(source.window("wgt", part.e_lo, part.e_hi),
+                       dtype=np.float32)
+    row_ptr = (np.asarray(source.window("row_ptr", lo, hi + 1),
+                          dtype=np.int64) - part.e_lo).astype(np.int32)
+
+    src = (np.asarray(src_w, dtype=np.int64) - lo).astype(np.int32)
+    dst_g = np.asarray(dst_w, dtype=np.int64)
+    owned = (dst_g >= lo) & (dst_g < hi)
+    dst = np.where(
+        owned, dst_g - lo,
+        part.size + np.searchsorted(part.halo, dst_g)).astype(np.int32)
+
+    local_ids = part.local_ids()
+    nbytes = (src.nbytes + dst.nbytes + wgt_w.nbytes + local_ids.nbytes
+              + row_ptr.nbytes)
+    return ResidentPartition(part=part, local_ids=local_ids, row_ptr=row_ptr,
+                             src=src, dst=dst, wgt=wgt_w, nbytes=nbytes)
+
+
+def slice_nbytes(part: Partition) -> int:
+    """A-priori ledger charge of :func:`load_partition`'s arrays."""
+    return part.num_edges * 12 + part.n_local * 4 + (part.size + 1) * 4
+
+
+class SliceLoader:
+    """Budget-bounded LRU of resident partitions.
+
+    ``load(i, prepare)`` returns partition *i* resident with its
+    backend inputs built; least-recently-used partitions are evicted
+    until the newcomer fits.  Sizes are predictable from plan metadata
+    (``slice_nbytes`` + ``prepare.estimate``), so eviction happens
+    *before* allocation — residency never transiently overshoots the
+    budget.  With a budget covering every partition the loader converges
+    to zero reloads; with a tight budget it streams.
+
+    ``prepare``: optional object with ``estimate(part) -> int`` and
+    ``build(resident) -> (inputs, nbytes)`` — the backend's device-side
+    preparation (padded local CSR / neighbor tiles), cached on the
+    resident entry.
+    """
+
+    def __init__(self, source, plan: PartitionPlan, ledger: MemoryLedger):
+        self.source = source
+        self.plan = plan
+        self.ledger = ledger
+        self._resident: OrderedDict[int, ResidentPartition] = OrderedDict()
+        self.loads = 0          # partition loads actually performed
+        self.requests = 0       # load() calls (hits + misses)
+
+    def load(self, index: int, prepare=None) -> ResidentPartition:
+        self.requests += 1
+        res = self._resident.get(index)
+        if res is None:
+            part = self.plan.parts[index]
+            incoming = slice_nbytes(part)
+            if prepare is not None:
+                incoming += prepare.estimate(part)
+            self._fit(incoming, keep=None)
+            res = load_partition(self.source, part)
+            self.ledger.acquire(res.nbytes, f"partition {index}")
+            self._resident[index] = res
+            self.loads += 1
+        else:
+            self._resident.move_to_end(index)
+        if prepare is not None and res.inputs is None:
+            self._fit(prepare.estimate(res.part), keep=index)
+            inputs, nbytes = prepare.build(res)
+            self.ledger.acquire(nbytes, f"partition {index} inputs")
+            res.inputs, res.inputs_nbytes = inputs, nbytes
+        return res
+
+    def _fit(self, incoming: int, keep: int | None) -> None:
+        """Evict LRU residents until ``incoming`` more bytes fit."""
+        if self.ledger.budget is None:
+            return
+        while self.ledger.current + incoming > self.ledger.budget:
+            victim = next((i for i in self._resident if i != keep), None)
+            if victim is None:
+                # nothing left to evict: the ledger raises with context
+                break
+            self.evict(victim)
+
+    def evict(self, index: int) -> None:
+        res = self._resident.pop(index, None)
+        if res is not None:
+            self.ledger.release(res.nbytes + res.inputs_nbytes)
+
+    def clear(self) -> None:
+        for index in list(self._resident):
+            self.evict(index)
+
+    def stats(self) -> dict:
+        return {**self.ledger.stats(), "resident": len(self._resident),
+                "loads": self.loads, "requests": self.requests}

@@ -351,3 +351,130 @@ def test_registry_missing_file_and_unknown_name(tmp_path):
         datasets.unregister(name)
     with pytest.raises(KeyError):
         datasets.get("definitely-not-registered")
+
+
+# --- transparent gzip decompression ----------------------------------------
+
+def test_parse_gzip_snap_roundtrip():
+    """The committed toy.snap.txt.gz parses identically to its plain
+    sibling: same edges, same sniffed format, magic-byte detection."""
+    plain = parse_snap(FIXTURES / "toy.snap.txt")
+    gz = parse_snap(FIXTURES / "toy.snap.txt.gz")
+    assert np.array_equal(gz.edges, plain.edges)
+    assert gz.n == plain.n and gz.weights is None
+    assert sniff_format(FIXTURES / "toy.snap.txt.gz") == "snap"
+
+
+def test_gzip_mtx_and_content_sniff(tmp_path):
+    import gzip
+    raw = (FIXTURES / "toy_general.mtx").read_bytes()
+    gz_path = tmp_path / "toy.mtx.gz"
+    gz_path.write_bytes(gzip.compress(raw))
+    el = parse_mtx(gz_path)
+    assert np.array_equal(el.edges, TOY_EDGES)
+    assert np.array_equal(el.weights, TOY_WEIGHTS)
+    assert sniff_format(gz_path) == "mtx"
+    # no helpful extension at all: content sniff reads through the gzip
+    bare = tmp_path / "mystery"
+    bare.write_bytes(gzip.compress(raw))
+    assert sniff_format(bare) == "mtx"
+
+
+def test_load_graph_gzip_bit_identical(tmp_path):
+    """write -> gzip -> parse -> build round-trips bit-exactly through
+    the store (gz bytes hash to their own cache key)."""
+    import gzip
+    g1 = load_graph(FIXTURES / "toy.snap.txt", cache_dir=tmp_path)
+    g2, rep = load_graph(FIXTURES / "toy.snap.txt.gz", cache_dir=tmp_path,
+                         return_report=True)
+    assert not rep.cache_hit  # different bytes, own entry
+    assert_csr_identical(g2, g1)
+
+
+def test_write_gzip_parse_roundtrip(tmp_path):
+    import gzip
+    rng = np.random.default_rng(3)
+    edges = rng.integers(0, 40, size=(60, 2))
+    weights = rng.uniform(0.1, 5.0, size=60)
+    plain = tmp_path / "rt.snap.txt"
+    write_snap(plain, edges, weights)
+    gz_path = tmp_path / "rt.snap.txt.gz"
+    gz_path.write_bytes(gzip.compress(plain.read_bytes()))
+    a = parse_snap(plain)
+    b = parse_snap(gz_path)
+    assert np.array_equal(a.edges, b.edges)
+    assert np.array_equal(a.weights, b.weights)  # %.17g is bit-exact
+
+
+# --- datasets.fetch ---------------------------------------------------------
+
+def _file_url(path) -> str:
+    return Path(path).resolve().as_uri()
+
+
+def test_fetch_verifies_and_registers(tmp_path):
+    name = "fetch_toy_test"
+    datasets.unregister(name)
+    src = FIXTURES / "toy_general.mtx"
+    sha = file_content_hash(src)
+    try:
+        entry = datasets.fetch(name, _file_url(src), sha,
+                               cache_dir=tmp_path / "dl",
+                               description="offline file:// fixture")
+        assert entry.kind == "file"
+        dest = Path(entry.path)
+        assert dest.is_file() and dest.parent == tmp_path / "dl"
+        g = datasets.get(name)
+        assert_csr_identical(g, build_graph(TOY_EDGES, n=5))
+        # idempotent: second fetch re-verifies, does not re-download
+        before = dest.stat().st_mtime_ns
+        datasets.fetch(name, _file_url(src), sha, cache_dir=tmp_path / "dl",
+                       overwrite=True)
+        assert dest.stat().st_mtime_ns == before
+    finally:
+        datasets.unregister(name)
+
+
+def test_fetch_checksum_mismatch_rejects(tmp_path):
+    name = "fetch_bad_sha_test"
+    datasets.unregister(name)
+    src = FIXTURES / "toy_general.mtx"
+    with pytest.raises(ValueError, match="checksum mismatch"):
+        datasets.fetch(name, _file_url(src), "0" * 64,
+                       cache_dir=tmp_path / "dl")
+    # nothing registered, no partial file left behind
+    assert name not in datasets.names()
+    leftovers = [p for p in (tmp_path / "dl").glob("*") if p.is_file()]
+    assert leftovers == []
+
+
+def test_fetch_repairs_damaged_download(tmp_path):
+    name = "fetch_repair_test"
+    datasets.unregister(name)
+    src = FIXTURES / "toy_general.mtx"
+    sha = file_content_hash(src)
+    dest = tmp_path / "dl" / "toy_general.mtx"
+    dest.parent.mkdir(parents=True)
+    dest.write_text("truncated garbage")
+    try:
+        datasets.fetch(name, _file_url(src), sha, cache_dir=tmp_path / "dl")
+        assert file_content_hash(dest) == sha  # re-downloaded over damage
+    finally:
+        datasets.unregister(name)
+
+
+def test_fetch_gzip_payload_loads(tmp_path):
+    """fetch + gzip compose: a compressed corpus file registers as-is
+    and loads through the transparent decompression."""
+    import gzip
+    name = "fetch_gz_test"
+    datasets.unregister(name)
+    src_gz = tmp_path / "toy.snap.txt.gz"
+    src_gz.write_bytes(gzip.compress((FIXTURES / "toy.snap.txt").read_bytes()))
+    try:
+        datasets.fetch(name, _file_url(src_gz), file_content_hash(src_gz),
+                       cache_dir=tmp_path / "dl", cache=False)
+        g = datasets.get(name)
+        assert_csr_identical(g, build_graph(TOY_EDGES, n=5))
+    finally:
+        datasets.unregister(name)

@@ -219,3 +219,37 @@ def test_stream_session_handles_vertex_growth_and_cold_mode():
         with StreamSession(fresh_engine()) as sess:
             sess.add("g", base)
             sess.add("g", base)
+
+
+def test_stream_session_churn_threshold_routes_patch_vs_rebuild(monkeypatch):
+    """Delta application picks splice-patch vs rebuild at the measured
+    EngineConfig.patch_churn_threshold, not a hard-coded fraction."""
+    import repro.launch.stream as stream_mod
+    from repro.core.delta import apply_delta as real_apply
+    from repro.core.delta import apply_delta_patch as real_patch
+
+    calls = []
+    monkeypatch.setattr(stream_mod, "apply_delta",
+                        lambda g, d: calls.append("rebuild") or real_apply(g, d))
+    monkeypatch.setattr(stream_mod, "apply_delta_patch",
+                        lambda g, d: calls.append("patch") or real_patch(g, d))
+
+    base, _ = evolving_sequence(60, 4.0, 1, 2, seed=11)
+    tiny = GraphDelta.make(insert=[[0, 1], [2, 3]])          # ~7% churn
+    heavy = GraphDelta.make(insert=np.stack(
+        [np.arange(0, 30), np.arange(30, 60)], axis=1))      # 100% churn
+
+    with StreamSession(fresh_engine(), max_batch=4) as sess:
+        sess.add("g", base)
+        sess.update("g", tiny)
+        assert calls == ["patch"]
+        sess.update("g", heavy)
+        assert calls == ["patch", "rebuild"]
+
+    # a zero threshold forces the rebuild even for tiny deltas
+    calls.clear()
+    with StreamSession(fresh_engine(patch_churn_threshold=0.0),
+                       max_batch=4) as sess:
+        sess.add("g", base)
+        sess.update("g", tiny)
+        assert calls == ["rebuild"]
