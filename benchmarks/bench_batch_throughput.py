@@ -18,8 +18,6 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent))
 
-import numpy as np
-
 from common import emit
 
 from repro.engine import CompileCache, Engine, EngineConfig

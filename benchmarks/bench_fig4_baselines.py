@@ -5,7 +5,6 @@ from __future__ import annotations
 import time
 
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import disconnected_fraction, gsl_lpa, modularity
 from repro.core.baselines import flpa_host, igraph_lpa_host, networkit_plp

@@ -1,0 +1,64 @@
+"""Trace-audit bench: run the canonical engine workload under TraceAudit.
+
+Executes :func:`repro.analysis.audit_workload` — solo cold fits,
+same-bucket reuse, warm refits, batched dispatch, sharded exchange, and
+out-of-core partitioned sweeps — and records the per-(stage, backend,
+bucket) trace counts.  The acceptance contract (also the CI gate):
+
+  * every (stage, backend, bucket) pair traces **at most once** across
+    the whole workload — zero excess retraces;
+  * the workload genuinely covered every dispatch family (solo, batch,
+    warm, partition), so a silently skipped leg can't fake a pass.
+
+Exits nonzero on any excess retrace so the CI job fails loudly.
+
+    PYTHONPATH=src python benchmarks/bench_trace_audit.py [BENCH_trace_audit.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+from common import emit
+
+from repro.analysis import audit_workload
+
+
+def main() -> int:
+    out_path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_trace_audit.json"
+    t0 = time.perf_counter()
+    audit = audit_workload()
+    seconds = time.perf_counter() - t0
+    report = audit.report()
+    coverage = dict(getattr(audit, "coverage", {}))
+
+    report["workload_seconds"] = round(seconds, 3)
+    report["coverage"] = coverage
+    Path(out_path).write_text(json.dumps(report, indent=2) + "\n")
+
+    emit([{"bench": "workload", "seconds": seconds,
+           "total_traces": report["total_traces"],
+           "contexts": len(report["contexts"]),
+           "excess_contexts": report["excess_contexts"],
+           "ok": report["ok"]}], "trace-audit")
+    for row in report["contexts"]:
+        marker = "RETRACE" if row["excess"] else "ok"
+        print(f"[trace-audit] {row['stage']} @ {row['bucket']}: "
+              f"{row['traces']} trace(s) [{marker}]")
+
+    if not report["ok"]:
+        print(f"[trace-audit] FAIL: {report['excess_contexts']} context(s) "
+              "traced more than once", file=sys.stderr)
+        return 1
+    print(f"[trace-audit] PASS: {report['total_traces']} traces over "
+          f"{len(report['contexts'])} contexts, zero excess "
+          f"({sum(coverage.values())} fits)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

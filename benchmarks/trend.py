@@ -1,0 +1,136 @@
+"""Append one-line per-PR summaries of BENCH_*.json artifacts to BENCH_TREND.md.
+
+Closes the ROADMAP perf-visibility gap: every benchmark artifact a CI run
+produces gets exactly one row in a *committed* trend file, so perf drift
+is visible in review diffs instead of buried in expiring artifact zips.
+
+  PYTHONPATH=src python benchmarks/trend.py BENCH_ooc.json BENCH_trace_audit.json \
+      [--trend BENCH_TREND.md] [--sha <commit>] [--date YYYY-MM-DD]
+
+Rows are deduped by ``(sha, artifact)``: re-running on the same commit
+replaces that artifact's row in place (idempotent in CI retries); a new
+commit appends.  Unknown artifact shapes get a generic scalar summary,
+so new ``BENCH_*.json`` producers join the trend with no code change.
+"""
+from __future__ import annotations
+
+import argparse
+import datetime
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+HEADER = [
+    "# Benchmark trend",
+    "",
+    "One row per (commit, artifact), appended by `benchmarks/trend.py`",
+    "(the CI `bench-trend` job). Numbers are single-run CI measurements —",
+    "directional, not rigorous; see `benchmarks/` for methodology.",
+    "",
+    "| date | sha | artifact | summary |",
+    "|------|-----|----------|---------|",
+]
+
+
+def _fmt(v) -> str:
+    if isinstance(v, bool):
+        return "yes" if v else "no"
+    if isinstance(v, float):
+        return f"{v:.3g}"
+    return str(v)
+
+
+def _scalars(d: dict, limit: int = 6) -> str:
+    keep = [(k, v) for k, v in d.items()
+            if isinstance(v, (int, float, bool))
+            or (isinstance(v, str) and len(v) <= 24)]
+    return " ".join(f"{k}={_fmt(v)}" for k, v in keep[:limit])
+
+
+def summarize(name: str, payload) -> str:
+    """One-line summary for a known artifact, generic scalars otherwise."""
+    if name == "BENCH_trace_audit" and isinstance(payload, dict):
+        fits = sum(payload.get("coverage", {}).values())
+        return (f"{'PASS' if payload.get('ok') else 'FAIL'}: "
+                f"{payload.get('total_traces')} traces / "
+                f"{len(payload.get('contexts', []))} contexts, "
+                f"{payload.get('excess_contexts')} excess over {fits} fits "
+                f"({payload.get('workload_seconds', '?')}s)")
+    if name == "BENCH_ooc" and isinstance(payload, list):
+        by_mode = {r.get("mode"): r for r in payload if isinstance(r, dict)}
+        ooc, ic = by_mode.get("ooc"), by_mode.get("in_core")
+        if ooc:
+            parts = [f"{ooc.get('partitions')} partitions",
+                     f"peak {ooc.get('peak_resident_bytes')}B <= "
+                     f"budget {ooc.get('budget')}B"]
+            if ic and ic.get("seconds") and ooc.get("seconds"):
+                parts.append(f"{ooc['seconds'] / ic['seconds']:.2f}x in-core time")
+            return ", ".join(parts)
+    if isinstance(payload, dict):
+        return _scalars(payload) or "(no scalar fields)"
+    if isinstance(payload, list):
+        head = _scalars(payload[0]) if payload and isinstance(payload[0], dict) else ""
+        return f"{len(payload)} rows" + (f": {head}" if head else "")
+    return str(payload)[:80]
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, check=True,
+            cwd=Path(__file__).resolve().parent).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("artifacts", nargs="+", type=Path,
+                    help="BENCH_*.json files to summarize")
+    ap.add_argument("--trend", type=Path,
+                    default=Path(__file__).resolve().parent.parent
+                    / "BENCH_TREND.md")
+    ap.add_argument("--sha", default=None,
+                    help="commit id for the rows (default: git HEAD)")
+    ap.add_argument("--date", default=None, help="row date (default: today)")
+    args = ap.parse_args(argv)
+
+    sha = (args.sha or _git_sha())[:12]
+    date = args.date or datetime.date.today().isoformat()
+
+    lines = (args.trend.read_text().rstrip("\n").split("\n")
+             if args.trend.exists() else list(HEADER))
+    if not any(l.startswith("| date ") for l in lines):
+        lines = list(HEADER) + [l for l in lines if l.startswith("| ")]
+
+    appended = replaced = 0
+    for path in args.artifacts:
+        if not path.exists():
+            print(f"[trend] skip missing {path}", file=sys.stderr)
+            continue
+        name = path.stem
+        try:
+            payload = json.loads(path.read_text())
+        except json.JSONDecodeError as exc:
+            print(f"[trend] skip unparseable {path}: {exc}", file=sys.stderr)
+            continue
+        row = f"| {date} | {sha} | {name} | {summarize(name, payload)} |"
+        key = f"| {sha} | {name} |"
+        hit = [i for i, l in enumerate(lines) if key in l]
+        if hit:
+            lines[hit[0]] = row
+            replaced += 1
+        else:
+            lines.append(row)
+            appended += 1
+        print(f"[trend] {row}")
+
+    args.trend.write_text("\n".join(lines) + "\n")
+    print(f"[trend] {args.trend}: +{appended} rows, {replaced} replaced")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

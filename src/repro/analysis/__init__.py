@@ -1,0 +1,18 @@
+"""repro.analysis — static lint + runtime trace audit for the hot-path
+contracts (one trace per bucket, no hidden host syncs, protocol
+conformance, Pallas hygiene, ledger discipline).
+
+CLI: ``python -m repro.launch.lint`` (see README "Static analysis &
+trace auditing").
+"""
+from repro.analysis.findings import Baseline, Finding
+from repro.analysis.lint import lint_paths, lint_source, rule_relpath
+from repro.analysis.rules import all_rules
+from repro.analysis.trace_audit import ExcessRetraceError, TraceAudit
+from repro.analysis.workload import audit_workload, run_workload
+
+__all__ = [
+    "Baseline", "Finding", "lint_paths", "lint_source", "rule_relpath",
+    "all_rules", "TraceAudit", "ExcessRetraceError", "audit_workload",
+    "run_workload",
+]

@@ -1,0 +1,240 @@
+"""R001 — host-sync hazard in hot-path modules.
+
+The paper-scale throughput story (one device dispatch per sweep, no
+blocking readbacks) dies quietly when a ``int()`` / ``.item()`` /
+``np.asarray()`` sneaks into a sweep loop: every iteration then stalls
+on a device->host transfer.  This rule flags, inside the hot modules
+(``core/``, ``kernels/``, ``engine/backends/``, ``partition/ooc.py``):
+
+* **traced scopes** (functions handed to ``jax.jit`` / ``shard_map`` /
+  ``lax.while_loop``): any concretizing call applied to a function
+  parameter — under trace these raise ``TracerError`` at best and force
+  a silent recompile-per-call at worst;
+* **host-driven sweep loops**: concretizing calls applied to values
+  produced by jitted sweep callables (``plan.step(...)``,
+  ``sweeps.move(...)``, a ``jax.jit``/``make_*_step`` product) inside a
+  ``for``/``while`` body — each one is a blocking sync per iteration.
+
+Deliberate host-driven convergence checks (the sharded/distributed
+drivers read one scalar per exchange round by design) carry an inline
+``# lint: host-sync-ok — <why>`` suppression.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from repro.analysis.findings import Finding
+from repro.analysis.rules.base import (
+    ModuleContext,
+    Rule,
+    assigned_names,
+    dotted_name,
+    names_in,
+)
+
+_HOT_PREFIXES = ("core/", "kernels/", "engine/backends/")
+_HOT_FILES = ("partition/ooc.py",)
+
+_SCALARIZERS = {"int", "float", "bool"}
+_SYNC_METHODS = {"item", "tolist"}
+_NP_SYNC = {"np.asarray", "np.array", "numpy.asarray", "numpy.array"}
+
+# Jitted sweep surfaces: receiver names holding compiled plans and the
+# per-stage method names the backends/drivers dispatch through.
+_PLAN_RECEIVERS = {"plan", "sweeps", "ops_ns"}
+_SWEEP_METHODS = {"propagate", "split", "step", "move", "wake", "split_wake"}
+_STEP_FACTORY = re.compile(r"^make_\w*step$")
+
+_TRACING_CALLS = {"jax.jit", "jit", "shard_map", "pjit", "jax.pmap", "pmap"}
+_LOOP_PRIMITIVES = {"jax.lax.while_loop", "lax.while_loop",
+                    "jax.lax.scan", "lax.scan",
+                    "jax.lax.fori_loop", "lax.fori_loop"}
+
+
+def _is_jit_wrapping(call: ast.Call) -> bool:
+    """Call expression that produces a traced callable from its args:
+    jax.jit(f), partial(jax.jit, ...), shard_map(f, ...)."""
+    name = dotted_name(call.func)
+    if name in _TRACING_CALLS:
+        return True
+    if name in ("partial", "functools.partial") and call.args:
+        return dotted_name(call.args[0]) in _TRACING_CALLS
+    return False
+
+
+def _sync_call(node: ast.Call) -> tuple[str, ast.AST] | None:
+    """(op description, value expression) when ``node`` forces a sync."""
+    func = node.func
+    if isinstance(func, ast.Name) and func.id in _SCALARIZERS and node.args:
+        return f"{func.id}()", node.args[0]
+    if isinstance(func, ast.Attribute) and func.attr in _SYNC_METHODS:
+        return f".{func.attr}()", func.value
+    name = dotted_name(func)
+    if name in _NP_SYNC and node.args:
+        return f"{name}()", node.args[0]
+    return None
+
+
+class HostSyncRule(Rule):
+    id = "R001"
+    tag = "host-sync"
+    description = ("device->host sync hazards (int()/.item()/np.asarray on "
+                   "traced or device values) in hot-path sweep code")
+
+    def applies(self, relpath: str) -> bool:
+        return relpath.startswith(_HOT_PREFIXES) or relpath in _HOT_FILES
+
+    def check(self, ctx: ModuleContext) -> list[Finding]:
+        findings: list[Finding] = []
+        traced = _traced_functions(ctx.tree)
+        for fn in _all_functions(ctx.tree):
+            if fn in traced:
+                findings.extend(self._check_traced(ctx, fn))
+            findings.extend(self._check_host_loops(ctx, fn))
+        return findings
+
+    # --- traced scopes ---
+
+    def _check_traced(self, ctx: ModuleContext,
+                      fn: ast.FunctionDef) -> list[Finding]:
+        params = {a.arg for a in (fn.args.posonlyargs + fn.args.args
+                                  + fn.args.kwonlyargs)}
+        out = []
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            sync = _sync_call(node)
+            if sync is None:
+                continue
+            op, value = sync
+            hit = params & names_in(value)
+            if hit:
+                out.append(self.finding(
+                    ctx, node,
+                    f"{op} on traced value '{sorted(hit)[0]}' inside "
+                    f"jit-traced '{fn.name}' — concretizes a tracer "
+                    f"(TracerError or a recompile per call)"))
+        return out
+
+    # --- host-driven sweep loops ---
+
+    def _check_host_loops(self, ctx: ModuleContext,
+                          fn: ast.FunctionDef) -> list[Finding]:
+        tainted = _device_tainted_names(fn)
+        if not tainted:
+            return []
+        out = []
+        for loop in (n for n in ast.walk(fn)
+                     if isinstance(n, (ast.For, ast.While))):
+            for node in ast.walk(loop):
+                if not isinstance(node, ast.Call):
+                    continue
+                sync = _sync_call(node)
+                if sync is None:
+                    continue
+                op, value = sync
+                hit = tainted & names_in(value)
+                if hit:
+                    out.append(self.finding(
+                        ctx, node,
+                        f"{op} on device value '{sorted(hit)[0]}' inside a "
+                        f"sweep loop in '{fn.name}' — blocking device->host "
+                        f"transfer every iteration"))
+        # one finding per location (nested loops walk the same nodes twice)
+        seen: set[tuple[int, int]] = set()
+        uniq = []
+        for f in out:
+            if (f.line, f.col) not in seen:
+                seen.add((f.line, f.col))
+                uniq.append(f)
+        return uniq
+
+
+def _all_functions(tree: ast.Module) -> list[ast.FunctionDef]:
+    return [n for n in ast.walk(tree) if isinstance(n, ast.FunctionDef)]
+
+
+def _traced_functions(tree: ast.Module) -> set[ast.FunctionDef]:
+    """Functions whose bodies run under jax tracing.
+
+    Detected from: ``@jax.jit`` / ``@partial(jax.jit, ...)`` decorators,
+    ``jax.jit(f)`` / ``shard_map(f, ...)`` call sites naming a local
+    function, and cond/body arguments of ``lax.while_loop`` & friends.
+    """
+    by_name: dict[str, ast.FunctionDef] = {}
+    for fn in _all_functions(tree):
+        by_name[fn.name] = fn
+
+    traced: set[ast.FunctionDef] = set()
+    for fn in _all_functions(tree):
+        for deco in fn.decorator_list:
+            if dotted_name(deco) in _TRACING_CALLS:
+                traced.add(fn)
+            elif isinstance(deco, ast.Call) and _is_jit_wrapping(deco):
+                traced.add(fn)
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if _is_jit_wrapping(node):
+            for arg in node.args:
+                name = dotted_name(arg)
+                if name in by_name:
+                    traced.add(by_name[name])
+        elif dotted_name(node.func) in _LOOP_PRIMITIVES:
+            for arg in node.args[:2]:   # cond, body
+                name = dotted_name(arg)
+                if name in by_name:
+                    traced.add(by_name[name])
+    return traced
+
+
+def _device_tainted_names(fn: ast.FunctionDef) -> set[str]:
+    """Names in ``fn`` holding results of jitted sweep callables.
+
+    Seeds: ``plan.step(...)``-style dispatches and calls through names
+    bound to ``jax.jit(...)`` / ``make_*_step(...)`` products; taint then
+    propagates through plain assignments until fixpoint.
+    """
+    jitted_callables: set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            call = node.value
+            made = _is_jit_wrapping(call)
+            fname = dotted_name(call.func)
+            if fname and _STEP_FACTORY.match(fname.rsplit(".", 1)[-1]):
+                made = True
+            if made:
+                for t in node.targets:
+                    jitted_callables.update(assigned_names(t))
+
+    def is_seed(call: ast.Call) -> bool:
+        func = call.func
+        if isinstance(func, ast.Attribute):
+            root = func.value
+            if (func.attr in _SWEEP_METHODS and isinstance(root, ast.Name)
+                    and root.id in _PLAN_RECEIVERS):
+                return True
+        if isinstance(func, ast.Name) and func.id in jitted_callables:
+            return True
+        return False
+
+    tainted: set[str] = set()
+    for _ in range(10):
+        before = len(tainted)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign):
+                value, targets = node.value, node.targets
+            elif isinstance(node, ast.AugAssign):
+                value, targets = node.value, [node.target]
+            else:
+                continue
+            seed = any(is_seed(c) for c in ast.walk(value)
+                       if isinstance(c, ast.Call))
+            if seed or (tainted & names_in(value)):
+                for t in targets:
+                    tainted.update(assigned_names(t))
+        if len(tainted) == before:
+            break
+    return tainted

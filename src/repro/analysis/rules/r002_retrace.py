@@ -1,0 +1,126 @@
+"""R002 — retrace hazard: ad-hoc jit and stringified cache keys.
+
+One XLA trace per shape bucket is the engine's core perf contract
+(``tests/test_engine.py`` pins it; the trace auditor generalizes it).
+Two code shapes silently break it:
+
+* **ad-hoc ``jax.jit`` outside compile-owning modules** — a jit created
+  in glue/driver code closes over raw Python shapes instead of going
+  through ``engine/bucketing.py``; every new (n, m) pair is a fresh
+  trace and the compile cache never sees it.  Compile-owning modules
+  (``engine/backends/``, ``kernels/``, ``core/``) are allowlisted: that
+  is where jits are *supposed* to be created, keyed by bucket.
+* **stringified compile-cache keys** — an f-string / ``str()`` /
+  ``.format()`` key handed to ``CompileCache.get_or_build`` collapses
+  structurally different statics into one string (or worse, embeds a
+  repr that differs per object identity).  Keys must stay structured
+  hashable tuples so bucket/config equality is what drives reuse.
+
+Justified one-off jits (e.g. a serving session's prefill/decode pair,
+jitted once per process) carry ``# lint: retrace-ok — <why>``.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.findings import Finding
+from repro.analysis.rules.base import ModuleContext, Rule, dotted_name
+
+# Modules whose whole purpose is creating jitted executables keyed by
+# shape bucket.  Everything else in src/repro is glue and must route
+# compilation through the engine.
+_COMPILE_OWNING = ("engine/backends/", "kernels/", "core/",
+                   "parallel/", "models/", "train/", "optim/")
+
+_JIT_NAMES = {"jax.jit", "jit", "pjit", "jax.pmap", "pmap"}
+
+
+def _is_jit_site(node: ast.AST) -> bool:
+    if dotted_name(node) in _JIT_NAMES:
+        return True
+    if isinstance(node, ast.Call):
+        name = dotted_name(node.func)
+        if name in _JIT_NAMES:
+            return True
+        if name in ("partial", "functools.partial") and node.args:
+            return dotted_name(node.args[0]) in _JIT_NAMES
+    return False
+
+
+def _stringified(node: ast.AST) -> str | None:
+    """Describe the first string-building construct under ``node``."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.JoinedStr):
+            return "f-string"
+        if isinstance(sub, ast.Call):
+            if isinstance(sub.func, ast.Name) and sub.func.id in ("str",
+                                                                  "repr"):
+                return f"{sub.func.id}()"
+            if isinstance(sub.func, ast.Attribute) \
+                    and sub.func.attr == "format":
+                return ".format()"
+        if isinstance(sub, ast.BinOp) and isinstance(sub.op, ast.Mod):
+            left = sub.left
+            if isinstance(left, ast.Constant) and isinstance(left.value, str):
+                return "%-format"
+    return None
+
+
+class RetraceRule(Rule):
+    id = "R002"
+    tag = "retrace"
+    description = ("retrace hazards: jax.jit outside compile-owning modules "
+                   "and stringified compile-cache keys bypassing bucketing")
+
+    def check(self, ctx: ModuleContext) -> list[Finding]:
+        findings: list[Finding] = []
+        if not ctx.relpath.startswith(_COMPILE_OWNING):
+            findings.extend(self._check_adhoc_jit(ctx))
+        findings.extend(self._check_cache_keys(ctx))
+        return findings
+
+    def _check_adhoc_jit(self, ctx: ModuleContext) -> list[Finding]:
+        out = []
+        for node in ast.walk(ctx.tree):
+            site = None
+            if isinstance(node, ast.FunctionDef):
+                for deco in node.decorator_list:
+                    if _is_jit_site(deco):
+                        site = deco
+                        break
+            elif isinstance(node, ast.Call) and _is_jit_site(node):
+                site = node
+            if site is not None:
+                out.append(self.finding(
+                    ctx, site,
+                    f"jax.jit created in non-compile-owning module "
+                    f"'{ctx.relpath}' — specializes on raw Python shapes, "
+                    f"bypassing engine/bucketing.py and the CompileCache; "
+                    f"route through Engine/backend build() instead"))
+        return out
+
+    def _check_cache_keys(self, ctx: ModuleContext) -> list[Finding]:
+        out = []
+        # function-local (and module-level) Name -> assigned value, for
+        # resolving `key = (...); cache.get_or_build(key, ...)`
+        assigns: dict[str, ast.AST] = {}
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                assigns[node.targets[0].id] = node.value
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "get_or_build" and node.args):
+                continue
+            key = node.args[0]
+            if isinstance(key, ast.Name) and key.id in assigns:
+                key = assigns[key.id]
+            how = _stringified(key)
+            if how:
+                out.append(self.finding(
+                    ctx, node.args[0],
+                    f"compile-cache key built with {how} — stringified keys "
+                    f"collapse distinct statics (or embed per-object reprs) "
+                    f"and defeat bucket reuse; use a structured tuple key"))
+        return out

@@ -1,0 +1,147 @@
+"""R003 — backend protocol conformance.
+
+``engine/registry.py`` dispatches backends dynamically (duck-typed
+Protocol), so a drifted method name or a renamed positional argument in
+one backend only fails at runtime, possibly deep inside an out-of-core
+sweep.  This rule statically checks every ``@register_backend`` class in
+``engine/backends/`` against the reference surface:
+
+* solo quartet: ``plan_key`` / ``build`` / ``prepare`` / ``run``,
+  plus a ``name`` class attribute and an explicit ``supports_batch``;
+* ``supports_batch = True`` additionally requires the batched trio
+  ``build_batch`` / ``prepare_batch`` / ``run_batch``;
+* ``supports_partition = True`` additionally requires the eight
+  partition hooks the ooc driver calls.
+
+Positional parameter *names* must match exactly — the engine and the
+partition driver pass several of these by keyword.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.findings import Finding
+from repro.analysis.rules.base import ModuleContext, Rule, dotted_name
+
+# method -> expected positional parameter names (after self)
+_SOLO = {
+    "plan_key": ["config"],
+    "build": ["bucket", "config"],
+    "prepare": ["graph", "bucket", "config"],
+    "run": ["plan", "inputs", "n_real", "init_labels", "init_active"],
+}
+_BATCH = {
+    "build_batch": ["bucket", "config"],
+    "prepare_batch": ["batch", "bucket", "config"],
+    "run_batch": ["plan", "inputs", "init_labels", "init_active"],
+}
+_PARTITION = {
+    "build_partition": ["config"],
+    "partition_caps": ["budget", "d_bucket"],
+    "partition_prepare_nbytes": ["shapes"],
+    "prepare_partition": ["resident", "shapes", "config"],
+    "partition_move": ["ops_ns", "inputs", "labels_loc", "cand_owned",
+                       "seed", "bound"],
+    "partition_wake": ["ops_ns", "inputs", "changed_loc"],
+    "partition_split": ["ops_ns", "inputs", "comm_loc", "labels_loc",
+                        "active_owned", "bound"],
+    "partition_split_wake": ["ops_ns", "inputs", "comm_loc", "changed_loc"],
+}
+
+
+def _registered_backend(cls: ast.ClassDef) -> bool:
+    for deco in cls.decorator_list:
+        if isinstance(deco, ast.Call) \
+                and dotted_name(deco.func) == "register_backend":
+            return True
+    return False
+
+
+def _class_attr(cls: ast.ClassDef, attr: str):
+    """(found, constant value or None) for a class-body assignment."""
+    for stmt in cls.body:
+        targets = []
+        if isinstance(stmt, ast.Assign):
+            targets = [t for t in stmt.targets if isinstance(t, ast.Name)]
+            value = stmt.value
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            targets = [stmt.target] if isinstance(stmt.target,
+                                                  ast.Name) else []
+            value = stmt.value
+        else:
+            continue
+        if any(t.id == attr for t in targets):
+            if isinstance(value, ast.Constant):
+                return True, value.value
+            return True, None
+    return False, None
+
+
+def _positional_params(fn: ast.FunctionDef) -> list[str]:
+    names = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+    if names and names[0] in ("self", "cls"):
+        names = names[1:]
+    return names
+
+
+class ProtocolRule(Rule):
+    id = "R003"
+    tag = "protocol"
+    description = ("registered backends must implement the full "
+                   "build/prepare/run x solo/batch/partition surface with "
+                   "reference parameter names")
+
+    def applies(self, relpath: str) -> bool:
+        return relpath.startswith("engine/backends/")
+
+    def check(self, ctx: ModuleContext) -> list[Finding]:
+        findings: list[Finding] = []
+        for cls in ast.walk(ctx.tree):
+            if isinstance(cls, ast.ClassDef) and _registered_backend(cls):
+                findings.extend(self._check_class(ctx, cls))
+        return findings
+
+    def _check_class(self, ctx: ModuleContext,
+                     cls: ast.ClassDef) -> list[Finding]:
+        out: list[Finding] = []
+        methods = {stmt.name: stmt for stmt in cls.body
+                   if isinstance(stmt, ast.FunctionDef)}
+
+        has_name, _ = _class_attr(cls, "name")
+        if not has_name:
+            out.append(self.finding(
+                ctx, cls, f"backend '{cls.name}' has no `name` class "
+                f"attribute (registry reporting relies on it)"))
+        has_sb, _ = _class_attr(cls, "supports_batch")
+        if not has_sb:
+            out.append(self.finding(
+                ctx, cls, f"backend '{cls.name}' must declare "
+                f"`supports_batch` explicitly (Engine.fit_many dispatches "
+                f"on it; a missing attr reads as False by accident)"))
+
+        required = dict(_SOLO)
+        _, batch_val = _class_attr(cls, "supports_batch")
+        if has_sb and batch_val:
+            required.update(_BATCH)
+        has_sp, part_val = _class_attr(cls, "supports_partition")
+        if has_sp and part_val:
+            required.update(_PARTITION)
+
+        for meth, want in required.items():
+            fn = methods.get(meth)
+            if fn is None:
+                out.append(self.finding(
+                    ctx, cls,
+                    f"backend '{cls.name}' is missing `{meth}"
+                    f"({', '.join(want)})` — registry dispatch fails only "
+                    f"at runtime"))
+                continue
+            got = _positional_params(fn)
+            if got != want:
+                out.append(self.finding(
+                    ctx, fn,
+                    f"backend '{cls.name}'.{meth} positional params "
+                    f"({', '.join(got)}) drift from the protocol "
+                    f"({', '.join(want)}) — keyword call sites in the "
+                    f"engine/ooc driver will break"))
+        return out

@@ -1,0 +1,106 @@
+"""Runtime trace auditor: zero excess retraces, mechanically checked.
+
+The repo's perf contract is *one XLA trace per (backend, bucket) per
+stage*: same-bucket traffic must reuse compiled executables across solo,
+batched, warm-started, and out-of-core fits.  ``tests/test_engine.py``
+pinned this for one solo case; :class:`TraceAudit` generalizes it into a
+gate over any workload:
+
+    with TraceAudit() as audit:
+        run_workload()
+    audit.assert_no_excess()          # or audit.report() / write_json()
+
+Attribution: the engine (and the ooc driver) wrap backend dispatches in
+:func:`repro.engine.cache.trace_context`, so every ``TRACE_LOG.record``
+fired inside a traced function body — Python only executes those on an
+actual (re)trace — lands in a (backend, bucket) bin.  A bin with more
+than one trace for the same stage tag means jax retraced an executable
+the compile cache was supposed to reuse: a silent recompile.
+
+A *different* bucket tracing is fine (that is what buckets are for);
+the same (stage, backend, bucket) tracing twice never is.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any
+
+from repro.engine.cache import TRACE_LOG, TraceLog
+
+
+class ExcessRetraceError(AssertionError):
+    """A (stage, backend, bucket) traced more than once under audit."""
+
+
+class TraceAudit:
+    """Context manager diffing per-context trace counts around a workload."""
+
+    def __init__(self, log: TraceLog | None = None):
+        self.log = log if log is not None else TRACE_LOG
+        self._before: dict[tuple, int] = {}
+        self._after: dict[tuple, int] | None = None
+
+    def __enter__(self) -> "TraceAudit":
+        self._before = self.log.context_snapshot()
+        self._after = None
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self._after = self.log.context_snapshot()
+
+    def _snapshot_now(self) -> dict[tuple, int]:
+        return self._after if self._after is not None \
+            else self.log.context_snapshot()
+
+    def deltas(self) -> dict[tuple, int]:
+        """(stage tag, context) -> traces during the audited region."""
+        after = self._snapshot_now()
+        out = {}
+        for key, count in after.items():
+            d = count - self._before.get(key, 0)
+            if d > 0:
+                out[key] = d
+        return out
+
+    def excess(self) -> dict[tuple, int]:
+        """The violations: any (stage, context) that traced > 1 time."""
+        return {k: v for k, v in self.deltas().items() if v > 1}
+
+    def report(self) -> dict[str, Any]:
+        rows = []
+        for (tag, ctx), count in sorted(self.deltas().items(),
+                                        key=lambda kv: repr(kv[0])):
+            backend, bucket = (None, None) if ctx is None else ctx
+            rows.append({
+                "stage": tag,
+                "backend": backend,
+                "bucket": list(bucket) if isinstance(bucket, tuple)
+                else bucket,
+                "traces": count,
+                "excess": count > 1,
+            })
+        n_excess = sum(1 for r in rows if r["excess"])
+        return {
+            "contexts": rows,
+            "total_traces": sum(r["traces"] for r in rows),
+            "excess_contexts": n_excess,
+            "ok": n_excess == 0,
+        }
+
+    def assert_no_excess(self) -> None:
+        bad = self.excess()
+        if bad:
+            lines = [f"  {tag} @ {ctx}: {count} traces"
+                     for (tag, ctx), count in sorted(bad.items(),
+                                                     key=lambda kv:
+                                                     repr(kv[0]))]
+            raise ExcessRetraceError(
+                "excess retraces — the compile cache was bypassed for:\n"
+                + "\n".join(lines))
+
+    def write_json(self, path) -> dict[str, Any]:
+        report = self.report()
+        with open(path, "w") as fh:
+            json.dump(report, fh, indent=2, default=str)
+            fh.write("\n")
+        return report

@@ -1,0 +1,80 @@
+"""The representative audit workload: every execution path, twice.
+
+Each leg runs a *cold* fit (one trace per stage is expected) followed by
+same-bucket / warm / repeat traffic that must be trace-free:
+
+* solo cold + same-bucket second graph + warm refit (segment, tile);
+* batched ``fit_many`` twice over the same batch bucket;
+* sharded solo (single-device mesh) cold + same-bucket;
+* out-of-core partitioned fit, cold + warm repeat (segment, tile).
+
+Sized to stay cheap enough for CI (a few hundred vertices per graph)
+while still exercising the compile cache across every dispatch family.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from repro.analysis.trace_audit import TraceAudit
+
+
+def _tight_budget(graph, backend: str) -> int:
+    """Well under the in-core edge bytes, so the fit must partition
+    (tile's floor covers one dense (8, d_bucket) tile)."""
+    from repro.partition.ooc import IN_CORE_EDGE_BYTES
+    in_core = graph.m_pad * IN_CORE_EDGE_BYTES
+    if backend == "tile":
+        return max(in_core // 2, 20_000)
+    return in_core // 3
+
+
+def run_workload(include_sharded: bool = True,
+                 include_ooc: bool = True) -> dict[str, Any]:
+    """Run the audit workload; returns simple coverage counters."""
+    from repro.engine import CompileCache, Engine, EngineConfig
+    from repro.graphgen import erdos_renyi
+
+    eng = Engine(EngineConfig(warm_start="auto"), cache=CompileCache())
+    g1 = erdos_renyi(200, 5.0, seed=1)
+    g2 = erdos_renyi(230, 5.0, seed=2)   # same pow2 bucket as g1
+    fits = 0
+
+    for backend in ("segment", "tile"):
+        eng.fit(g1, backend=backend)             # cold: traces expected
+        eng.fit(g2, backend=backend)             # same bucket: cache hit
+        r = eng.fit(g2, backend=backend)         # warm refit
+        assert r.warm_started and r.cache_hit
+        eng.fit_many([g1, g2], backend=backend)  # batched cold
+        eng.fit_many([g2, g1], backend=backend)  # same batch bucket
+        fits += 7
+
+    if include_sharded:
+        eng.fit(g1, backend="sharded")
+        r = eng.fit(g2, backend="sharded")
+        assert r.cache_hit
+        fits += 2
+
+    if include_ooc:
+        # denser graph: tile's budget floor (one dense tile, ~20 KB) must
+        # stay well under the in-core edge bytes or nothing partitions
+        g3 = erdos_renyi(400, 16.0, seed=4)
+        for backend in ("segment", "tile"):
+            budget = _tight_budget(g3, backend)
+            r = eng.fit(g3, backend=backend, memory_budget=budget)
+            assert r.partitions > 1, "budget did not force partitioning"
+            r = eng.fit(g3, backend=backend, memory_budget=budget)
+            assert r.warm_started
+            fits += 2
+
+    return {"fits": fits, "sharded": include_sharded, "ooc": include_ooc}
+
+
+def audit_workload(include_sharded: bool = True,
+                   include_ooc: bool = True) -> TraceAudit:
+    """Run the workload under a :class:`TraceAudit`; caller inspects
+    ``report()`` / ``assert_no_excess()``."""
+    with TraceAudit() as audit:
+        coverage = run_workload(include_sharded=include_sharded,
+                                include_ooc=include_ooc)
+    audit.coverage = coverage
+    return audit

@@ -14,7 +14,6 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.graph import Graph, to_padded_neighbors
 from repro.core.lpa import _label_hash  # shared tie-break hash

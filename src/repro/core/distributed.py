@@ -235,6 +235,7 @@ def distributed_gsl_lpa(graph: Graph, mesh: Mesh, tau: float = 0.05,
         it += 1
         if checkpoint_cb is not None:
             checkpoint_cb("lpa", it, labels)
+        # lint: host-sync-ok — documented convergence sync: one scalar
         if int(dn) <= tau * sg.n:
             break
 
@@ -247,6 +248,7 @@ def distributed_gsl_lpa(graph: Graph, mesh: Mesh, tau: float = 0.05,
         sit += 1
         if checkpoint_cb is not None:
             checkpoint_cb("split", sit, labels2)
+        # lint: host-sync-ok — split fixed-point test, one scalar per round
         if int(dn) == 0:
             break
     return np.asarray(labels2[: sg.n]), it, sit

@@ -198,7 +198,11 @@ class SegmentBackend:
         mask[:m_w] = True
         row_ptr = np.full(n_loc + 1, m_w, np.int32)
         row_ptr[: resident.size + 1] = resident.row_ptr
-        g = Graph(n=n_loc, m_pad=m, num_edges=m_w,
+        # num_edges is static pytree aux data: it must be the *uniform*
+        # padded size, not the per-partition real count, or every distinct
+        # window width retraces the sweep jits (validity flows through
+        # edge_mask; the sweep kernels never read num_edges)
+        g = Graph(n=n_loc, m_pad=m, num_edges=m,
                   row_ptr=jnp.asarray(row_ptr), src=jnp.asarray(src),
                   dst=jnp.asarray(dst), wgt=jnp.asarray(wgt),
                   edge_mask=jnp.asarray(mask),

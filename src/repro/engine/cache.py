@@ -13,9 +13,35 @@ untouched.
 """
 from __future__ import annotations
 
+import contextlib
+import contextvars
 import threading
 from collections import Counter
 from typing import Any, Callable, Hashable
+
+# Workload attribution for the trace auditor: the engine (and the ooc
+# driver) set the current (backend, bucket) around each backend dispatch,
+# so a TRACE_LOG.record fired from inside a traced body lands in the
+# right per-workload-context bin.  A ContextVar keeps nested/threaded
+# engines from clobbering each other.
+_TRACE_CONTEXT: contextvars.ContextVar[tuple | None] = \
+    contextvars.ContextVar("repro_trace_context", default=None)
+
+
+def current_trace_context() -> tuple | None:
+    return _TRACE_CONTEXT.get()
+
+
+@contextlib.contextmanager
+def trace_context(backend: str, bucket):
+    """Attribute any traces fired in the body to ``(backend, bucket)``."""
+    token = _TRACE_CONTEXT.set((backend, tuple(bucket)
+                                if isinstance(bucket, (list, tuple))
+                                else bucket))
+    try:
+        yield
+    finally:
+        _TRACE_CONTEXT.reset(token)
 
 
 class TraceLog:
@@ -24,10 +50,14 @@ class TraceLog:
     def __init__(self):
         self._lock = threading.Lock()
         self.counts: Counter[str] = Counter()
+        # (tag, trace-context) -> count; context None for unattributed
+        self.context_counts: Counter[tuple] = Counter()
 
     def record(self, tag: str) -> None:
+        ctx = _TRACE_CONTEXT.get()
         with self._lock:
             self.counts[tag] += 1
+            self.context_counts[(tag, ctx)] += 1
 
     def total(self, prefix: str = "") -> int:
         with self._lock:
@@ -38,9 +68,14 @@ class TraceLog:
         with self._lock:
             return dict(self.counts)
 
+    def context_snapshot(self) -> dict[tuple, int]:
+        with self._lock:
+            return dict(self.context_counts)
+
     def reset(self) -> None:
         with self._lock:
             self.counts.clear()
+            self.context_counts.clear()
 
 
 TRACE_LOG = TraceLog()

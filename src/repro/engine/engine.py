@@ -39,7 +39,7 @@ from repro.core.batch import GraphBatch
 from repro.core.graph import Graph, graph_fingerprint
 from repro.core.split import split_bfs_host
 from repro.engine.bucketing import batch_bucket_for, bucket_for
-from repro.engine.cache import GLOBAL_CACHE, CompileCache
+from repro.engine.cache import GLOBAL_CACHE, CompileCache, trace_context
 from repro.engine.config import DetectionResult, EngineConfig
 from repro.engine.registry import (
     choose_backend,
@@ -293,7 +293,8 @@ class Engine:
         inputs = be.prepare(graph, bucket, cfg)
         t_prep = time.perf_counter() - t0
 
-        run = be.run(plan, inputs, graph.n, init_labels, init_active)
+        with trace_context(name, bucket):
+            run = be.run(plan, inputs, graph.n, init_labels, init_active)
         labels = np.asarray(run.labels)[: graph.n]
 
         t0 = time.perf_counter()
@@ -424,7 +425,8 @@ class Engine:
         active0 = batch.pack_active(active_r)
         t_prep = time.perf_counter() - t0
 
-        run = be.run_batch(plan, inputs, labels0, active0)
+        with trace_context(name, ("batch", *bucket)):
+            run = be.run_batch(plan, inputs, labels0, active0)
         labels_all = np.asarray(run.labels)
 
         work = np.asarray(batch.sizes + batch.edge_counts, dtype=np.float64)

@@ -26,7 +26,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced_config
-from repro.configs.base import SHAPES, ShapeSpec
 from repro.models import transformer as T
 from repro.models.common import init_from_specs
 
@@ -49,7 +48,11 @@ def serve(arch: str, reduced: bool = True, batch: int = 4,
         b["frames"] = jnp.asarray(
             rng.normal(size=(batch, 32, cfg.d_model)), jnp.bfloat16)
 
+    # jitted once per serving session at fixed (batch, s_max) shapes; no
+    # per-request shape traffic flows through these two executables
+    # lint: retrace-ok — one-off session jit, shapes fixed above
     prefill_jit = jax.jit(lambda p, bb: T.prefill(cfg, p, bb, s_max))
+    # lint: retrace-ok — one-off session jit, shapes fixed above
     decode_jit = jax.jit(lambda p, c, bb: T.decode_step(cfg, p, c, bb))
 
     t0 = time.time()

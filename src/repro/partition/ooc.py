@@ -39,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.lpa import _label_hash
+from repro.engine.cache import trace_context
 from repro.engine.config import EngineConfig
 from repro.partition.plan import (
     PartitionPlan,
@@ -237,6 +238,9 @@ def fit_out_of_core(source, config: EngineConfig | None = None, *,
     threshold = _host_threshold(n, cfg.tau, name, cfg.bucketing)
     bound = jnp.int32(n)
     exchange = Exchange(shapes)
+    # trace-audit attribution: every partition sweep dispatch of this fit
+    # lands in one (backend, partition-shape-bucket) context
+    part_ctx = ("partition", shapes.n_loc, shapes.m, shapes.rows, shapes.d)
     t_plan = time.perf_counter() - t0
 
     # --- propagation: Algorithm 3 lines 1-6, partitioned ---
@@ -244,36 +248,37 @@ def fit_out_of_core(source, config: EngineConfig | None = None, *,
     changed_prev: np.ndarray | None = None
     klass_prev: np.ndarray | None = None
     it, delta = 0, n
-    while delta > threshold and it < cfg.max_iterations:
-        delta = 0
-        for sweep in (0, 1):
-            klass = parity if sweep else ~parity
-            seed = 2 * it + sweep
-            labels_next = labels.copy()
-            changed_next = np.zeros(n, dtype=bool)
-            for i in range(plan.num_partitions):
-                res = loader.load(i, prepare)
-                part, rng = res.part, slice(res.part.lo, res.part.hi)
-                loc = res.local_ids
-                if changed_prev is not None:
-                    # lazy pruning update: finish the previous sweep's
-                    # active refresh for this partition's rows
-                    wake = be.partition_wake(
-                        sweeps, res.inputs,
-                        exchange.gather(changed_prev, loc))[: part.size]
-                    was_cand = active[rng] & klass_prev[rng]
-                    active[rng] = (active[rng] & ~was_cand) | wake
-                cand = active[rng] & klass[rng]
-                new = be.partition_move(
-                    sweeps, res.inputs, exchange.gather(labels, loc),
-                    cand, seed, bound)[: part.size]
-                exchange.scatter(labels_next, rng, new)
-                ch = new != labels[rng]
-                changed_next[rng] = ch
-                delta += int(ch.sum())
-            labels = labels_next
-            changed_prev, klass_prev = changed_next, klass
-        it += 1
+    with trace_context(name, part_ctx):
+        while delta > threshold and it < cfg.max_iterations:
+            delta = 0
+            for sweep in (0, 1):
+                klass = parity if sweep else ~parity
+                seed = 2 * it + sweep
+                labels_next = labels.copy()
+                changed_next = np.zeros(n, dtype=bool)
+                for i in range(plan.num_partitions):
+                    res = loader.load(i, prepare)
+                    part, rng = res.part, slice(res.part.lo, res.part.hi)
+                    loc = res.local_ids
+                    if changed_prev is not None:
+                        # lazy pruning update: finish the previous sweep's
+                        # active refresh for this partition's rows
+                        wake = be.partition_wake(
+                            sweeps, res.inputs,
+                            exchange.gather(changed_prev, loc))[: part.size]
+                        was_cand = active[rng] & klass_prev[rng]
+                        active[rng] = (active[rng] & ~was_cand) | wake
+                    cand = active[rng] & klass[rng]
+                    new = be.partition_move(
+                        sweeps, res.inputs, exchange.gather(labels, loc),
+                        cand, seed, bound)[: part.size]
+                    exchange.scatter(labels_next, rng, new)
+                    ch = new != labels[rng]
+                    changed_next[rng] = ch
+                    delta += int(ch.sum())
+                labels = labels_next
+                changed_prev, klass_prev = changed_next, klass
+            it += 1
     lpa_iterations = it
     t_lpa = time.perf_counter() - t0
 
@@ -288,31 +293,32 @@ def fit_out_of_core(source, config: EngineConfig | None = None, *,
         sactive = np.ones(n, dtype=bool)
         changed_prev = None
         delta = 1
-        while delta > 0:
-            slab_next = slab.copy()
-            for i in range(plan.num_partitions):
-                res = loader.load(i, prepare)
-                part, rng = res.part, slice(res.part.lo, res.part.hi)
-                loc = res.local_ids
-                comm_loc = exchange.gather(comm, loc)
-                if prune and changed_prev is not None:
-                    sactive[rng] = be.partition_split_wake(
+        with trace_context(name, part_ctx):
+            while delta > 0:
+                slab_next = slab.copy()
+                for i in range(plan.num_partitions):
+                    res = loader.load(i, prepare)
+                    part, rng = res.part, slice(res.part.lo, res.part.hi)
+                    loc = res.local_ids
+                    comm_loc = exchange.gather(comm, loc)
+                    if prune and changed_prev is not None:
+                        sactive[rng] = be.partition_split_wake(
+                            sweeps, res.inputs, comm_loc,
+                            exchange.gather(changed_prev, loc))[: part.size]
+                    new = be.partition_split(
                         sweeps, res.inputs, comm_loc,
-                        exchange.gather(changed_prev, loc))[: part.size]
-                new = be.partition_split(
-                    sweeps, res.inputs, comm_loc,
-                    exchange.gather(slab, loc), sactive[rng],
-                    bound)[: part.size]
-                exchange.scatter(slab_next, rng, new)
-            if cfg.shortcut:
-                # global pointer jump — O(n) vertex pass, same position
-                # as the in-core sweep body's `min(new, new[new])`
-                slab_next = np.minimum(slab_next, slab_next[slab_next])
-            changed = slab_next != slab
-            delta = int(changed.sum())
-            changed_prev = changed
-            slab = slab_next
-            split_iterations += 1
+                        exchange.gather(slab, loc), sactive[rng],
+                        bound)[: part.size]
+                    exchange.scatter(slab_next, rng, new)
+                if cfg.shortcut:
+                    # global pointer jump — O(n) vertex pass, same position
+                    # as the in-core sweep body's `min(new, new[new])`
+                    slab_next = np.minimum(slab_next, slab_next[slab_next])
+                changed = slab_next != slab
+                delta = int(changed.sum())
+                changed_prev = changed
+                slab = slab_next
+                split_iterations += 1
         labels = slab
     t_split = time.perf_counter() - t0
 

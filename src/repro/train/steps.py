@@ -15,8 +15,6 @@ Train step semantics:
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -26,7 +24,7 @@ from repro.configs.base import ArchConfig, SHAPES
 from repro.models import transformer as T
 from repro.models.common import abstract_from_specs, logical_axes
 from repro.optim import AdamWState, adamw_init, adamw_update, cosine_schedule
-from repro.parallel.api import MeshRules, use_rules
+from repro.parallel.api import use_rules
 from repro.parallel.rules import (
     cache_logical_axes,
     data_axes,

@@ -1,0 +1,15 @@
+"""R001 negative fixture: host-side int()/np.asarray with no device
+taint must stay clean (the rule is taint-based, not keyword-based)."""
+import numpy as np
+
+
+def host_prep(windows):
+    counts = []
+    for lo, hi in windows:
+        counts.append(int(hi - lo))
+    return np.asarray(counts)
+
+
+def scalar_config(tau, n):
+    threshold = int(np.float32(tau) * np.float32(n))
+    return threshold

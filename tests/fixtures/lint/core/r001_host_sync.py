@@ -1,0 +1,21 @@
+"""R001 positive fixture: host syncs on traced / device values.
+
+Never imported — the lint tests feed this file's *source* through the
+analyzer and assert the EXPECT-marked lines are flagged.
+"""
+import jax
+
+
+@jax.jit
+def traced_scalarize(labels, n_real):
+    return labels.sum() + int(n_real)  # EXPECT-R001
+
+
+def host_driven_sweeps(plan, graph, labels, active):
+    it = 0
+    while it < 10:
+        labels, active, dn = plan.step(graph, labels, active)
+        it += 1
+        if int(dn) == 0:  # EXPECT-R001
+            break
+    return labels

@@ -1,0 +1,11 @@
+"""R001 suppression fixture: the hazard is real but justified inline —
+the linter must report it as suppressed, not active."""
+
+
+def drive(plan, graph, labels, active):
+    while True:
+        labels, active, dn = plan.step(graph, labels, active)
+        # lint: host-sync-ok — fixture: justified convergence readback
+        if int(dn) == 0:
+            break
+    return labels

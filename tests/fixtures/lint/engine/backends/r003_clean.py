@@ -1,0 +1,20 @@
+"""R003 negative fixture: a minimal solo-only backend, fully conformant."""
+from repro.engine.registry import register_backend
+
+
+@register_backend("fixture-solo")
+class SoloBackend:
+    name = "fixture-solo"
+    supports_batch = False
+
+    def plan_key(self, config):
+        return ()
+
+    def build(self, bucket, config):
+        return object()
+
+    def prepare(self, graph, bucket, config):
+        return graph
+
+    def run(self, plan, inputs, n_real, init_labels, init_active=None):
+        return None

@@ -1,0 +1,21 @@
+"""R003 positive fixture: a registered backend that claims batch support
+but ships no batch trio, with one drifted solo signature."""
+from repro.engine.registry import register_backend
+
+
+@register_backend("fixture-broken")
+class BrokenBackend:  # EXPECT-R003
+    name = "fixture-broken"
+    supports_batch = True
+
+    def plan_key(self, config):
+        return ()
+
+    def build(self, bucket, config):
+        return object()
+
+    def prepare(self, graph, bucket, config):
+        return graph
+
+    def run(self, plan, inputs, num_real, init_labels, init_active):  # EXPECT-R003
+        return None

@@ -1,0 +1,7 @@
+"""R002 negative fixture: structured tuple cache keys are the contract."""
+
+
+def fetch_plan(cache, name, bucket, cfg, builder):
+    key = (name, tuple(bucket), cfg.algo_key())
+    plan, hit = cache.get_or_build(key, builder)
+    return plan, hit

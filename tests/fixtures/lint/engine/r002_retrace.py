@@ -1,0 +1,10 @@
+"""R002 positive fixture: ad-hoc jit in a non-compile-owning module and
+a stringified compile-cache key."""
+import jax
+
+
+def compile_step(fn, bucket, cache):
+    step = jax.jit(fn)  # EXPECT-R002
+    key = f"plan-{bucket.n}-{bucket.m}"
+    plan, hit = cache.get_or_build(key, lambda: step)  # EXPECT-R002
+    return plan, hit

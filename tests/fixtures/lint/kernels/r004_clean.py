@@ -1,0 +1,18 @@
+"""R004 negative fixture: guarded grid, pure kernel body, small blocks."""
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2
+
+
+def launch(x, n_pad, tile_b):
+    assert n_pad % tile_b == 0, (n_pad, tile_b)
+    grid = (n_pad // tile_b,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (i, 0)),
+        out_shape=None,
+    )(x)

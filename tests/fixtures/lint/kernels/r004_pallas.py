@@ -1,0 +1,18 @@
+"""R004 positive fixture: pallas_call with no divisibility guard, an
+oversized literal block footprint, and a host op in the kernel body."""
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = np.asarray(x_ref[...])  # EXPECT-R004
+
+
+def launch(x):
+    return pl.pallas_call(  # EXPECT-R004
+        _kernel,
+        grid=(8,),
+        in_specs=[pl.BlockSpec((4096, 1024), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((4096, 1024), lambda i: (i, 0)),
+        out_shape=None,
+    )(x)

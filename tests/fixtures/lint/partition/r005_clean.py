@@ -1,0 +1,10 @@
+"""R005 negative fixture: the same allocation, ledger-accounted."""
+import numpy as np
+
+
+def stage_edges(ledger, m_pad, dst):
+    nbytes = m_pad * 4
+    ledger.acquire(nbytes)
+    buf = np.zeros(m_pad, np.int32)
+    buf[: len(dst)] = dst
+    return buf

@@ -1,0 +1,8 @@
+"""R005 positive fixture: edge-scale allocation with no ledger evidence."""
+import numpy as np
+
+
+def stage_edges(m_pad, dst):
+    buf = np.zeros(m_pad, np.int32)  # EXPECT-R005
+    buf[: len(dst)] = dst
+    return buf

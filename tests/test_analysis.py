@@ -1,0 +1,182 @@
+"""The analyzer's own tests: rule IDs, file:line anchors, suppression
+handling, baseline round-trips, CLI exit codes, and the repo-clean gate.
+
+Fixture convention: files under tests/fixtures/lint/ mirror the hot-path
+package layout (the linter maps them to rule-relative paths like
+``core/...``); each positive fixture marks its expected finding lines
+with a trailing ``# EXPECT-R00X`` comment.
+"""
+import json
+import re
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (
+    Baseline,
+    Finding,
+    all_rules,
+    lint_paths,
+    lint_source,
+    rule_relpath,
+)
+from repro.launch.lint import main as lint_main
+
+FIXTURES = Path(__file__).parent / "fixtures" / "lint"
+_EXPECT = re.compile(r"#\s*EXPECT-(R\d{3})")
+
+POSITIVE = sorted(p for p in FIXTURES.rglob("*.py")
+                  if not p.stem.endswith(("_clean", "_suppressed")))
+NEGATIVE = sorted(FIXTURES.rglob("*_clean.py"))
+
+
+def _expected(path: Path) -> set[tuple[str, int]]:
+    out = set()
+    for lineno, line in enumerate(path.read_text().splitlines(), 1):
+        for rule in _EXPECT.findall(line):
+            out.add((rule, lineno))
+    return out
+
+
+def _active(findings):
+    return [f for f in findings if not f.suppressed]
+
+
+@pytest.mark.parametrize("path", POSITIVE, ids=lambda p: p.stem)
+def test_positive_fixture_flags_marked_lines(path):
+    expected = _expected(path)
+    assert expected, f"{path} has no EXPECT markers"
+    rules = {r for r, _ in expected}
+    assert len(rules) == 1, "each positive fixture triggers exactly one rule"
+    findings = _active(lint_paths([path]))
+    got = {(f.rule, f.line) for f in findings}
+    assert got == expected, f"{path.name}: {got} != {expected}"
+    relpath = rule_relpath(path)
+    for f in findings:
+        assert f.path == relpath
+        assert f.line >= 1 and f.col >= 0
+
+
+@pytest.mark.parametrize("path", NEGATIVE, ids=lambda p: p.stem)
+def test_negative_fixture_stays_clean(path):
+    assert lint_paths([path]) == []
+
+
+def test_all_five_rules_covered_by_fixtures():
+    seen = {r for p in POSITIVE for r, _ in _expected(p)}
+    assert seen == {r.id for r in all_rules()} \
+        == {"R001", "R002", "R003", "R004", "R005"}
+
+
+def test_suppression_reported_not_active():
+    path = FIXTURES / "core" / "r001_suppressed.py"
+    findings = lint_paths([path])
+    assert findings and all(f.suppressed for f in findings)
+    assert {f.rule for f in findings} == {"R001"}
+
+
+def test_suppression_same_line_and_wrong_tag():
+    hazard = (
+        "def drive(plan, g, labels, active):\n"
+        "    while True:\n"
+        "        labels, active, dn = plan.step(g, labels, active)\n"
+        "        if int(dn) == 0:  {comment}\n"
+        "            break\n"
+    )
+    ok = lint_source(hazard.format(comment="# lint: host-sync-ok — why"),
+                     "core/x.py")
+    assert ok and ok[0].suppressed
+    wrong = lint_source(hazard.format(comment="# lint: retrace-ok"),
+                        "core/x.py")
+    assert wrong and not wrong[0].suppressed
+    string_not_comment = lint_source(
+        hazard.format(comment='+ len("lint: host-sync-ok")'), "core/x.py")
+    assert string_not_comment and not string_not_comment[0].suppressed
+
+
+def test_rules_scope_by_relpath():
+    """The same hazard outside a hot-path module is not R001's business."""
+    src = (
+        "def drive(plan, g, labels, active):\n"
+        "    while True:\n"
+        "        labels, active, dn = plan.step(g, labels, active)\n"
+        "        if int(dn) == 0:\n"
+        "            break\n"
+    )
+    assert lint_source(src, "core/lpa.py")
+    assert lint_source(src, "io/formats.py") == []
+
+
+def test_syntax_error_becomes_finding():
+    bad = lint_source("def broken(:\n", "core/x.py")
+    assert len(bad) == 1 and bad[0].rule == "E000"
+
+
+def test_rule_relpath_anchors():
+    assert rule_relpath(Path("/r/src/repro/engine/backends/segment.py")) \
+        == "engine/backends/segment.py"
+    assert rule_relpath(Path("/r/tests/fixtures/lint/core/x.py")) \
+        == "core/x.py"
+    assert rule_relpath(Path("/elsewhere/thing.py")) == "thing.py"
+
+
+def test_baseline_roundtrip(tmp_path):
+    findings = _active(lint_paths([FIXTURES]))
+    assert findings
+    path = tmp_path / "baseline.json"
+    n = Baseline.dump(findings, path)
+    assert n == len({f.identity() for f in findings})
+    baseline = Baseline.load(str(path))
+    assert all(f in baseline for f in findings)
+    # line-shifted twin still matches (identity is line-independent)
+    f = findings[0]
+    shifted = Finding(rule=f.rule, path=f.path, line=f.line + 40,
+                      col=f.col, message=f.message)
+    assert shifted in baseline
+    assert Finding(rule=f.rule, path=f.path, line=f.line, col=f.col,
+                   message="other") not in baseline
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    # fixtures carry positives -> strict fails, report-only passes
+    assert lint_main([str(FIXTURES), "--strict"]) == 1
+    assert lint_main([str(FIXTURES)]) == 0
+    clean = FIXTURES / "core" / "r001_clean.py"
+    assert lint_main([str(clean), "--strict"]) == 0
+    assert lint_main(["--list-rules"]) == 0
+    assert lint_main([str(FIXTURES), "--rules", "R999"]) == 2
+    capsys.readouterr()
+    assert lint_main([str(FIXTURES), "--json"]) == 0
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["new"] == len(payload["findings"]) > 0
+    rules = {f["rule"] for f in payload["findings"]}
+    assert rules == {"R001", "R002", "R003", "R004", "R005"}
+
+
+def test_cli_baseline_gates_strict(tmp_path):
+    baseline = tmp_path / "baseline.json"
+    assert lint_main([str(FIXTURES), "--write-baseline",
+                      "--baseline", str(baseline)]) == 0
+    assert lint_main([str(FIXTURES), "--strict",
+                      "--baseline", str(baseline)]) == 0
+
+
+def test_vmem_ceiling_knob():
+    path = FIXTURES / "kernels" / "r004_clean.py"
+    assert lint_paths([path]) == []
+    # 8*128*4 bytes/spec * 2 specs = 8 KiB; a 4 KiB ceiling trips it
+    tight = all_rules(vmem_ceiling=4096)
+    findings = _active(lint_paths([path], tight))
+    assert findings and "VMEM" in findings[0].message
+
+
+def test_repo_is_clean_under_strict():
+    """The committed state of src/repro passes the strict gate: no
+    active findings beyond the committed baseline."""
+    import repro
+    pkg = Path(repro.__file__).parent
+    baseline_path = pkg / "analysis" / "baseline.json"
+    baseline = Baseline.load(str(baseline_path)) \
+        if baseline_path.exists() else Baseline()
+    new = [f for f in _active(lint_paths([pkg])) if f not in baseline]
+    assert new == [], "\n".join(f.format() for f in new)

@@ -1,11 +1,10 @@
 """Baseline LPA implementations (the paper's comparison set)."""
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core import disconnected_fraction, modularity, split_lp
 from repro.core.baselines import flpa_host, igraph_lpa_host, networkit_plp
-from repro.graphgen import karate_club, planted_partition, ring_of_cliques
+from repro.graphgen import planted_partition, ring_of_cliques
 
 BASELINES = {"flpa": flpa_host, "igraph": igraph_lpa_host,
              "networkit_plp": networkit_plp}

@@ -1,6 +1,4 @@
 """Checkpoint manager: roundtrip, atomicity, keep-k, hash verify, elastic."""
-import json
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,5 +1,4 @@
 """Dense (kernel-tile) LPA path == sparse (sort/segment) path, bit-exact."""
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -7,7 +7,6 @@ import jax.numpy as jnp
 
 from repro.core import disconnected_fraction, gsl_lpa, gve_lpa
 from repro.engine import (
-    TRACE_LOG,
     CompileCache,
     Engine,
     EngineConfig,
@@ -53,25 +52,24 @@ def test_backend_label_parity(name):
 def test_same_bucket_compiles_once(backend):
     """Two different graphs (different n, edges) in one shape bucket ->
     exactly one trace/compile per backend stage, and the second fit is a
-    cache hit with a valid result."""
+    cache hit with a valid result.  Audited via the general trace-audit
+    gate (tests/test_trace_audit.py runs the full-workload version)."""
+    from repro.analysis import TraceAudit
     g1 = erdos_renyi(200, 5.0, seed=1)
     g2 = erdos_renyi(230, 5.0, seed=2)
     eng = fresh_engine(backend=backend)
 
-    before = TRACE_LOG.snapshot()
-    r1 = eng.fit(g1)
-    mid = TRACE_LOG.snapshot()
-    r2 = eng.fit(g2)
-    after = TRACE_LOG.snapshot()
+    with TraceAudit() as audit:
+        r1 = eng.fit(g1)
+        r2 = eng.fit(g2)
 
     assert r1.bucket == r2.bucket
     assert not r1.cache_hit and r2.cache_hit
-    first = {k: mid[k] - before.get(k, 0) for k in mid
-             if mid[k] != before.get(k, 0)}
-    second = {k: after[k] - mid.get(k, 0) for k in after
-              if after[k] != mid.get(k, 0)}
-    assert first == {f"{backend}:propagate": 1, f"{backend}:split": 1}
-    assert second == {}, f"second same-bucket fit retraced: {second}"
+    audit.assert_no_excess()   # nothing traced twice, incl. the 2nd fit
+    deltas = audit.deltas()
+    assert {tag for tag, _ in deltas} == {f"{backend}:propagate",
+                                          f"{backend}:split"}
+    assert all(ctx == (backend, r1.bucket) for _, ctx in deltas)
     assert float(disconnected_fraction(g2, jnp.asarray(r2.labels))) == 0.0
 
 

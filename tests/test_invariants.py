@@ -9,7 +9,6 @@ import pytest
 from repro.core import disconnected_communities_host
 from repro.engine import CompileCache, Engine, EngineConfig
 from repro.graphgen import (
-    erdos_renyi,
     figure1_graph,
     grid2d,
     karate_club,

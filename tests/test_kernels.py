@@ -12,7 +12,7 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.graph import to_padded_neighbors
 from repro.kernels import ops
-from repro.kernels.ref import label_argmax_ref, min_label_ref
+from repro.kernels.ref import label_argmax_ref
 from conftest import random_graph
 
 

@@ -7,7 +7,6 @@ pytest.importorskip(
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import modularity
-from repro.core.graph import build_graph
 from repro.graphgen import karate_club, ring_of_cliques
 from conftest import random_graph
 

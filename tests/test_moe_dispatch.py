@@ -9,7 +9,6 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.models import moe as moe_mod
 from repro.models.common import init_from_specs

@@ -1,5 +1,4 @@
 """Optimizer, schedule, and gradient-compression tests."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

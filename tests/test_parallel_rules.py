@@ -1,14 +1,11 @@
 """Sharding-rule unit tests (logical->physical mapping, ZeRO-1, caches)."""
 import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
 from repro.models import transformer as T
 from repro.models.common import abstract_from_specs, logical_axes
-from repro.parallel.api import MeshRules
 from repro.parallel.rules import (
     cache_logical_axes,
     make_rules,

@@ -10,7 +10,6 @@ The acceptance contract this suite pins:
   * ``check_connected == 0`` still holds globally after the
     per-partition split + cross-partition unification.
 """
-import os
 
 import numpy as np
 import pytest
@@ -25,7 +24,6 @@ from repro.partition.ooc import (
 )
 from repro.partition.plan import (
     attach_halos,
-    halo_of,
     parse_bytes,
     plan_partitions,
 )

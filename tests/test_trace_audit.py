@@ -1,0 +1,72 @@
+"""Trace-audit gate: zero excess retraces across every execution path.
+
+Generalizes the old single-case one-trace-per-bucket assertion into the
+workload gate the ISSUE/CI run: solo cold, same-bucket reuse, warm
+refits, batched dispatch, sharded, and out-of-core partitioned sweeps
+all execute under one audit, and no (stage, backend, bucket) may trace
+more than once.
+"""
+import pytest
+
+from repro.analysis import ExcessRetraceError, TraceAudit, audit_workload
+from repro.engine.cache import TRACE_LOG, current_trace_context, trace_context
+
+
+def test_trace_context_attribution():
+    assert current_trace_context() is None
+    with trace_context("segment", (256, 2048, 128)):
+        assert current_trace_context() == ("segment", (256, 2048, 128))
+        with trace_context("tile", (8,)):
+            assert current_trace_context() == ("tile", (8,))
+        assert current_trace_context() == ("segment", (256, 2048, 128))
+    assert current_trace_context() is None
+
+
+def test_record_lands_in_current_context():
+    before = TRACE_LOG.context_snapshot()
+    with trace_context("fake-backend", (1, 2)):
+        TRACE_LOG.record("fake-backend:stage")
+    after = TRACE_LOG.context_snapshot()
+    key = ("fake-backend:stage", ("fake-backend", (1, 2)))
+    assert after.get(key, 0) - before.get(key, 0) == 1
+    # plain per-tag counters keep working for existing tests
+    assert TRACE_LOG.snapshot()["fake-backend:stage"] >= 1
+
+
+def test_audit_detects_excess():
+    with TraceAudit() as audit:
+        with trace_context("fake-backend", (3, 4)):
+            TRACE_LOG.record("fake-backend:stage")
+            TRACE_LOG.record("fake-backend:stage")
+    key = ("fake-backend:stage", ("fake-backend", (3, 4)))
+    assert audit.excess() == {key: 2}
+    report = audit.report()
+    assert not report["ok"] and report["excess_contexts"] == 1
+    with pytest.raises(ExcessRetraceError, match="fake-backend:stage"):
+        audit.assert_no_excess()
+
+
+def test_audit_single_trace_is_clean(tmp_path):
+    with TraceAudit() as audit:
+        with trace_context("fake-backend", (5, 6)):
+            TRACE_LOG.record("fake-backend:stage")
+    assert audit.excess() == {}
+    report = audit.write_json(tmp_path / "audit.json")
+    assert report["ok"] and (tmp_path / "audit.json").exists()
+
+
+def test_workload_zero_excess_retraces():
+    """The acceptance gate: solo + same-bucket + warm + batched + sharded
+    + out-of-core, all under one audit, zero excess retraces."""
+    audit = audit_workload()
+    report = audit.report()
+    assert report["ok"], report
+    assert audit.excess() == {}
+    # the workload genuinely exercised every dispatch family
+    stages = {row["stage"] for row in report["contexts"]}
+    for expected in ("segment:propagate", "segment:batch_propagate",
+                     "segment:part_move", "tile:propagate",
+                     "tile:batch_propagate", "tile:part_move",
+                     "sharded:propagate"):
+        assert expected in stages, f"workload never traced {expected}"
+    audit.assert_no_excess()

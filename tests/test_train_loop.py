@@ -1,8 +1,6 @@
 """End-to-end training loop: learning, checkpoint/restart determinism,
 preemption, straggler detection."""
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.ft import PreemptionHandler, StragglerMonitor
 from repro.launch.train import run
