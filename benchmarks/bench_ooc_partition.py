@@ -107,6 +107,11 @@ def main() -> None:
          "exchange_bytes": run.exchange_bytes,
          "lpa_iterations": run.lpa_iterations,
          "split_iterations": run.split_iterations,
+         "fused": run.fused,
+         "prefetches": run.prefetches,
+         "prefetch_hits": run.prefetch_hits,
+         "halo_cache_hits": run.halo_cache_hits,
+         "halo_cache_bytes_saved": run.halo_cache_bytes_saved,
          "slowdown_vs_in_core": round(t_ooc / t_in_core, 2)},
     ]
     emit(rows, "ooc_partition")

@@ -1,33 +1,62 @@
-"""Render the §Roofline markdown table for EXPERIMENTS.md from dry-run JSONs.
+"""Render BENCH_roofline.json as the §Roofline markdown tables.
 
-  PYTHONPATH=src:. python benchmarks/report_roofline_md.py [mesh]
+  PYTHONPATH=src python benchmarks/report_roofline_md.py [BENCH_roofline.json]
+
+Two tables: the per-kernel scoreboard (fused vs. separate dispatch, per
+degree bucket — model HBM bytes, measured wall, achieved vs. measured
+peak bytes/s and FLOP/s) and the out-of-core sweep comparison
+(overlapped vs. serial driver).  Run ``bench_roofline.py`` first.
 """
 from __future__ import annotations
 
+import json
 import sys
 
-from benchmarks.bench_roofline import run
+
+def _si(x: float) -> str:
+    for unit, div in (("G", 1e9), ("M", 1e6), ("K", 1e3)):
+        if x >= div:
+            return f"{x / div:.2f} {unit}"
+    return f"{x:.0f} "
 
 
-def fmt(x, digits=3):
-    if x == 0:
-        return "0"
-    return f"{x:.{digits}e}"
+def main(path: str = "BENCH_roofline.json") -> None:
+    rows = json.load(open(path))
+    peaks = next(r for r in rows if r["kind"] == "peaks")
+    print(f"Measured peaks ({peaks['backend']}): "
+          f"{_si(peaks['peak_bytes_per_s'])}B/s, "
+          f"{_si(peaks['peak_flops_per_s'])}FLOP/s\n")
 
-
-def main(mesh: str = "pod") -> None:
-    rows = run(quiet=True, mesh=mesh)
-    print(f"| arch | shape | t_compute (s) | t_memory (s) | t_collective (s)"
-          f" | dominant | roofline frac | useful ratio | flops src |")
-    print("|---|---|---|---|---|---|---|---|---|")
+    print("| sweep | variant | d | mode | wall (ms) | model B/cell "
+          "| achieved B/s | % peak BW | achieved FLOP/s | % peak FLOPs |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
     for r in rows:
-        print(f"| {r['arch']} | {r['shape']} | {fmt(r['t_compute_s'])} "
-              f"| {fmt(r['t_memory_s'])} | {fmt(r['t_collective_s'])} "
-              f"| **{r['dominant']}** "
-              f"| {r.get('roofline_fraction', 0):.3f} "
-              f"| {r.get('useful_ratio', 0):.2f} "
-              f"| {r['flops_source']} |")
+        if r["kind"] != "kernel":
+            continue
+        print(f"| {r['sweep']} | {r['variant']} | {r['d']} | {r['mode']} "
+              f"| {r['seconds'] * 1e3:.2f} | {r['model_bytes_per_cell']} "
+              f"| {_si(r['achieved_bytes_per_s'])}B/s "
+              f"| {100 * r['frac_of_peak_bw']:.2f}% "
+              f"| {_si(r['achieved_flops_per_s'])}FLOP/s "
+              f"| {100 * r['frac_of_peak_flops']:.2f}% |")
+
+    print("\n| ooc driver | wall (s) | edges/s | partitions | fused "
+          "| prefetch hits | cache hits | peak bytes / budget |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r["kind"] != "ooc":
+            continue
+        print(f"| {r['variant']} | {r['seconds']:.2f} "
+              f"| {_si(r['edges_per_s'])} | {r['partitions']} "
+              f"| {'yes' if r['fused'] else 'no'} | {r['prefetch_hits']} "
+              f"| {r['halo_cache_hits']} "
+              f"| {r['peak_resident_bytes']} / {r['budget']} |")
+    gain = next((r for r in rows if r["kind"] == "ooc_gain"), None)
+    if gain:
+        print(f"\nOverlap: {gain['speedup_serial_over_overlapped']}x "
+              f"serial/overlapped on {gain['cores']} core(s) — "
+              f"{gain['bar_1_15x']}")
 
 
 if __name__ == "__main__":
-    main(*(sys.argv[1:] or ["pod"]))
+    main(*(sys.argv[1:] or ["BENCH_roofline.json"]))

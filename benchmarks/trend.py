@@ -67,6 +67,22 @@ def summarize(name: str, payload) -> str:
             if ic and ic.get("seconds") and ooc.get("seconds"):
                 parts.append(f"{ooc['seconds'] / ic['seconds']:.2f}x in-core time")
             return ", ".join(parts)
+    if name == "BENCH_roofline" and isinstance(payload, list):
+        kinds = {r.get("kind"): r for r in payload if isinstance(r, dict)}
+        gains = [r for r in payload if isinstance(r, dict)
+                 and r.get("kind") == "kernel_gain"]
+        parts = []
+        if gains:
+            saved = {f"{r.get('sweep')}-{r.get('bytes_saved_per_cell')}B"
+                     for r in gains}
+            parts.append(f"fused saves {'/'.join(sorted(saved))} per cell")
+        ooc_gain = kinds.get("ooc_gain")
+        if ooc_gain:
+            parts.append(
+                f"ooc overlap {ooc_gain.get('speedup_serial_over_overlapped')}x"
+                f" on {ooc_gain.get('cores')} core(s)")
+        if parts:
+            return ", ".join(parts)
     if isinstance(payload, dict):
         return _scalars(payload) or "(no scalar fields)"
     if isinstance(payload, list):

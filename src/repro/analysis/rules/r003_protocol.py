@@ -11,7 +11,10 @@ sweep.  This rule statically checks every ``@register_backend`` class in
 * ``supports_batch = True`` additionally requires the batched trio
   ``build_batch`` / ``prepare_batch`` / ``run_batch``;
 * ``supports_partition = True`` additionally requires the eight
-  partition hooks the ooc driver calls.
+  partition hooks the ooc driver calls;
+* ``supports_fused_partition = True`` additionally requires the fused
+  pair ``partition_move_fused`` / ``partition_split_fused`` (and only
+  makes sense on top of ``supports_partition``).
 
 Positional parameter *names* must match exactly — the engine and the
 partition driver pass several of these by keyword.
@@ -46,6 +49,13 @@ _PARTITION = {
     "partition_split": ["ops_ns", "inputs", "comm_loc", "labels_loc",
                         "active_owned", "bound"],
     "partition_split_wake": ["ops_ns", "inputs", "comm_loc", "changed_loc"],
+}
+_FUSED_PARTITION = {
+    "partition_move_fused": ["ops_ns", "inputs", "labels_loc", "changed_loc",
+                             "active_owned", "cand_prev_owned", "klass_owned",
+                             "seed", "bound"],
+    "partition_split_fused": ["ops_ns", "inputs", "comm_loc", "labels_loc",
+                              "changed_loc", "bound"],
 }
 
 
@@ -126,6 +136,16 @@ class ProtocolRule(Rule):
         has_sp, part_val = _class_attr(cls, "supports_partition")
         if has_sp and part_val:
             required.update(_PARTITION)
+        has_sf, fused_val = _class_attr(cls, "supports_fused_partition")
+        if has_sf and fused_val:
+            required.update(_FUSED_PARTITION)
+            if not (has_sp and part_val):
+                out.append(self.finding(
+                    ctx, cls,
+                    f"backend '{cls.name}' declares "
+                    f"supports_fused_partition without supports_partition "
+                    f"— the ooc driver only reaches the fused hooks "
+                    f"through the partition sweep"))
 
         for meth, want in required.items():
             fn = methods.get(meth)

@@ -1,6 +1,6 @@
 """R004 — Pallas kernel hygiene.
 
-Three checks on every ``pl.pallas_call`` site in ``kernels/``:
+Four checks on every ``pl.pallas_call`` site in ``kernels/``:
 
 * **divisibility guard**: the wrapper function must assert (or
   if-raise) a ``%``-divisibility relation before launching — a grid of
@@ -16,6 +16,13 @@ Three checks on every ``pl.pallas_call`` site in ``kernels/``:
   configurable ceiling (default 16 MB of the ~64 MB/core budget —
   headroom for double-buffering and scratch).  Symbolic shapes (the
   production kernels size blocks from runtime args) are skipped.
+* **equality-cube budget**: a kernel that materialises the (B, D, D)
+  equality cube (``lab[:, :, None] == lab[:, None, :]``, directly or via
+  the shared ``argmax_tile_math`` tile math) allocates VMEM the
+  BlockSpecs never see — its wrapper must assert the cube product
+  against a budget (``tile_b * d * d * 4 <= CUBE_BUDGET_BYTES``) before
+  launching, or an oversized tile choice OOMs only at Mosaic compile
+  time on hardware.
 """
 from __future__ import annotations
 
@@ -56,6 +63,65 @@ def _resolve_kernel(call: ast.Call,
         target = target.args[0]
     name = dotted_name(target)
     return by_name.get(name) if name else None
+
+
+# Shared tile-math helpers known to build the (B, D, D) equality cube;
+# fused_sweep.py imports argmax_tile_math so the cube never appears
+# literally in its kernel bodies.
+_CUBE_HELPERS = {"argmax_tile_math"}
+
+
+def _is_rank3_broadcast(node: ast.expr) -> bool:
+    """``x[:, :, None]``-style subscript: >=3-elt slice tuple with None."""
+    if not isinstance(node, ast.Subscript) \
+            or not isinstance(node.slice, ast.Tuple) \
+            or len(node.slice.elts) < 3:
+        return False
+    return any(isinstance(e, ast.Constant) and e.value is None
+               for e in node.slice.elts)
+
+
+def _materialises_cube(fn: ast.FunctionDef,
+                       by_name: dict[str, ast.FunctionDef],
+                       _seen: set[str] | None = None) -> bool:
+    """Equality-cube pattern in ``fn``, directly (a compare of two rank-3
+    broadcast subscripts) or through module-local / shared helpers."""
+    _seen = set() if _seen is None else _seen
+    if fn.name in _seen:
+        return False
+    _seen.add(fn.name)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Compare):
+            sides = [node.left, *node.comparators]
+            if sum(_is_rank3_broadcast(s) for s in sides) >= 2:
+                return True
+        if isinstance(node, ast.Call):
+            name = dotted_name(node.func)
+            leaf = name.split(".")[-1] if name else None
+            if leaf in _CUBE_HELPERS:
+                return True
+            local = by_name.get(leaf) if leaf else None
+            if local is not None \
+                    and _materialises_cube(local, by_name, _seen):
+                return True
+    return False
+
+
+def _has_cube_budget_assert(fn: ast.FunctionDef) -> bool:
+    """An assert bounding a product: contains both a ``*`` and a
+    ``<``/``<=`` (the ``tile_b * d * d * 4 <= BUDGET`` shape)."""
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Assert):
+            continue
+        sub = list(ast.walk(node.test))
+        has_mult = any(isinstance(s, ast.BinOp)
+                       and isinstance(s.op, ast.Mult) for s in sub)
+        has_bound = any(isinstance(s, ast.Compare)
+                        and any(isinstance(op, (ast.Lt, ast.LtE))
+                                for op in s.ops) for s in sub)
+        if has_mult and has_bound:
+            return True
+    return False
 
 
 def _has_divisibility_guard(fn: ast.FunctionDef) -> bool:
@@ -102,7 +168,8 @@ class PallasRule(Rule):
     id = "R004"
     tag = "pallas"
     description = ("pallas_call hygiene: grid divisibility guard, no host "
-                   "ops in kernel bodies, VMEM block footprint ceiling")
+                   "ops in kernel bodies, VMEM block footprint ceiling, "
+                   "equality-cube budget assert")
 
     def __init__(self, vmem_ceiling: int = _DEFAULT_VMEM_CEILING):
         self.vmem_ceiling = int(vmem_ceiling)
@@ -135,6 +202,17 @@ class PallasRule(Rule):
             if kernel is not None and id(kernel) not in checked_kernels:
                 checked_kernels.add(id(kernel))
                 findings.extend(self._check_kernel_body(ctx, kernel))
+
+            if kernel is not None \
+                    and _materialises_cube(kernel, by_name) \
+                    and (wrapper is None
+                         or not _has_cube_budget_assert(wrapper)):
+                findings.append(self.finding(
+                    ctx, node,
+                    f"kernel '{kernel.name}' materialises the (B, D, D) "
+                    f"equality cube — VMEM the BlockSpecs never see — but "
+                    f"its wrapper has no cube-budget assert "
+                    f"(`tile_b * d * d * 4 <= CUBE_BUDGET_BYTES`)"))
 
             nbytes = _block_nbytes(node, consts)
             if nbytes is not None and nbytes > self.vmem_ceiling:

@@ -5,8 +5,13 @@ same-bucket / warm / repeat traffic that must be trace-free:
 
 * solo cold + same-bucket second graph + warm refit (segment, tile);
 * batched ``fit_many`` twice over the same batch bucket;
+* fused tile sweeps (``fuse_sweeps="on"``): solo cold + same-bucket,
+  batched, and an ooc fit — their own dispatch family and trace tags;
 * sharded solo (single-device mesh) cold + same-bucket;
-* out-of-core partitioned fit, cold + warm repeat (segment, tile).
+* out-of-core partitioned fit, cold + warm repeat (segment, tile) —
+  segment auto-fuses its partition sweeps, tile under kernel_mode=ref
+  does not, so an explicit ``fuse_sweeps="off"`` segment leg keeps the
+  unfused ``part_move``/``part_wake`` stages covered too.
 
 Sized to stay cheap enough for CI (a few hundred vertices per graph)
 while still exercising the compile cache across every dispatch family.
@@ -48,6 +53,16 @@ def run_workload(include_sharded: bool = True,
         eng.fit_many([g2, g1], backend=backend)  # same batch bucket
         fits += 7
 
+    # fused tile sweeps (fuse_sweeps="on" forces fusion under the ref
+    # dispatch): solo cold + same-bucket + batched — the *_fused stages
+    feng = Engine(EngineConfig(warm_start="auto", fuse_sweeps="on"),
+                  cache=CompileCache())
+    feng.fit(g1, backend="tile")
+    r = feng.fit(g2, backend="tile")
+    assert r.cache_hit
+    feng.fit_many([g1, g2], backend="tile")
+    fits += 3
+
     if include_sharded:
         eng.fit(g1, backend="sharded")
         r = eng.fit(g2, backend="sharded")
@@ -65,6 +80,19 @@ def run_workload(include_sharded: bool = True,
             r = eng.fit(g3, backend=backend, memory_budget=budget)
             assert r.warm_started
             fits += 2
+        # the other half of the fused matrix: under fuse_sweeps="auto"
+        # segment fused above (jnp compositions profit everywhere) while
+        # tile stayed unfused (ref dispatch) — so run unfused segment
+        # and fused tile partition sweeps explicitly
+        oeng = Engine(EngineConfig(warm_start="auto", fuse_sweeps="off"),
+                      cache=CompileCache())
+        r = oeng.fit(g3, backend="segment",
+                     memory_budget=_tight_budget(g3, "segment"))
+        assert r.partitions > 1
+        r = feng.fit(g3, backend="tile",
+                     memory_budget=_tight_budget(g3, "tile"))
+        assert r.partitions > 1
+        fits += 2
 
     return {"fits": fits, "sharded": include_sharded, "ooc": include_ooc}
 

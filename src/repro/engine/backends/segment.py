@@ -42,6 +42,7 @@ class SegmentBackend:
     name = "segment"
     supports_batch = True
     supports_partition = True
+    supports_fused_partition = True
 
     def plan_key(self, config: EngineConfig) -> tuple:
         return ()
@@ -145,6 +146,12 @@ class SegmentBackend:
 
     def build_partition(self, config: EngineConfig):
         prune = config.split == "lpp"
+        # Unlike the tile backend (where fusion means a real Pallas kernel
+        # body, so 'auto' only fuses when one executes), the segment fused
+        # sweeps are jnp compositions — one XLA executable instead of two
+        # full edge passes per partition visit — and profit on every
+        # backend, so 'auto' fuses here.
+        fuse = config.fuse_sweeps != "off"
 
         def _move(graph, labels, cand, seed, bound):
             TRACE_LOG.record("segment:part_move")
@@ -165,9 +172,32 @@ class SegmentBackend:
             TRACE_LOG.record("segment:part_split_wake")
             return min_label_wake(graph, comm, changed)
 
+        def _fused_move(graph, labels, chg, active, candp, klass, seed,
+                        bound):
+            TRACE_LOG.record("segment:part_fused_move")
+            wake = neighbors_of(graph, chg)
+            act = (active & ~candp) | wake
+            new, _, _ = lpa_move(graph, labels, act & klass, seed,
+                                 label_bound=bound)
+            return new, act
+
+        def _fused_split(graph, comm, labels, chg, bound):
+            TRACE_LOG.record("segment:part_fused_split")
+            if prune:
+                sact = min_label_wake(graph, comm, chg)
+            else:
+                # no-prune split sweeps every row every iteration; rows
+                # without a same-community neighbor reduce to their own
+                # label, so the all-ones active is the identity on them
+                sact = jnp.ones(graph.n, dtype=bool)
+            return min_label_sweep(graph, comm, labels, sact, bound,
+                                   prune=prune)
+
         return SimpleNamespace(
             move=jax.jit(_move), wake=jax.jit(_wake),
             split=jax.jit(_split), split_wake=jax.jit(_split_wake),
+            fused_move=jax.jit(_fused_move),
+            fused_split=jax.jit(_fused_split), fuse=fuse,
         )
 
     def partition_caps(self, budget: int, d_bucket: int):
@@ -234,6 +264,35 @@ class SegmentBackend:
                              changed_loc) -> np.ndarray:
         return np.asarray(ops_ns.split_wake(inputs, jnp.asarray(comm_loc),
                                             jnp.asarray(changed_loc)))
+
+    # Fused partition sweeps (fuse_sweeps != "off"): the ooc driver's
+    # lazy-wake loop lets wake + active refresh + move (and split-wake +
+    # min-label) run as one XLA executable per partition visit — one pass
+    # over the window's edge arrays instead of two, and no host
+    # round-trip of the intermediate wake mask.
+
+    def partition_move_fused(self, ops_ns, inputs, labels_loc, changed_loc,
+                             active_owned, cand_prev_owned, klass_owned,
+                             seed, bound):
+        g = inputs
+
+        def pad(col):
+            out = np.zeros(g.n, dtype=bool)
+            out[: len(col)] = col
+            return jnp.asarray(out)
+
+        new, act = ops_ns.fused_move(
+            g, jnp.asarray(labels_loc), jnp.asarray(changed_loc),
+            pad(active_owned), pad(cand_prev_owned), pad(klass_owned),
+            jnp.int32(seed), bound)
+        return np.asarray(new), np.asarray(act)
+
+    def partition_split_fused(self, ops_ns, inputs, comm_loc, labels_loc,
+                              changed_loc, bound) -> np.ndarray:
+        return np.asarray(ops_ns.fused_split(inputs, jnp.asarray(comm_loc),
+                                             jnp.asarray(labels_loc),
+                                             jnp.asarray(changed_loc),
+                                             bound))
 
     def run_batch(self, plan, inputs,
                   init_labels: np.ndarray | None = None,

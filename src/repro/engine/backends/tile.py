@@ -11,6 +11,17 @@ backend (the parity suite asserts this); the split phase uses
 
 Both phases run as single jitted ``lax.while_loop`` executables per shape
 bucket; the real vertex count is a traced scalar.
+
+With ``EngineConfig.fuse_sweeps`` resolved on (``ops.resolve_fuse``), the
+loop bodies switch to the *lazy-wake* form — the wake reduction for
+sub-sweep ``k`` is applied at the start of sub-sweep ``k+1`` from the
+carried changed mask, exactly the restructure the out-of-core driver
+already uses — so each sub-sweep's wake + move (and the split's wake +
+min-label) runs as one fused Pallas dispatch
+(``kernels/fused_sweep.py``) with the neighbor tiles read once.  Labels
+and iteration counts are bit-identical either way; the fused bodies get
+their own TRACE_LOG tags so the trace-audit gate sees them as distinct
+contracts.
 """
 from __future__ import annotations
 
@@ -67,6 +78,7 @@ class TileBackend:
     name = "tile"
     supports_batch = True
     supports_partition = True
+    supports_fused_partition = True
 
     def plan_key(self, config: EngineConfig) -> tuple:
         return ()
@@ -78,6 +90,7 @@ class TileBackend:
         do_split = config.split in ("lp", "lpp")
         prune = config.split == "lpp"
         shortcut = config.shortcut
+        fuse = ops.resolve_fuse(config.fuse_sweeps, config.kernel_mode)
 
         ids = np.arange(rows, dtype=np.int32)
 
@@ -116,6 +129,44 @@ class TileBackend:
             labels, _, it, _ = jax.lax.while_loop(cond, body, init)
             return labels, it
 
+        def _propagate_fused(nbr, nw, nmask, n_real, labels0, active0):
+            TRACE_LOG.record("tile:propagate_fused")
+            vid = jnp.asarray(ids)
+            parity = (_label_hash(vid, jnp.int32(-1)) & 1).astype(bool)
+            real = vid < n_real
+            threshold = (jnp.float32(tau)
+                         * n_real.astype(jnp.float32)).astype(jnp.int32)
+
+            def cond(s):
+                _labels, _active, _chg, _candp, it, dn = s
+                return (dn > threshold) & (it < max_iterations)
+
+            def body(s):
+                # Lazy wake: chg/candp carry the previous sub-sweep's
+                # changed mask and candidate set into the fused kernel,
+                # which applies the active refresh before picking this
+                # sub-sweep's candidates — one dispatch per sub-sweep.
+                labels, active, chg, candp, it, _ = s
+                dn = jnp.int32(0)
+                for sweep in range(2):  # semi-synchronous parity sub-sweeps
+                    klass = parity if sweep else ~parity
+                    seed = 2 * it + sweep
+                    new, active = ops.fused_move(
+                        labels[nbr], nw, nmask, chg[nbr], labels, active,
+                        candp, klass, real, jnp.asarray(seed, jnp.int32),
+                        mode=mode)
+                    chg = new != labels
+                    candp = active & klass
+                    labels = new
+                    dn = dn + jnp.sum(chg.astype(jnp.int32))
+                return labels, active, chg, candp, it + jnp.int32(1), dn
+
+            zeros = jnp.zeros(rows, dtype=bool)
+            init = (labels0, active0 & real, zeros, zeros, jnp.int32(0),
+                    jnp.int32(rows))
+            labels, _, _, _, it, _ = jax.lax.while_loop(cond, body, init)
+            return labels, it
+
         def _split(nbr, nmask, comm, labels0):
             TRACE_LOG.record("tile:split")
             same = (comm[nbr] == comm[:, None]) & nmask
@@ -143,10 +194,37 @@ class TileBackend:
             labels, _, it, _ = jax.lax.while_loop(cond, body, init)
             return labels, it
 
+        def _split_fused(nbr, nmask, comm, labels0):
+            TRACE_LOG.record("tile:split_fused")
+
+            def cond(s):
+                _labels, _chg, _it, dn = s
+                return dn > 0
+
+            def body(s):
+                # chg carries last iteration's changed mask (ones on the
+                # first: rows with no same-community neighbor reduce to
+                # their own label, so the result matches active0 = ones).
+                labels, chg, it, _ = s
+                new = ops.fused_split(labels[nbr], comm[nbr], nmask,
+                                      chg[nbr], labels, comm, prune=prune,
+                                      mode=mode)
+                if shortcut:
+                    new = jnp.minimum(new, new[new])
+                changed = new != labels
+                dn = jnp.sum(changed.astype(jnp.int32))
+                return new, changed, it + jnp.int32(1), dn
+
+            init = (labels0, jnp.ones(rows, dtype=bool), jnp.int32(0),
+                    jnp.int32(rows))
+            labels, _, it, _ = jax.lax.while_loop(cond, body, init)
+            return labels, it
+
         return SimpleNamespace(
             rows=rows,
-            propagate=jax.jit(_propagate),
-            split=jax.jit(_split) if do_split else None,
+            propagate=jax.jit(_propagate_fused if fuse else _propagate),
+            split=(jax.jit(_split_fused if fuse else _split)
+                   if do_split else None),
         )
 
     def prepare(self, graph: Graph, bucket: BucketKey,
@@ -198,6 +276,7 @@ class TileBackend:
     def build_partition(self, config: EngineConfig):
         mode = config.kernel_mode
         prune = config.split == "lpp"
+        fuse = ops.resolve_fuse(config.fuse_sweeps, config.kernel_mode)
 
         def _move(nbr, nw, nmask, labels, cand, seed):
             TRACE_LOG.record("tile:part_move")
@@ -226,9 +305,28 @@ class TileBackend:
             same = (comm[nbr] == comm[:rows, None]) & nmask
             return jnp.any(changed[nbr] & same, axis=1)
 
+        def _fused_move(nbr, nw, nmask, labels, chg, active, candp, klass,
+                        seed):
+            TRACE_LOG.record("tile:part_fused_move")
+            rows = nbr.shape[0]
+            real = jnp.ones(rows, dtype=bool)  # padded rows: nmask/klass off
+            return ops.fused_move(labels[nbr], nw, nmask, chg[nbr],
+                                  labels[:rows], active, candp, klass, real,
+                                  seed, mode=mode)
+
+        def _fused_split(nbr, nmask, comm, labels, chg):
+            TRACE_LOG.record("tile:part_fused_split")
+            rows = nbr.shape[0]
+            return ops.fused_split(labels[nbr], comm[nbr], nmask, chg[nbr],
+                                   labels[:rows], comm[:rows], prune=prune,
+                                   mode=mode)
+
         return SimpleNamespace(
             move=jax.jit(_move), wake=jax.jit(_wake),
             split=jax.jit(_split), split_wake=jax.jit(_split_wake),
+            fused_move=jax.jit(_fused_move),
+            fused_split=jax.jit(_fused_split),
+            fuse=fuse,
         )
 
     def partition_caps(self, budget: int, d_bucket: int):
@@ -292,6 +390,36 @@ class TileBackend:
                                             jnp.asarray(comm_loc),
                                             jnp.asarray(changed_loc)))
 
+    # Fused partition sweeps (fuse_sweeps on): the ooc driver's lazy-wake
+    # loop already matches the fused kernel's contract, so wake + move
+    # (and split-wake + min-label) collapse into one dispatch per
+    # partition visit.  Owned-row state columns pad to the tile height.
+
+    def partition_move_fused(self, ops_ns, inputs, labels_loc, changed_loc,
+                             active_owned, cand_prev_owned, klass_owned,
+                             seed, bound):
+        nbr, nw, nmask = inputs
+        rows = nbr.shape[0]
+
+        def pad(col):
+            out = np.zeros(rows, dtype=bool)
+            out[: len(col)] = col
+            return jnp.asarray(out)
+
+        new, act = ops_ns.fused_move(
+            nbr, nw, nmask, jnp.asarray(labels_loc),
+            jnp.asarray(changed_loc), pad(active_owned),
+            pad(cand_prev_owned), pad(klass_owned), jnp.int32(seed))
+        return np.asarray(new), np.asarray(act)
+
+    def partition_split_fused(self, ops_ns, inputs, comm_loc, labels_loc,
+                              changed_loc, bound) -> np.ndarray:
+        nbr, _nw, nmask = inputs
+        return np.asarray(ops_ns.fused_split(nbr, nmask,
+                                             jnp.asarray(comm_loc),
+                                             jnp.asarray(labels_loc),
+                                             jnp.asarray(changed_loc)))
+
     # --- batched dispatch: one tile launch over the packed super-graph.
     # Labels live in per-graph *local* coordinates (the argmax tie-break
     # hashes raw label values); nbr tiles hold global row ids, and the
@@ -306,6 +434,7 @@ class TileBackend:
         do_split = config.split in ("lp", "lpp")
         prune = config.split == "lpp"
         shortcut = config.shortcut
+        fuse = ops.resolve_fuse(config.fuse_sweeps, config.kernel_mode)
 
         ids = np.arange(rows, dtype=np.int32)
 
@@ -352,6 +481,50 @@ class TileBackend:
             labels, _, _, _, iters = jax.lax.while_loop(cond, body, init)
             return labels, iters
 
+        def _propagate_fused(nbr, nw, nmask, sizes, graph_id, voffset,
+                             n_total, labels0, active0):
+            TRACE_LOG.record("tile:batch_propagate_fused")
+            vid = jnp.asarray(ids)
+            local = vid - voffset
+            parity = (_label_hash(local, jnp.int32(-1)) & 1).astype(bool)
+            real = vid < n_total
+            thr = (jnp.float32(tau)
+                   * sizes.astype(jnp.float32)).astype(jnp.int32)
+            done0 = sizes <= thr
+
+            def cond(s):
+                _labels, _active, _chg, _candp, it, done, _iters = s
+                return jnp.any(~done) & (it < max_iterations)
+
+            def body(s):
+                # Lazy wake (see the solo fused body); done graphs keep
+                # running=False folded into the candidate class column.
+                labels, active, chg, candp, it, done, iters = s
+                running = ~done[graph_id]
+                dn = jnp.zeros((k1,), jnp.int32)
+                for sweep in range(2):  # semi-synchronous parity sub-sweeps
+                    klass = parity if sweep else ~parity
+                    seed = 2 * it + sweep
+                    new, active = ops.fused_move(
+                        labels[nbr], nw, nmask, chg[nbr], labels, active,
+                        candp, klass & running, real,
+                        jnp.asarray(seed, jnp.int32), mode=mode)
+                    chg = new != labels
+                    candp = active & klass & running
+                    labels = new
+                    dn = dn + jax.ops.segment_sum(chg.astype(jnp.int32),
+                                                  graph_id, num_segments=k1)
+                iters = iters + jnp.where(done, 0, 1)
+                return (labels, active, chg, candp, it + jnp.int32(1),
+                        done | (dn <= thr), iters)
+
+            zeros = jnp.zeros(rows, dtype=bool)
+            init = (labels0.astype(jnp.int32), active0 & real, zeros, zeros,
+                    jnp.int32(0), done0, jnp.zeros((k1,), jnp.int32))
+            labels, _, _, _, _, _, iters = jax.lax.while_loop(cond, body,
+                                                              init)
+            return labels, iters
+
         def _split(nbr, nmask, sizes, graph_id, voffset, comm):
             TRACE_LOG.record("tile:batch_split")
             vid = jnp.asarray(ids)
@@ -384,10 +557,39 @@ class TileBackend:
             labels, _, _, iters = jax.lax.while_loop(cond, body, init)
             return labels, iters
 
+        def _split_fused(nbr, nmask, sizes, graph_id, voffset, comm):
+            TRACE_LOG.record("tile:batch_split_fused")
+            vid = jnp.asarray(ids)
+            local = vid - voffset
+            done0 = sizes == 0
+
+            def cond(s):
+                _labels, _chg, done, _iters = s
+                return jnp.any(~done)
+
+            def body(s):
+                labels, chg, done, iters = s
+                new = ops.fused_split(labels[nbr], comm[nbr], nmask,
+                                      chg[nbr], labels, comm, prune=prune,
+                                      mode=mode)
+                if shortcut:
+                    new = jnp.minimum(new, new[new + voffset])
+                changed = new != labels
+                dn = jax.ops.segment_sum(changed.astype(jnp.int32),
+                                         graph_id, num_segments=k1)
+                iters = iters + jnp.where(done, 0, 1)
+                return new, changed, done | (dn == 0), iters
+
+            init = (local, jnp.ones(rows, dtype=bool), done0,
+                    jnp.zeros((k1,), jnp.int32))
+            labels, _, _, iters = jax.lax.while_loop(cond, body, init)
+            return labels, iters
+
         return SimpleNamespace(
             rows=rows,
-            propagate=jax.jit(_propagate),
-            split=jax.jit(_split) if do_split else None,
+            propagate=jax.jit(_propagate_fused if fuse else _propagate),
+            split=(jax.jit(_split_fused if fuse else _split)
+                   if do_split else None),
         )
 
     def prepare_batch(self, batch, bucket: BatchBucketKey,

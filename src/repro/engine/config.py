@@ -15,6 +15,7 @@ BACKENDS = ("auto", "segment", "tile", "sharded")
 SPLIT_METHODS = ("none", "lp", "lpp", "bfs_host")
 BUCKETING = ("pow2", "exact")
 WARM_START = ("off", "auto")
+FUSE_SWEEPS = ("auto", "on", "off")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,6 +61,17 @@ class EngineConfig:
       bit-faithful to single device; >1 trades staleness for bandwidth).
     kernel_mode: tile/sharded kernel dispatch — ``"auto"`` | ``"pallas"``
       | ``"interpret"`` | ``"ref"`` (see kernels/ops.py).
+    fuse_sweeps: tile backend — run each sub-sweep's wake + move (and the
+      split's wake + min-label) as one fused Pallas dispatch instead of
+      two, with the (TILE_B, D) neighbor tiles read once per sweep
+      (kernels/fused_sweep.py).  ``"auto"`` fuses exactly when a real
+      kernel body executes (kernel_mode pallas/interpret); the jnp oracle
+      stays unfused as the parity reference.  ``"on"`` / ``"off"`` force
+      it.  Out-of-core partition sweeps fuse on the segment backend too
+      under ``"auto"`` (the fused jnp compositions profit on every
+      backend); only ``"off"`` disables that.  Labels and iteration
+      counts are bit-identical either way (the fused-parity suite
+      asserts this).
     mesh: sharded backend — a ``jax.sharding.Mesh``; defaults to one flat
       axis over every visible device.
     """
@@ -82,6 +94,7 @@ class EngineConfig:
     compute_metrics: bool = False
     exchange_every: int = 1
     kernel_mode: str = "auto"
+    fuse_sweeps: str = "auto"
     mesh: Any = None
 
     def __post_init__(self):
@@ -97,6 +110,9 @@ class EngineConfig:
         if self.warm_start not in WARM_START:
             raise ValueError(f"warm_start must be one of {WARM_START}, "
                              f"got {self.warm_start!r}")
+        if self.fuse_sweeps not in FUSE_SWEEPS:
+            raise ValueError(f"fuse_sweeps must be one of {FUSE_SWEEPS}, "
+                             f"got {self.fuse_sweeps!r}")
         if self.exchange_every < 1:
             raise ValueError("exchange_every must be >= 1")
         if self.warm_cache_size < 1:
@@ -113,7 +129,7 @@ class EngineConfig:
     def algo_key(self) -> tuple:
         """The hashable algorithm statics a compiled plan specialises on."""
         return (self.tau, self.max_iterations, self.split, self.shortcut,
-                self.exchange_every, self.kernel_mode)
+                self.exchange_every, self.kernel_mode, self.fuse_sweeps)
 
 
 @dataclasses.dataclass

@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.tiling import CUBE_BUDGET_BYTES
+
 _SENTINEL = 2147483647  # python literal: materialised in-trace, not captured
 
 
@@ -38,12 +40,14 @@ def _hash(labels: jnp.ndarray, seed: jnp.ndarray) -> jnp.ndarray:
     return x.astype(jnp.int32) & jnp.int32(0x7FFFFFFF)
 
 
-def _label_argmax_kernel(seed_ref, lab_ref, w_ref, mask_ref, cur_ref,
-                         best_lab_ref, best_w_ref, cur_w_ref):
-    lab = lab_ref[...]                                   # (B, D) int32
-    mask = mask_ref[...]                                 # (B, D) bool
-    w = jnp.where(mask, w_ref[...], 0.0)                 # (B, D) f32
-    seed = seed_ref[0, 0]
+def argmax_tile_math(lab, w_raw, mask, cur, seed):
+    """The (B, D)-tile argmax tie-break chain, shared with fused_sweep.
+
+    Both the standalone and fused kernels must run the *same* op sequence so
+    their float sums (and hence tie-break decisions) are bit-identical.
+    Returns (best_lab, best_w, cur_w), each (B, 1).
+    """
+    w = jnp.where(mask, w_raw, 0.0)                      # (B, D) f32
 
     # Equality cube -> per-slot community scores via batched dot (MXU).
     eq = (lab[:, :, None] == lab[:, None, :]).astype(w.dtype)  # (B, D, D)
@@ -60,11 +64,17 @@ def _label_argmax_kernel(seed_ref, lab_ref, w_ref, mask_ref, cur_ref,
     pick = is_best & (h == best_h)
     best_lab = jnp.min(jnp.where(pick, lab, _SENTINEL), axis=1, keepdims=True)
 
-    cur = cur_ref[...]                                   # (B, 1)
     cur_w = jnp.sum(jnp.where(lab == cur, w, 0.0), axis=1, keepdims=True)
+    return best_lab, jnp.maximum(best_w, 0.0), cur_w
 
+
+def _label_argmax_kernel(seed_ref, lab_ref, w_ref, mask_ref, cur_ref,
+                         best_lab_ref, best_w_ref, cur_w_ref):
+    best_lab, best_w, cur_w = argmax_tile_math(
+        lab_ref[...], w_ref[...], mask_ref[...], cur_ref[...],
+        seed_ref[0, 0])
     best_lab_ref[...] = best_lab
-    best_w_ref[...] = jnp.maximum(best_w, 0.0)
+    best_w_ref[...] = best_w
     cur_w_ref[...] = cur_w
 
 
@@ -75,6 +85,8 @@ def label_argmax_pallas(nbr_lab: jnp.ndarray, nbr_w: jnp.ndarray,
     """pallas_call wrapper.  Shapes: (n_pad, d_max) tiles, (n_pad,) cur."""
     n_pad, d_max = nbr_lab.shape
     assert n_pad % tile_b == 0, (n_pad, tile_b)
+    assert tile_b == 1 or tile_b * d_max * d_max * 4 <= CUBE_BUDGET_BYTES, \
+        (tile_b, d_max)
     grid = (n_pad // tile_b,)
 
     row_spec = pl.BlockSpec((tile_b, d_max), lambda i: (i, 0))

@@ -17,23 +17,37 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.fused_sweep import fused_move_pallas, fused_split_pallas
 from repro.kernels.label_argmax import label_argmax_pallas
 from repro.kernels.min_label import min_label_pallas
+from repro.kernels.tiling import CUBE_BUDGET_BYTES, pick_tile_b
 
-_CUBE_BUDGET_BYTES = 4 * 1024 * 1024
+_CUBE_BUDGET_BYTES = CUBE_BUDGET_BYTES  # re-export (see kernels/tiling.py)
 
-
-def pick_tile_b(n_pad: int, d_max: int) -> int:
-    """Largest row tile whose equality cube fits the VMEM budget."""
-    tile = max(_CUBE_BUDGET_BYTES // max(d_max * d_max * 4, 1), 1)
-    tile = min(tile, 256, n_pad)
-    while n_pad % tile:
-        tile -= 1
-    return max(tile, 1)
+__all__ = ["pick_tile_b", "label_argmax", "min_label", "fused_move",
+           "fused_split", "resolve_fuse", "flash_attention"]
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def resolve_fuse(fuse_sweeps: str, kernel_mode: str) -> bool:
+    """Resolve ``EngineConfig.fuse_sweeps`` against the kernel dispatch.
+
+    'auto' fuses only when a real Pallas kernel body executes (pallas on
+    TPU, or explicit interpret mode); the jnp oracle path gains nothing
+    from fusion — XLA already fuses the elementwise glue — and stays the
+    default-dispatch parity reference.
+    """
+    if fuse_sweeps == "off":
+        return False
+    if fuse_sweeps == "on":
+        return True
+    mode = kernel_mode
+    if mode == "auto":
+        mode = "pallas" if _on_tpu() else "ref"
+    return mode in ("pallas", "interpret")
 
 
 @partial(jax.jit, static_argnames=("mode",))
@@ -108,3 +122,46 @@ def min_label(nbr_lab, nbr_comm, nbr_mask, self_lab, self_comm,
     tile_b = pick_tile_b(n_pad, d_max)
     return min_label_pallas(nbr_lab, nbr_comm, nbr_mask, self_lab, self_comm,
                             tile_b=tile_b, interpret=(mode == "interpret"))
+
+
+@partial(jax.jit, static_argnames=("mode",))
+def fused_move(nbr_lab, nbr_w, nbr_mask, chg_nbr, cur, active, cand_prev,
+               klass, real, seed, mode: str = "auto"):
+    """One-dispatch lazy-wake + LPA move (see kernels/fused_sweep.py).
+
+    ``chg_nbr`` is the previous sub-sweep's changed mask gathered to
+    neighbor slots; ``cand_prev`` its candidate set (zeros on the first
+    sub-sweep).  Returns (new_labels, active_out), each (n_pad,).
+    """
+    n_pad, d_max = nbr_lab.shape
+    if mode == "auto":
+        mode = "pallas" if _on_tpu() else "ref"
+    if mode == "ref":
+        return ref.fused_move_ref(nbr_lab, nbr_w, nbr_mask, chg_nbr, cur,
+                                  active, cand_prev, klass, real, seed)
+    tile_b = pick_tile_b(n_pad, d_max)
+    return fused_move_pallas(nbr_lab, nbr_w, nbr_mask, chg_nbr, cur, active,
+                             cand_prev, klass, real,
+                             jnp.asarray(seed, jnp.int32), tile_b=tile_b,
+                             interpret=(mode == "interpret"))
+
+
+@partial(jax.jit, static_argnames=("prune", "mode"))
+def fused_split(nbr_lab, nbr_comm, nbr_mask, chg_nbr, self_lab, self_comm,
+                prune: bool = True, mode: str = "auto"):
+    """One-dispatch lazy split-wake + min-label (kernels/fused_sweep.py).
+
+    ``chg_nbr`` is last iteration's changed mask gathered to neighbor
+    slots (ones on the first iteration); ignored when ``prune`` is False.
+    """
+    n_pad, d_max = nbr_lab.shape
+    if mode == "auto":
+        mode = "pallas" if _on_tpu() else "ref"
+    if mode == "ref":
+        return ref.fused_split_ref(nbr_lab, nbr_comm, nbr_mask, chg_nbr,
+                                   self_lab, self_comm, prune)
+    tile_b = pick_tile_b(n_pad, d_max)
+    return fused_split_pallas(nbr_lab, nbr_comm, nbr_mask, chg_nbr,
+                              self_lab, self_comm, prune=prune,
+                              tile_b=tile_b,
+                              interpret=(mode == "interpret"))

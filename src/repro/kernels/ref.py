@@ -42,3 +42,37 @@ def min_label_ref(nbr_lab: jnp.ndarray, nbr_comm: jnp.ndarray,
     ok = nbr_mask & (nbr_comm == self_comm[:, None])
     cand = jnp.where(ok, nbr_lab, _SENTINEL)
     return jnp.minimum(self_lab.astype(jnp.int32), jnp.min(cand, axis=1))
+
+
+def fused_move_ref(nbr_lab: jnp.ndarray, nbr_w: jnp.ndarray,
+                   nbr_mask: jnp.ndarray, chg_nbr: jnp.ndarray,
+                   cur: jnp.ndarray, active: jnp.ndarray,
+                   cand_prev: jnp.ndarray, klass: jnp.ndarray,
+                   real: jnp.ndarray, seed: jnp.ndarray):
+    """Oracle for ``fused_move_pallas`` (lazy wake + argmax + adopt).
+
+    Composes ``label_argmax_ref`` so the float sums — and hence every
+    tie-break and adopt decision — are bit-identical to the unfused
+    reference path.
+    """
+    wake = jnp.any(chg_nbr & nbr_mask, axis=1)
+    act = (active & ~cand_prev) | (wake & real)
+    cand = act & klass
+    best_lab, best_w, cur_w = label_argmax_ref(nbr_lab, nbr_w, nbr_mask,
+                                               cur, seed)
+    adopt = cand & (best_w > jnp.maximum(cur_w, 0.0))
+    return jnp.where(adopt, best_lab.astype(jnp.int32),
+                     cur.astype(jnp.int32)), act
+
+
+def fused_split_ref(nbr_lab: jnp.ndarray, nbr_comm: jnp.ndarray,
+                    nbr_mask: jnp.ndarray, chg_nbr: jnp.ndarray,
+                    self_lab: jnp.ndarray, self_comm: jnp.ndarray,
+                    prune: bool) -> jnp.ndarray:
+    """Oracle for ``fused_split_pallas`` (lazy split-wake + min-label)."""
+    mres = min_label_ref(nbr_lab, nbr_comm, nbr_mask, self_lab, self_comm)
+    if not prune:
+        return mres
+    same = nbr_mask & (nbr_comm == self_comm[:, None])
+    wake = jnp.any(chg_nbr & same, axis=1)
+    return jnp.where(wake, mres, self_lab.astype(jnp.int32))

@@ -1,0 +1,21 @@
+"""VMEM tile budgeting shared by the kernel wrappers and ops dispatch.
+
+The label-scan kernels materialise a (TILE_B, D, D) equality cube in VMEM;
+the budget here caps that cube at 4 MB, leaving headroom for the (TILE_B, D)
+operand tiles, double-buffering, and MXU accumulators in a 16 MB VMEM.
+Wrappers that build the cube assert the bound explicitly (R004 checks the
+assert is present), and ``pick_tile_b`` is the one place tile sizes are
+derived so every cube-building dispatch goes through the same budget.
+"""
+from __future__ import annotations
+
+CUBE_BUDGET_BYTES = 4 * 1024 * 1024
+
+
+def pick_tile_b(n_pad: int, d_max: int) -> int:
+    """Largest row tile whose equality cube fits the VMEM budget."""
+    tile = max(CUBE_BUDGET_BYTES // max(d_max * d_max * 4, 1), 1)
+    tile = min(tile, 256, n_pad)
+    while n_pad % tile:
+        tile -= 1
+    return max(tile, 1)

@@ -33,6 +33,7 @@ Three details make it exact rather than approximate:
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 
 import jax.numpy as jnp
@@ -48,6 +49,7 @@ from repro.partition.plan import (
     plan_partitions,
 )
 from repro.partition.slices import (
+    HaloLabelCache,
     InMemorySource,
     MemoryLedger,
     PartitionShapes,
@@ -77,6 +79,11 @@ class OocRun:
     partition_loads: int          # slice loads actually paid (LRU misses)
     cache_hit: bool               # sweep kernels came from the engine cache
     plan_stats: dict
+    fused: bool = False           # partition sweeps ran the fused kernels
+    prefetches: int = 0           # windows staged on the prefetch worker
+    prefetch_hits: int = 0        # loads served by a staged window
+    halo_cache_bytes_saved: int = 0  # gather bytes skipped via label cache
+    halo_cache_hits: int = 0      # partition visits with zero re-upload
 
     def stats(self) -> dict:
         return {
@@ -88,6 +95,11 @@ class OocRun:
             "partition_loads": self.partition_loads,
             "lpa_iterations": self.lpa_iterations,
             "split_iterations": self.split_iterations,
+            "fused": self.fused,
+            "prefetches": self.prefetches,
+            "prefetch_hits": self.prefetch_hits,
+            "halo_cache_bytes_saved": self.halo_cache_bytes_saved,
+            "halo_cache_hits": self.halo_cache_hits,
             **{f"plan_{k}": v for k, v in self.plan_stats.items()},
         }
 
@@ -166,7 +178,9 @@ def fit_out_of_core(source, config: EngineConfig | None = None, *,
                     memory_budget, backend: str | None = None,
                     cache=None, num_partitions: int | None = None,
                     init_labels: np.ndarray | None = None,
-                    init_active: np.ndarray | None = None) -> OocRun:
+                    init_active: np.ndarray | None = None,
+                    prefetch: bool | None = None,
+                    halo_cache: bool = True) -> OocRun:
     """Detect communities with edge residency capped at ``memory_budget``.
 
     ``source``: an array source from :func:`open_source`.  ``config``:
@@ -179,6 +193,15 @@ def fit_out_of_core(source, config: EngineConfig | None = None, *,
     like ``Engine.fit``'s — they are O(n) vertex state, which the
     semi-external model keeps resident anyway.
 
+    ``prefetch`` stages partition ``k+1``'s window + device prep on a
+    worker thread while partition ``k`` sweeps (ledger-reserved before
+    the thread starts); the ``None`` default enables it exactly when a
+    second CPU exists for the worker to overlap on.  ``halo_cache``
+    (default on) keeps device-resident local label views per partition
+    and re-uploads only changed entries on re-visits.  Both degrade to
+    the serial path under budget pressure, and neither changes a single
+    label — the parity suite runs with them toggled both ways.
+
     Returns an :class:`OocRun`; ``labels`` are bit-identical to the
     in-core ``Engine.fit`` labels for the same (backend, config).
     """
@@ -188,6 +211,11 @@ def fit_out_of_core(source, config: EngineConfig | None = None, *,
             "split='bfs_host' walks the full adjacency in host memory and "
             "cannot run out-of-core; use split='lp' or 'lpp'")
     budget = parse_bytes(memory_budget)
+    if prefetch is None:
+        cores = (len(os.sched_getaffinity(0))
+                 if hasattr(os, "sched_getaffinity")
+                 else (os.cpu_count() or 1))
+        prefetch = cores > 1
 
     t0 = time.perf_counter()
     row_ptr = np.asarray(source.row_ptr())
@@ -225,9 +253,26 @@ def fit_out_of_core(source, config: EngineConfig | None = None, *,
     else:
         sweeps, cache_hit = be.build_partition(cfg), False
 
+    fused = bool(getattr(be, "supports_fused_partition", False)
+                 and getattr(sweeps, "fuse", False))
+
     ledger = MemoryLedger(budget)
-    loader = SliceLoader(source, plan, ledger)
+    loader = SliceLoader(source, plan, ledger,
+                         prefetch=prefetch and plan.num_partitions > 1)
     prepare = _Prepare(be, shapes, cfg)
+
+    # Device-resident halo-label caches, one per global array so epochs
+    # never mix (labels evolve per sub-sweep; comm is frozen during the
+    # split; slab evolves per split iteration).  Registered as spillers:
+    # window loads reclaim cache bytes before the ledger would fail.
+    caches: list[HaloLabelCache] = []
+    lab_cache = comm_cache = slab_cache = None
+    if halo_cache:
+        lab_cache = HaloLabelCache(ledger, n, shapes.n_loc, "labels")
+        comm_cache = HaloLabelCache(ledger, n, shapes.n_loc, "comm")
+        slab_cache = HaloLabelCache(ledger, n, shapes.n_loc, "slab")
+        caches = [lab_cache, comm_cache, slab_cache]
+        loader.spillers.extend(c.spill for c in caches)
 
     # --- resident O(n) vertex state (the semi-external model's half) ---
     labels = (np.arange(n, dtype=np.int32) if init_labels is None
@@ -243,6 +288,23 @@ def fit_out_of_core(source, config: EngineConfig | None = None, *,
     part_ctx = ("partition", shapes.n_loc, shapes.m, shapes.rows, shapes.d)
     t_plan = time.perf_counter() - t0
 
+    def gather(cache, arr, res):
+        """Cached local view when possible, plain host gather otherwise."""
+        if cache is not None:
+            out = cache.gather(res.part.index, res.local_ids, arr)
+            if out is not None:
+                return out
+        return exchange.gather(arr, res.local_ids)
+
+    def visit(i):
+        """Load partition ``i`` and stage ``i+1`` behind it."""
+        res = loader.load(i, prepare)
+        loader.prefetch((i + 1) % plan.num_partitions, prepare, keep=i)
+        return res
+
+    zeros_loc = np.zeros(shapes.n_loc, dtype=bool)
+    ones_loc = np.ones(shapes.n_loc, dtype=bool)
+
     # --- propagation: Algorithm 3 lines 1-6, partitioned ---
     t0 = time.perf_counter()
     changed_prev: np.ndarray | None = None
@@ -257,26 +319,45 @@ def fit_out_of_core(source, config: EngineConfig | None = None, *,
                 labels_next = labels.copy()
                 changed_next = np.zeros(n, dtype=bool)
                 for i in range(plan.num_partitions):
-                    res = loader.load(i, prepare)
+                    res = visit(i)
                     part, rng = res.part, slice(res.part.lo, res.part.hi)
                     loc = res.local_ids
-                    if changed_prev is not None:
-                        # lazy pruning update: finish the previous sweep's
-                        # active refresh for this partition's rows
-                        wake = be.partition_wake(
-                            sweeps, res.inputs,
-                            exchange.gather(changed_prev, loc))[: part.size]
-                        was_cand = active[rng] & klass_prev[rng]
-                        active[rng] = (active[rng] & ~was_cand) | wake
-                    cand = active[rng] & klass[rng]
-                    new = be.partition_move(
-                        sweeps, res.inputs, exchange.gather(labels, loc),
-                        cand, seed, bound)[: part.size]
+                    lab_loc = gather(lab_cache, labels, res)
+                    if fused:
+                        # one dispatch: lazy active refresh + candidate
+                        # pick + move (kernels/fused_sweep.py)
+                        if changed_prev is not None:
+                            chg_loc = exchange.gather(changed_prev, loc)
+                            candp = active[rng] & klass_prev[rng]
+                        else:
+                            chg_loc = zeros_loc
+                            candp = np.zeros(part.size, dtype=bool)
+                        new, act = be.partition_move_fused(
+                            sweeps, res.inputs, lab_loc, chg_loc,
+                            active[rng], candp, klass[rng], seed, bound)
+                        active[rng] = act[: part.size]
+                        new = new[: part.size]
+                    else:
+                        if changed_prev is not None:
+                            # lazy pruning update: finish the previous
+                            # sweep's active refresh for this partition
+                            wake = be.partition_wake(
+                                sweeps, res.inputs,
+                                exchange.gather(changed_prev,
+                                                loc))[: part.size]
+                            was_cand = active[rng] & klass_prev[rng]
+                            active[rng] = (active[rng] & ~was_cand) | wake
+                        cand = active[rng] & klass[rng]
+                        new = be.partition_move(
+                            sweeps, res.inputs, lab_loc,
+                            cand, seed, bound)[: part.size]
                     exchange.scatter(labels_next, rng, new)
                     ch = new != labels[rng]
                     changed_next[rng] = ch
                     delta += int(ch.sum())
                 labels = labels_next
+                if lab_cache is not None:
+                    lab_cache.advance(changed_next)
                 changed_prev, klass_prev = changed_next, klass
             it += 1
     lpa_iterations = it
@@ -297,18 +378,28 @@ def fit_out_of_core(source, config: EngineConfig | None = None, *,
             while delta > 0:
                 slab_next = slab.copy()
                 for i in range(plan.num_partitions):
-                    res = loader.load(i, prepare)
+                    res = visit(i)
                     part, rng = res.part, slice(res.part.lo, res.part.hi)
                     loc = res.local_ids
-                    comm_loc = exchange.gather(comm, loc)
-                    if prune and changed_prev is not None:
-                        sactive[rng] = be.partition_split_wake(
-                            sweeps, res.inputs, comm_loc,
-                            exchange.gather(changed_prev, loc))[: part.size]
-                    new = be.partition_split(
-                        sweeps, res.inputs, comm_loc,
-                        exchange.gather(slab, loc), sactive[rng],
-                        bound)[: part.size]
+                    comm_loc = gather(comm_cache, comm, res)
+                    slab_loc = gather(slab_cache, slab, res)
+                    if fused:
+                        # one dispatch: lazy wake + same-community min
+                        # (first iteration: everyone awake => chg all-ones)
+                        chg_loc = (exchange.gather(changed_prev, loc)
+                                   if changed_prev is not None else ones_loc)
+                        new = be.partition_split_fused(
+                            sweeps, res.inputs, comm_loc, slab_loc,
+                            chg_loc, bound)[: part.size]
+                    else:
+                        if prune and changed_prev is not None:
+                            sactive[rng] = be.partition_split_wake(
+                                sweeps, res.inputs, comm_loc,
+                                exchange.gather(changed_prev,
+                                                loc))[: part.size]
+                        new = be.partition_split(
+                            sweeps, res.inputs, comm_loc, slab_loc,
+                            sactive[rng], bound)[: part.size]
                     exchange.scatter(slab_next, rng, new)
                 if cfg.shortcut:
                     # global pointer jump — O(n) vertex pass, same position
@@ -318,12 +409,22 @@ def fit_out_of_core(source, config: EngineConfig | None = None, *,
                 delta = int(changed.sum())
                 changed_prev = changed
                 slab = slab_next
+                if slab_cache is not None:
+                    slab_cache.advance(changed)
                 split_iterations += 1
         labels = slab
     t_split = time.perf_counter() - t0
 
     peak = ledger.peak
     loads = loader.loads
+    # Cached gathers bypass the Exchange accounting; fold the bytes the
+    # caches did move (builds + changed-entry refreshes) back in so
+    # exchange_bytes stays "label traffic a wire layout would carry".
+    exchange_bytes = exchange.bytes + sum(c.bytes for c in caches)
+    saved = sum(c.bytes_saved for c in caches)
+    hits = sum(c.hits for c in caches)
+    for c in caches:
+        c.drop()
     loader.clear()
     return OocRun(
         labels=labels, backend=name, lpa_iterations=lpa_iterations,
@@ -331,8 +432,11 @@ def fit_out_of_core(source, config: EngineConfig | None = None, *,
         split_seconds=t_split, plan_seconds=t_plan,
         num_partitions=plan.num_partitions, peak_resident_bytes=peak,
         budget=budget, halo_vertices=plan.halo_vertices,
-        exchange_bytes=exchange.bytes, partition_loads=loads,
+        exchange_bytes=exchange_bytes, partition_loads=loads,
         cache_hit=cache_hit, plan_stats=plan.stats(),
+        fused=fused, prefetches=loader.prefetches,
+        prefetch_hits=loader.prefetch_hits,
+        halo_cache_bytes_saved=saved, halo_cache_hits=hits,
     )
 
 

@@ -17,6 +17,18 @@ windows.  This module owns that edge side:
 * a :class:`SliceLoader` LRU-caches resident partitions inside the
   budget: a generous budget keeps every partition warm after the first
   sweep, a tight one degrades gracefully to one-resident-at-a-time.
+  ``prefetch=True`` adds a one-slot background stage: the *next*
+  partition's mmap window and host→device prep are built on a worker
+  thread while the current one sweeps, with the staged bytes reserved in
+  the ledger **before** the thread starts (a-priori accounting — the
+  budget is never transiently overshot, and a prefetch that cannot fit
+  is simply skipped);
+* a :class:`HaloLabelCache` keeps device-resident per-partition label
+  views keyed by partition id, refreshed by epoch: when a resident
+  partition re-sweeps, only entries whose owning vertex changed since
+  the cached epoch are re-uploaded (`.at[idx].set`) — the full host
+  gather is skipped.  Cache bytes are ledger-charged and spill (LRU)
+  whenever a window load needs the room, so windows always win.
 
 Window *reads* from an mmap are lazily paged by the OS; the ledger
 charges them while held because a sweep actually touches every byte.
@@ -24,7 +36,9 @@ charges them while held because a sweep actually touches every byte.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import OrderedDict
+from concurrent.futures import Future, ThreadPoolExecutor
 
 import numpy as np
 
@@ -61,26 +75,35 @@ class MemoryBudgetExceeded(RuntimeError):
 
 
 class MemoryLedger:
-    """Tracks resident edge-proportional bytes against a hard budget."""
+    """Tracks resident edge-proportional bytes against a hard budget.
+
+    Thread-safe: the prefetching :class:`SliceLoader` reserves staged
+    bytes from the driver thread before its worker runs, but the lock
+    keeps the invariant airtight if callers ever account from both.
+    """
 
     def __init__(self, budget: int | None):
         self.budget = None if budget is None else int(budget)
         self.current = 0
         self.peak = 0
+        self._lock = threading.Lock()
 
     def acquire(self, nbytes: int, what: str = "") -> int:
         nbytes = int(nbytes)
-        if self.budget is not None and self.current + nbytes > self.budget:
-            raise MemoryBudgetExceeded(
-                f"acquiring {nbytes} bytes for {what or 'a partition'} "
-                f"would put {self.current + nbytes} resident edge bytes "
-                f"over the {self.budget}-byte budget")
-        self.current += nbytes
-        self.peak = max(self.peak, self.current)
+        with self._lock:
+            if (self.budget is not None
+                    and self.current + nbytes > self.budget):
+                raise MemoryBudgetExceeded(
+                    f"acquiring {nbytes} bytes for {what or 'a partition'} "
+                    f"would put {self.current + nbytes} resident edge bytes "
+                    f"over the {self.budget}-byte budget")
+            self.current += nbytes
+            self.peak = max(self.peak, self.current)
         return nbytes
 
     def release(self, nbytes: int) -> None:
-        self.current -= int(nbytes)
+        with self._lock:
+            self.current -= int(nbytes)
 
     def stats(self) -> dict:
         return {"budget": self.budget, "current": self.current,
@@ -244,19 +267,37 @@ class SliceLoader:
     ``build(resident) -> (inputs, nbytes)`` — the backend's device-side
     preparation (padded local CSR / neighbor tiles), cached on the
     resident entry.
+
+    ``prefetch=True`` enables the one-slot background stage (see the
+    module docstring): ``prefetch(k, prepare, keep=...)`` reserves the
+    staged bytes a-priori and builds window + inputs on a worker thread;
+    the matching ``load(k)`` joins the future instead of paying the
+    load.  ``spillers`` is a list of ``spill(nbytes) -> freed`` hooks
+    (e.g. :meth:`HaloLabelCache.spill`) tried after LRU eviction when a
+    load still does not fit — windows always win over caches.
     """
 
-    def __init__(self, source, plan: PartitionPlan, ledger: MemoryLedger):
+    def __init__(self, source, plan: PartitionPlan, ledger: MemoryLedger,
+                 prefetch: bool = False):
         self.source = source
         self.plan = plan
         self.ledger = ledger
         self._resident: OrderedDict[int, ResidentPartition] = OrderedDict()
+        self._pool = (ThreadPoolExecutor(max_workers=1,
+                                         thread_name_prefix="slice-prefetch")
+                      if prefetch else None)
+        self._staged: dict[int, tuple[Future, int]] = {}
+        self.spillers: list = []
         self.loads = 0          # partition loads actually performed
         self.requests = 0       # load() calls (hits + misses)
+        self.prefetches = 0     # prefetches staged on the worker
+        self.prefetch_hits = 0  # loads served by joining a staged future
 
     def load(self, index: int, prepare=None) -> ResidentPartition:
         self.requests += 1
         res = self._resident.get(index)
+        if res is None and index in self._staged:
+            res = self._adopt_staged(index)
         if res is None:
             part = self.plan.parts[index]
             incoming = slice_nbytes(part)
@@ -276,16 +317,103 @@ class SliceLoader:
             res.inputs, res.inputs_nbytes = inputs, nbytes
         return res
 
+    def prefetch(self, index: int, prepare=None,
+                 keep: int | None = None) -> bool:
+        """Stage partition ``index`` on the worker thread.
+
+        Reserves the a-priori byte estimate (window + prepared inputs)
+        in the ledger *before* the thread starts, evicting LRU residents
+        other than ``keep`` (the partition currently sweeping) to make
+        room.  Returns False — skipping the prefetch, never the budget —
+        when the staged bytes cannot fit.
+        """
+        if (self._pool is None or index in self._resident
+                or index in self._staged):
+            return False
+        part = self.plan.parts[index]
+        incoming = slice_nbytes(part)
+        if prepare is not None:
+            incoming += prepare.estimate(part)
+        if self.ledger.budget is not None:
+            while self.ledger.current + incoming > self.ledger.budget:
+                victim = next((i for i in self._resident if i != keep),
+                              None)
+                if victim is None:
+                    if not self._spill(incoming):
+                        return False
+                    break
+                self.evict(victim)
+            if self.ledger.current + incoming > self.ledger.budget:
+                return False
+        self.ledger.acquire(incoming, f"partition {index} prefetch")
+
+        def work() -> ResidentPartition:
+            res = load_partition(self.source, part)
+            if prepare is not None:
+                inputs, nbytes = prepare.build(res)
+                res.inputs, res.inputs_nbytes = inputs, nbytes
+            return res
+
+        self._staged[index] = (self._pool.submit(work), incoming)
+        self.prefetches += 1
+        return True
+
+    def _adopt_staged(self, index: int) -> ResidentPartition:
+        """Join a staged future and reconcile its reservation."""
+        fut, reserved = self._staged.pop(index)
+        try:
+            res = fut.result()
+        except BaseException:
+            self.ledger.release(reserved)
+            raise
+        actual = res.nbytes + res.inputs_nbytes
+        if actual > reserved:
+            self._fit(actual - reserved, keep=index)
+            self.ledger.acquire(actual - reserved,
+                                f"partition {index} staged excess")
+        elif actual < reserved:
+            self.ledger.release(reserved - actual)
+        self._resident[index] = res
+        self.loads += 1
+        self.prefetch_hits += 1
+        return res
+
+    def _drop_staged(self, index: int) -> None:
+        fut, reserved = self._staged.pop(index)
+        try:
+            fut.result()
+        except BaseException:
+            pass
+        self.ledger.release(reserved)
+
     def _fit(self, incoming: int, keep: int | None) -> None:
         """Evict LRU residents until ``incoming`` more bytes fit."""
         if self.ledger.budget is None:
             return
         while self.ledger.current + incoming > self.ledger.budget:
             victim = next((i for i in self._resident if i != keep), None)
-            if victim is None:
-                # nothing left to evict: the ledger raises with context
+            if victim is not None:
+                self.evict(victim)
+                continue
+            staged = next((i for i in self._staged if i != keep), None)
+            if staged is not None:
+                self._drop_staged(staged)
+                continue
+            if self._spill(incoming):
                 break
-            self.evict(victim)
+            # nothing left to evict: the ledger raises with context
+            break
+
+    def _spill(self, incoming: int) -> bool:
+        """Ask registered caches to free room; True once it fits."""
+        if self.ledger.budget is None:
+            return True
+        for spill in self.spillers:
+            need = self.ledger.current + incoming - self.ledger.budget
+            if need <= 0:
+                return True
+            spill(need)
+        return self.ledger.current + incoming <= self.ledger.budget
 
     def evict(self, index: int) -> None:
         res = self._resident.pop(index, None)
@@ -293,9 +421,115 @@ class SliceLoader:
             self.ledger.release(res.nbytes + res.inputs_nbytes)
 
     def clear(self) -> None:
+        for index in list(self._staged):
+            self._drop_staged(index)
         for index in list(self._resident):
             self.evict(index)
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
 
     def stats(self) -> dict:
         return {**self.ledger.stats(), "resident": len(self._resident),
-                "loads": self.loads, "requests": self.requests}
+                "loads": self.loads, "requests": self.requests,
+                "prefetches": self.prefetches,
+                "prefetch_hits": self.prefetch_hits}
+
+
+class HaloLabelCache:
+    """Device-resident per-partition label views, keyed by partition id.
+
+    ``gather(index, local_ids, arr)`` returns the same padded local view
+    ``Exchange.gather`` would build — owned rows then halo imports, padded
+    to ``n_loc`` — but keeps it resident on device between visits.  A
+    per-vertex epoch array tracks when each vertex last changed
+    (``advance(changed)`` after every assembled sweep); on a re-visit only
+    the stale entries are re-uploaded via ``.at[idx].set`` — the changed
+    labels are scattered into the cached view instead of re-gathering the
+    whole partition.  One instance caches one global array (labels during
+    propagation; the frozen community assignment and the split labels get
+    their own instances so epochs never mix).
+
+    Entries are ledger-charged (``n_loc`` * 4 B each) and spill LRU-first
+    via :meth:`spill` — registered on ``SliceLoader.spillers`` so window
+    loads always win the budget.  When an entry cannot fit, ``gather``
+    falls back to the caller's plain host gather by returning None.
+    """
+
+    def __init__(self, ledger: MemoryLedger, n: int, n_loc: int,
+                 what: str = "labels"):
+        self.ledger = ledger
+        self.n_loc = int(n_loc)
+        self.what = what
+        self.epoch = 0
+        self._epoch_of = np.zeros(n, dtype=np.int64)
+        self._entries: OrderedDict[int, list] = OrderedDict()  # [arr, epoch]
+        self.nbytes = 0
+        self.bytes = 0        # label bytes actually uploaded to device
+        self.bytes_saved = 0  # gather bytes skipped thanks to the cache
+        self.hits = 0         # visits served without any upload
+
+    def advance(self, changed: np.ndarray) -> None:
+        """Record one assembled sweep: ``changed`` rows now carry the new
+        epoch; everything else stays valid in every cached view."""
+        self.epoch += 1
+        self._epoch_of[changed] = self.epoch
+
+    def gather(self, index: int, local_ids: np.ndarray, arr: np.ndarray):
+        import jax.numpy as jnp
+        k = len(local_ids)
+        entry = self._entries.get(index)
+        if entry is None:
+            nb = self.n_loc * 4
+            if not self._make_room(nb):
+                return None          # caller falls back to the host gather
+            self.ledger.acquire(nb, f"halo {self.what} cache p{index}")
+            self.nbytes += nb
+            out = np.zeros(self.n_loc, dtype=arr.dtype)
+            out[:k] = arr[local_ids]
+            entry = [jnp.asarray(out), self.epoch]
+            self._entries[index] = entry
+            self.bytes += k * arr.itemsize
+            return entry[0]
+        self._entries.move_to_end(index)
+        stale = np.nonzero(self._epoch_of[local_ids] > entry[1])[0]
+        if len(stale):
+            entry[0] = entry[0].at[jnp.asarray(stale)].set(
+                jnp.asarray(arr[local_ids[stale]]))
+            self.bytes += len(stale) * arr.itemsize
+        else:
+            self.hits += 1
+        self.bytes_saved += (k - len(stale)) * arr.itemsize
+        entry[1] = self.epoch
+        return entry[0]
+
+    def _make_room(self, nbytes: int) -> bool:
+        if self.ledger.budget is None:
+            return True
+        while self.ledger.current + nbytes > self.ledger.budget:
+            if not self._entries:
+                return False
+            self._evict_one()
+        return True
+
+    def _evict_one(self) -> None:
+        _, _entry = self._entries.popitem(last=False)
+        self.ledger.release(self.n_loc * 4)
+        self.nbytes -= self.n_loc * 4
+
+    def spill(self, nbytes: int) -> int:
+        """Free >= ``nbytes`` if possible (LRU-first); returns freed."""
+        freed = 0
+        while freed < nbytes and self._entries:
+            self._evict_one()
+            freed += self.n_loc * 4
+        return freed
+
+    def drop(self) -> None:
+        while self._entries:
+            self._evict_one()
+
+    def stats(self) -> dict:
+        return {"entries": len(self._entries), "nbytes": self.nbytes,
+                "bytes": self.bytes, "bytes_saved": self.bytes_saved,
+                "hits": self.hits}

@@ -18,3 +18,59 @@ class SoloBackend:
 
     def run(self, plan, inputs, n_real, init_labels, init_active=None):
         return None
+
+
+@register_backend("fixture-fused-ok")
+class FusedBackend:
+    """Partition + fused surface with reference parameter names."""
+    name = "fixture-fused-ok"
+    supports_batch = False
+    supports_partition = True
+    supports_fused_partition = True
+
+    def plan_key(self, config):
+        return ()
+
+    def build(self, bucket, config):
+        return object()
+
+    def prepare(self, graph, bucket, config):
+        return graph
+
+    def run(self, plan, inputs, n_real, init_labels, init_active=None):
+        return None
+
+    def build_partition(self, config):
+        return object()
+
+    def partition_caps(self, budget, d_bucket):
+        return budget, None
+
+    def partition_prepare_nbytes(self, shapes):
+        return 0
+
+    def prepare_partition(self, resident, shapes, config):
+        return resident
+
+    def partition_move(self, ops_ns, inputs, labels_loc, cand_owned,
+                       seed, bound):
+        return None
+
+    def partition_wake(self, ops_ns, inputs, changed_loc):
+        return None
+
+    def partition_split(self, ops_ns, inputs, comm_loc, labels_loc,
+                        active_owned, bound):
+        return None
+
+    def partition_split_wake(self, ops_ns, inputs, comm_loc, changed_loc):
+        return None
+
+    def partition_move_fused(self, ops_ns, inputs, labels_loc, changed_loc,
+                             active_owned, cand_prev_owned, klass_owned,
+                             seed, bound):
+        return None
+
+    def partition_split_fused(self, ops_ns, inputs, comm_loc, labels_loc,
+                              changed_loc, bound):
+        return None

@@ -19,3 +19,29 @@ class BrokenBackend:  # EXPECT-R003
 
     def run(self, plan, inputs, num_real, init_labels, init_active):  # EXPECT-R003
         return None
+
+
+@register_backend("fixture-fused")
+class FusedWithoutPartition:  # EXPECT-R003
+    """Claims the fused pair without the partition surface beneath it,
+    and drifts one fused hook's parameter names."""
+    name = "fixture-fused"
+    supports_batch = False
+    supports_fused_partition = True   # missing partition_split_fused too
+
+    def plan_key(self, config):
+        return ()
+
+    def build(self, bucket, config):
+        return object()
+
+    def prepare(self, graph, bucket, config):
+        return graph
+
+    def run(self, plan, inputs, n_real, init_labels, init_active=None):
+        return None
+
+    def partition_move_fused(self, ops_ns, inputs, labels, changed,  # EXPECT-R003
+                             active_owned, cand_prev_owned, klass_owned,
+                             seed, bound):
+        return None

@@ -16,3 +16,24 @@ def launch(x, n_pad, tile_b):
         out_specs=pl.BlockSpec((8, 128), lambda i: (i, 0)),
         out_shape=None,
     )(x)
+
+
+CUBE_BUDGET = 4 * 1024 * 1024
+
+
+def _cube_kernel(lab_ref, o_ref):
+    lab = lab_ref[...]
+    eq = (lab[:, :, None] == lab[:, None, :]).astype("float32")
+    o_ref[...] = eq.sum(axis=2)
+
+
+def launch_cube(lab, n_pad, d, tile_b):
+    assert n_pad % tile_b == 0, (n_pad, tile_b)
+    assert tile_b * d * d * 4 <= CUBE_BUDGET, (tile_b, d)
+    return pl.pallas_call(
+        _cube_kernel,
+        grid=(n_pad // tile_b,),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (i, 0)),
+        out_shape=None,
+    )(lab)

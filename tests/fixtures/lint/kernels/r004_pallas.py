@@ -16,3 +16,23 @@ def launch(x):
         out_specs=pl.BlockSpec((4096, 1024), lambda i: (i, 0)),
         out_shape=None,
     )(x)
+
+
+def _cube_kernel(lab_ref, w_ref, o_ref):
+    lab = lab_ref[...]
+    eq = (lab[:, :, None] == lab[:, None, :]).astype(w_ref[...].dtype)
+    o_ref[...] = eq.sum(axis=2)
+
+
+def launch_cube(lab, w, n_pad, tile_b):
+    # guarded grid, but no cube-budget assert: the (B, D, D) cube is
+    # invisible to the BlockSpec footprint check
+    assert n_pad % tile_b == 0
+    return pl.pallas_call(  # EXPECT-R004
+        _cube_kernel,
+        grid=(n_pad // tile_b,),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0)),
+                  pl.BlockSpec((8, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (i, 0)),
+        out_shape=None,
+    )(lab, w)

@@ -28,11 +28,13 @@ from repro.partition.plan import (
     plan_partitions,
 )
 from repro.partition.slices import (
+    HaloLabelCache,
     InMemorySource,
     MemoryBudgetExceeded,
     MemoryLedger,
     SliceLoader,
     load_partition,
+    slice_nbytes,
 )
 
 # Small enough that every (backend, split) combo compiles fast; sized so
@@ -170,6 +172,72 @@ def test_loader_lru_stays_under_budget():
     assert ledger.current == 0
 
 
+def test_loader_prefetch_stages_under_budget():
+    """Round-robin sweeps with the next window staged: the ledger's
+    high-water mark (current + staged reservation) stays <= budget, and
+    staged windows are adopted instead of re-read."""
+    g = random_graph(200, 5.0, seed=6)
+    source = InMemorySource(g)
+    plan = attach_halos(plan_partitions(_row_ptr(g), num_partitions=6),
+                        lambda lo, hi: source.window("dst", lo, hi))
+    budget = max(slice_nbytes(p) for p in plan.parts) * 2
+    ledger = MemoryLedger(budget)
+    loader = SliceLoader(source, plan, ledger, prefetch=True)
+    for _sweep in range(2):
+        for i in range(plan.num_partitions):
+            loader.load(i)
+            loader.prefetch((i + 1) % plan.num_partitions, keep=i)
+    assert ledger.peak <= budget
+    assert loader.prefetches > 0 and loader.prefetch_hits > 0
+    loader.clear()                      # joins + releases staged windows
+    assert ledger.current == 0
+
+
+def test_halo_label_cache_epoch_invalidation():
+    """A cached view is served byte-free while its rows are unchanged;
+    after an owning partition rewrites a vertex (advance), only the
+    stale rows are re-uploaded."""
+    ledger = MemoryLedger(1 << 20)
+    arr = (np.arange(100, dtype=np.int32) * 10).copy()
+    cache = HaloLabelCache(ledger, n=100, n_loc=16, what="labels")
+    ids = np.array([5, 7, 50, 99])
+    v1 = np.asarray(cache.gather(0, ids, arr))
+    assert np.array_equal(v1[:4], arr[ids]) and v1.shape == (16,)
+    assert cache.hits == 0 and cache.bytes == 4 * arr.itemsize
+    # unchanged revisit: a pure hit, zero bytes uploaded
+    v2 = np.asarray(cache.gather(0, ids, arr))
+    assert cache.hits == 1 and np.array_equal(v2, v1)
+    assert cache.bytes == 4 * arr.itemsize
+    # the owner of vertex 50 relabels it: exactly that entry refreshes
+    arr[50] = -1
+    changed = np.zeros(100, dtype=bool)
+    changed[50] = True
+    cache.advance(changed)
+    v3 = np.asarray(cache.gather(0, ids, arr))
+    assert v3[2] == -1
+    assert np.array_equal(v3[[0, 1, 3]], v1[[0, 1, 3]])
+    assert cache.hits == 1              # a refresh visit is not a hit
+    assert cache.bytes == 5 * arr.itemsize          # 4 initial + 1 stale
+    assert cache.bytes_saved == (4 + 3) * arr.itemsize
+    cache.drop()
+    assert ledger.current == 0
+
+
+def test_halo_label_cache_respects_budget():
+    """No room for even one entry -> gather declines (returns None) and
+    the caller falls back to the plain host gather; spill frees LRU."""
+    arr = np.arange(32, dtype=np.int32)
+    tiny = HaloLabelCache(MemoryLedger(32), n=32, n_loc=16)  # entry = 64 B
+    assert tiny.gather(0, np.array([1, 2]), arr) is None
+    ledger = MemoryLedger(160)          # room for two 64 B entries
+    cache = HaloLabelCache(ledger, n=32, n_loc=16)
+    for idx in range(3):                # third insert evicts LRU entry 0
+        assert cache.gather(idx, np.array([idx]), arr) is not None
+    assert cache.stats()["entries"] == 2 and ledger.peak <= 160
+    assert cache.spill(64) == 64        # window loads can reclaim room
+    assert cache.stats()["entries"] == 1
+
+
 def test_single_partition_too_big_raises():
     g = random_graph(100, 5.0, seed=7)
     source = InMemorySource(g)
@@ -238,6 +306,77 @@ def test_ooc_warm_start_parity():
     assert np.array_equal(ref.labels, ooc.labels)
     with pytest.raises(ValueError, match="init_labels"):
         eng.fit(g, init_labels=base[:-1], memory_budget=_tight_budget(g))
+
+
+@pytest.mark.parametrize("split", ["lp", "lpp", "none"])
+def test_ooc_segment_fused_parity(split):
+    """Segment fused partition sweeps (one jitted dispatch per visit)
+    are bit-identical to the unfused wake+move/wake+min pair."""
+    g = random_graph(220, 4.0, seed=3)
+    source = InMemorySource(g)
+    budget = _tight_budget(g)
+    runs = {}
+    for fuse in ("on", "off"):
+        cfg = EngineConfig(backend="segment", split=split, fuse_sweeps=fuse)
+        runs[fuse] = fit_out_of_core(source, cfg, memory_budget=budget,
+                                     cache=CompileCache())
+    assert runs["on"].fused and not runs["off"].fused
+    assert runs["on"].num_partitions > 1
+    assert np.array_equal(runs["on"].labels, runs["off"].labels), split
+    assert runs["on"].lpa_iterations == runs["off"].lpa_iterations
+    assert runs["on"].split_iterations == runs["off"].split_iterations
+
+
+def test_ooc_tile_fused_interpret_parity():
+    """Tile fused partition sweeps under interpret mode (the real kernel
+    body) against the in-core fit."""
+    g = FIXTURES["tile_mix"]()
+    eng = Engine(EngineConfig(backend="tile", kernel_mode="interpret",
+                              fuse_sweeps="on"), cache=CompileCache())
+    ref = eng.fit(g)
+    ooc = eng.fit(g, memory_budget=_tight_budget(g, "tile"))
+    assert ooc.partitions > 1
+    assert np.array_equal(ref.labels, ooc.labels)
+    assert ref.lpa_iterations == ooc.lpa_iterations
+    assert ref.split_iterations == ooc.split_iterations
+
+
+def test_ooc_prefetch_parity_and_budget():
+    """Prefetch on vs off: same labels, same iteration counts, ledger
+    peak (with the second window staged) still <= budget."""
+    g = random_graph(220, 4.0, seed=3)
+    source = InMemorySource(g)
+    cfg = EngineConfig(backend="segment", split="lp")
+    budget = _tight_budget(g)
+    cache = CompileCache()
+    base = fit_out_of_core(source, cfg, memory_budget=budget, cache=cache,
+                           prefetch=False, halo_cache=False)
+    # under this tight budget a second window cannot be reserved, so the
+    # loader declines every stage — the run must still be exact
+    pre = fit_out_of_core(source, cfg, memory_budget=budget, cache=cache,
+                          prefetch=True, halo_cache=True)
+    assert pre.num_partitions > 1
+    assert np.array_equal(base.labels, pre.labels)
+    assert base.lpa_iterations == pre.lpa_iterations
+    assert base.split_iterations == pre.split_iterations
+    assert pre.peak_resident_bytes <= budget
+    assert base.peak_resident_bytes <= budget
+
+
+def test_ooc_prefetch_and_halo_cache_engage():
+    """With headroom over the windows, staged loads are adopted and the
+    halo label cache serves revisits without re-gathering."""
+    g = random_graph(220, 4.0, seed=3)
+    source = InMemorySource(g)
+    cfg = EngineConfig(backend="segment", split="lp")
+    budget = 3 * in_core_edge_bytes(source)   # room for ~2 windows + caches
+    run = fit_out_of_core(source, cfg, memory_budget=budget,
+                          num_partitions=4, cache=CompileCache(),
+                          prefetch=True, halo_cache=True)
+    assert run.num_partitions == 4
+    assert run.prefetches > 0 and run.prefetch_hits > 0
+    assert run.halo_cache_hits > 0 and run.halo_cache_bytes_saved > 0
+    assert run.peak_resident_bytes <= budget
 
 
 # --- engine routing + guards -----------------------------------------------

@@ -65,8 +65,10 @@ def test_workload_zero_excess_retraces():
     # the workload genuinely exercised every dispatch family
     stages = {row["stage"] for row in report["contexts"]}
     for expected in ("segment:propagate", "segment:batch_propagate",
-                     "segment:part_move", "tile:propagate",
-                     "tile:batch_propagate", "tile:part_move",
+                     "segment:part_move", "segment:part_fused_move",
+                     "tile:propagate", "tile:propagate_fused",
+                     "tile:batch_propagate", "tile:batch_propagate_fused",
+                     "tile:part_move", "tile:part_fused_move",
                      "sharded:propagate"):
         assert expected in stages, f"workload never traced {expected}"
     audit.assert_no_excess()
