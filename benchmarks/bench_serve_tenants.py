@@ -1,0 +1,204 @@
+"""Multi-tenant serving SLO harness: K tenants over one shared engine.
+
+Drives K simulated tenants (each an evolving graph: cold register, then
+mixed warm-delta / cold-refresh rounds) from concurrent client threads
+through one :class:`repro.serve.TenantService` — one Engine, one
+micro-batcher, bounded admission with per-tenant round-robin fairness —
+and reports the SLO surface: sustained aggregate edges/s, p50/p99
+request latency, queue depth, rejection rate, warm-memory peak.
+
+Three phases, each asserted (JSON artifact joins the bench-trend file):
+
+  * ``slo_load``  — the headline K-tenant run.  Hard liveness bar: zero
+    stranded requests (every admitted request resolves), zero failures,
+    zero client give-ups; warm-cache bytes never exceed the configured
+    budget (the shared ledger's peak is the proof).
+  * ``spill_pressure`` — same traffic, warm budget sized below the
+    tenant set: least-recently-served tenants' warm labels must spill
+    (cold-but-correct next update) instead of busting the budget.
+  * ``restore_warm`` — snapshot the tenant set, "restart" onto a fresh
+    engine, restore, apply one more delta per tenant: restored-warm
+    iteration counts must come in strictly under cold re-detection.
+
+    PYTHONPATH=src python benchmarks/bench_serve_tenants.py [out.json]
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+from common import emit
+
+from repro.engine import CompileCache, Engine, EngineConfig
+from repro.graphgen import evolving_sequence
+from repro.serve import ServiceConfig, TenantService
+from repro.serve.loadgen import LoadConfig, build_traces, run_load
+
+TENANTS = 32
+ROUNDS = 3
+SIZE = 120
+AVG_DEGREE = 5.0
+DELTA_EDGES = 4
+CLIENT_THREADS = 8
+QUEUE_CAPACITY = 16       # < tenants: register bursts exercise rejection
+WARM_BUDGET = "64KB"      # generous: the slo_load run must never spill
+BACKEND = "segment"
+
+
+def _service(engine, **over) -> TenantService:
+    kw = dict(queue_capacity=QUEUE_CAPACITY, warm_budget=WARM_BUDGET,
+              max_batch=8, batch_timeout_ms=2.0, retry_after_s=0.002)
+    kw.update(over)
+    return TenantService(engine, ServiceConfig(**kw))
+
+
+def bench_slo_load(engine) -> list[dict]:
+    cfg = LoadConfig(tenants=TENANTS, rounds=ROUNDS, size=SIZE,
+                     avg_degree=AVG_DEGREE, delta_edges=DELTA_EDGES,
+                     refresh_every=3, parity_tenants=4,
+                     client_threads=CLIENT_THREADS, seed=0)
+    # warm-up sweep compiles the batch plans this traffic shape touches,
+    # so the timed run measures serving, not tracing
+    warm_cfg = dataclasses.replace(cfg, tenants=8, seed=1000)
+    svc = _service(engine)
+    run_load(svc, build_traces(warm_cfg), warm_cfg)
+    svc.close()
+
+    svc = _service(engine)
+    try:
+        _records, s = run_load(svc, build_traces(cfg), cfg)
+    finally:
+        svc.close()
+
+    assert s["stranded"] == 0, (
+        f"{s['stranded']} admitted requests never resolved")
+    assert s["failed"] == 0 and s["errors"] == 0, (
+        f"{s['failed']} failed / {s['errors']} errored requests")
+    assert s["give_ups"] == 0, (
+        f"{s['give_ups']} clients gave up under backpressure")
+    assert s["warm_bytes_peak"] <= s["warm_budget"], (
+        f"warm ledger peaked at {s['warm_bytes_peak']}B over the "
+        f"{s['warm_budget']}B budget")
+    assert s["spills"] == 0, "headline run is sized to never spill"
+    print(f"[bench-serve-tenants] {s['tenants']} tenants x "
+          f"{1 + s['rounds']} requests: {s['edges_per_s']:.0f} edges/s, "
+          f"p50 {s['p50_ms']:.1f}ms p99 {s['p99_ms']:.1f}ms, "
+          f"rejection rate {s['rejection_rate']:.1%}, 0 stranded: OK")
+    return [{
+        "bench": "slo_load", "seconds": s["wall_s"],
+        "tenants": s["tenants"], "requests": s["requests"],
+        "client_threads": CLIENT_THREADS, "backend": BACKEND,
+        "edges_per_s": round(s["edges_per_s"], 1),
+        "p50_ms": round(s["p50_ms"], 3), "p99_ms": round(s["p99_ms"], 3),
+        "rejection_rate": round(s["rejection_rate"], 4),
+        "retries": s["retries"],
+        "queue_depth_peak": s["queue_depth_peak"],
+        "queue_depth_mean": round(s["queue_depth_mean"], 2),
+        "mean_batch": round(s["mean_batch"], 2),
+        "stranded": s["stranded"], "failed": s["failed"],
+        "warm_bytes_peak": s["warm_bytes_peak"],
+        "warm_budget": s["warm_budget"],
+    }]
+
+
+def bench_spill_pressure(engine) -> list[dict]:
+    cfg = LoadConfig(tenants=12, rounds=2, size=SIZE,
+                     avg_degree=AVG_DEGREE, delta_edges=DELTA_EDGES,
+                     refresh_every=0, parity_tenants=0,
+                     client_threads=4, seed=50)
+    # int32 labels are ~SIZE*4 B per tenant; budget ~half the tenant set
+    budget = 6 * SIZE * 4
+    svc = _service(engine, warm_budget=budget)
+    try:
+        _records, s = run_load(svc, build_traces(cfg), cfg)
+    finally:
+        svc.close()
+    assert s["stranded"] == 0 and s["failed"] == 0
+    assert s["spills"] > 0, (
+        f"budget {budget}B over {cfg.tenants} tenants produced no spills")
+    assert s["warm_bytes_peak"] <= budget, (
+        f"spilling still peaked {s['warm_bytes_peak']}B over {budget}B")
+    print(f"[bench-serve-tenants] spill pressure: {s['spills']} spills "
+          f"kept peak {s['warm_bytes_peak']}B <= {budget}B budget: OK")
+    return [{
+        "bench": "spill_pressure", "seconds": s["wall_s"],
+        "tenants": cfg.tenants, "spills": s["spills"],
+        "warm_bytes_peak": s["warm_bytes_peak"], "warm_budget": budget,
+        "stranded": s["stranded"],
+    }]
+
+
+def bench_restore_warm(engine) -> list[dict]:
+    """Snapshot -> restart -> restore: tenants resume warm, and the
+    first post-restore update is strictly cheaper than re-detecting."""
+    from repro.checkpoint import CheckpointManager
+
+    tenants = 8
+    traces = {f"t{i:02d}": evolving_sequence(SIZE, AVG_DEGREE, 3,
+                                             DELTA_EDGES, seed=900 + i)
+              for i in range(tenants)}
+    svc = _service(engine)
+    with svc:
+        for t, (base, _) in traces.items():
+            svc.register(t, base).result()
+        for r in range(2):
+            tickets = [svc.update(t, ds[r]) for t, (_, ds) in traces.items()]
+            for tk in tickets:
+                tk.result()
+        with tempfile.TemporaryDirectory() as tmp:
+            mgr = CheckpointManager(Path(tmp) / "ckpt")
+            svc.snapshot(mgr)
+            graphs = {t: svc.graph(t) for t in traces}
+
+            # restart: fresh engine AND fresh compile cache — nothing
+            # warm survives except what the checkpoint carries
+            engine2 = Engine(EngineConfig(backend=BACKEND),
+                             cache=CompileCache())
+            svc2 = _service(engine2)
+            t0 = time.perf_counter()
+            report = svc2.restore(mgr, graphs)
+            restore_s = time.perf_counter() - t0
+    assert len(report["restored"]) == tenants, report
+
+    warm_iters = cold_iters = 0
+    cold_eng = Engine(EngineConfig(backend=BACKEND), cache=CompileCache())
+    with svc2:
+        for t, (_, ds) in traces.items():
+            res = svc2.update(t, ds[2]).result()
+            assert res.warm_started, t
+            warm_iters += res.lpa_iterations
+            cold_iters += cold_eng.fit(svc2.graph(t)).lpa_iterations
+    assert warm_iters < cold_iters, (
+        f"restored-warm updates took {warm_iters} LPA iterations vs "
+        f"{cold_iters} for cold re-detection — restore bought nothing")
+    print(f"[bench-serve-tenants] restore: {len(report['restored'])} "
+          f"tenants warm in {restore_s * 1e3:.1f}ms; next updates "
+          f"{warm_iters} vs {cold_iters} cold LPA iterations: OK")
+    return [{
+        "bench": "restore_warm", "seconds": restore_s,
+        "tenants": tenants, "restored": len(report["restored"]),
+        "warm_iters": warm_iters, "cold_iters": cold_iters,
+        "iter_ratio": round(warm_iters / max(cold_iters, 1), 3),
+    }]
+
+
+def main() -> None:
+    out_path = sys.argv[1] if len(sys.argv) > 1 else "serve_tenants.json"
+    engine = Engine(EngineConfig(backend=BACKEND), cache=CompileCache())
+    rows = bench_slo_load(engine)
+    rows += bench_spill_pressure(engine)
+    rows += bench_restore_warm(engine)
+    emit(rows, "serve_tenants")
+    with open(out_path, "w") as f:
+        json.dump(rows, f, indent=2)
+    print(f"[bench-serve-tenants] wrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

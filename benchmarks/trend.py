@@ -83,6 +83,24 @@ def summarize(name: str, payload) -> str:
                 f" on {ooc_gain.get('cores')} core(s)")
         if parts:
             return ", ".join(parts)
+    if name == "BENCH_serve_tenants" and isinstance(payload, list):
+        by = {r.get("bench"): r for r in payload if isinstance(r, dict)}
+        slo = by.get("slo_load")
+        if slo:
+            parts = [f"{slo.get('tenants')} tenants "
+                     f"{_fmt(slo.get('edges_per_s', 0))} edges/s, "
+                     f"p99 {_fmt(slo.get('p99_ms', 0))}ms, "
+                     f"rej {_fmt(slo.get('rejection_rate', 0))}, "
+                     f"{slo.get('stranded')} stranded"]
+            spill = by.get("spill_pressure")
+            if spill:
+                parts.append(f"{spill.get('spills')} spills <= "
+                             f"{spill.get('warm_budget')}B")
+            rest = by.get("restore_warm")
+            if rest:
+                parts.append(f"restore {rest.get('warm_iters')}/"
+                             f"{rest.get('cold_iters')} warm/cold iters")
+            return ", ".join(parts)
     if isinstance(payload, dict):
         return _scalars(payload) or "(no scalar fields)"
     if isinstance(payload, list):

@@ -103,6 +103,32 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def load_named(self, step: int | None = None, verify: bool = True
+                   ) -> tuple[dict[str, np.ndarray], int, dict]:
+        """Load a checkpoint's raw named arrays without a target tree.
+
+        ``restore`` needs a structurally-matching template with known
+        shapes/dtypes; state whose shape only the checkpoint knows (the
+        serving tier's per-tenant warm labels — one array per tenant,
+        lengths set by each tenant's graph) loads through this instead.
+        Returns ``(name -> host array, step, extra)`` with the same
+        content-hash verification as ``restore``.
+        """
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self.dir / f"step-{step}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        if verify:
+            digest = hashlib.sha256((d / "arrays.npz").read_bytes()
+                                    ).hexdigest()
+            if digest != manifest["sha256"]:
+                raise IOError(f"checkpoint step-{step} hash mismatch")
+        with np.load(d / "arrays.npz") as data:
+            named = {k: data[k] for k in data.files}
+        return named, step, manifest.get("extra", {})
+
     def restore(self, target_tree, step: int | None = None,
                 shardings=None, verify: bool = True):
         """Restore into the structure of ``target_tree``; optional reshard

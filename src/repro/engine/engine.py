@@ -28,6 +28,7 @@ tests/test_stream.py).
 """
 from __future__ import annotations
 
+import threading
 import time
 from collections import OrderedDict
 
@@ -103,26 +104,38 @@ class _WarmCache:
     fit of a structurally identical graph starts from them.  The bound
     keeps a long streaming session from accumulating one labels array
     per graph ever served (tests pin the no-unbounded-growth property).
+
+    Thread-safe: one Engine is shared by every session of the serving
+    tier, so ``get``/``put`` race from the micro-batcher worker, client
+    threads calling ``fit`` directly, and ``stats()`` pollers.  An
+    ``OrderedDict`` mutated by ``move_to_end``/``popitem`` corrupts
+    under that interleaving (the compile caches in ``engine/cache.py``
+    always took a lock; this cache historically did not), so every
+    access holds the lock.
     """
 
     def __init__(self, max_entries: int):
         self.max_entries = int(max_entries)
         self._entries: OrderedDict[tuple, np.ndarray] = OrderedDict()
+        self._lock = threading.Lock()
 
     def get(self, fp: tuple) -> np.ndarray | None:
-        labels = self._entries.get(fp)
-        if labels is not None:
-            self._entries.move_to_end(fp)
-        return labels
+        with self._lock:
+            labels = self._entries.get(fp)
+            if labels is not None:
+                self._entries.move_to_end(fp)
+            return labels
 
     def put(self, fp: tuple, labels: np.ndarray) -> None:
-        self._entries[fp] = labels
-        self._entries.move_to_end(fp)
-        while len(self._entries) > self.max_entries:
-            self._entries.popitem(last=False)
+        with self._lock:
+            self._entries[fp] = labels
+            self._entries.move_to_end(fp)
+            while len(self._entries) > self.max_entries:
+                self._entries.popitem(last=False)
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
 
 
 class Engine:

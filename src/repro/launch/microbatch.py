@@ -46,6 +46,18 @@ class Submission:
     def done(self) -> bool:
         return self._future.done()
 
+    def exception(self, timeout: float | None = None):
+        return self._future.exception(timeout)
+
+    def add_done_callback(self, fn) -> None:
+        """Call ``fn(self)`` when the result (or exception) lands.
+
+        Runs on the worker thread that settles the future (or inline if
+        already done) — the async-settle hook the multi-tenant serving
+        tier uses instead of blocking a thread per request.
+        """
+        self._future.add_done_callback(lambda _f: fn(self))
+
 
 class MicroBatcher:
     """Queue-draining micro-batch scheduler over ``Engine.fit_many``.
@@ -74,6 +86,8 @@ class MicroBatcher:
         self._q: "queue.Queue[Submission | None]" = queue.Queue()
         self._lock = threading.Lock()  # orders submits against the sentinel
         self._closed = False
+        self._fatal: BaseException | None = None  # worker died with this
+        self._inflight: tuple | list = ()  # batch currently in _dispatch
         self._started = False
         self._thread = threading.Thread(target=self._run, daemon=True,
                                         name="microbatcher")
@@ -129,6 +143,10 @@ class MicroBatcher:
         # the worker exits — a submit racing close() either lands before
         # the sentinel or raises.
         with self._lock:
+            if self._fatal is not None:
+                raise RuntimeError(
+                    "MicroBatcher worker died; no submission will ever be "
+                    "dispatched") from self._fatal
             if self._closed:
                 raise RuntimeError("MicroBatcher is closed")
             self._q.put(sub)
@@ -137,6 +155,17 @@ class MicroBatcher:
     # --- worker ---
 
     def _run(self) -> None:
+        # A crash anywhere outside _dispatch's protected engine call used
+        # to exit this thread silently: every pending Submission.result()
+        # then blocked forever and later submits enqueued into a dead
+        # worker.  Abnormal exit now fails the in-flight batch + every
+        # queued future and poisons submit().
+        try:
+            self._run_loop()
+        except BaseException as e:
+            self._abort(e)
+
+    def _run_loop(self) -> None:
         stop = False
         while not stop:
             item = self._q.get()
@@ -155,9 +184,29 @@ class MicroBatcher:
                     stop = True
                     break
                 batch.append(nxt)
+            self._inflight = batch
             self._dispatch(batch)
+            self._inflight = ()
         # FIFO + the submit/close lock guarantee the sentinel is the last
         # item ever enqueued, so reaching it means the queue is drained.
+
+    def _abort(self, exc: BaseException) -> None:
+        """Worker died: strand nothing.  Fail the batch being dispatched
+        and everything still queued, and make later submits raise."""
+        with self._lock:
+            self._fatal = exc
+            self._closed = True
+        for s in self._inflight:
+            if not s._future.done():
+                s._future.set_exception(exc)
+        self._inflight = ()
+        while True:
+            try:
+                item = self._q.get_nowait()
+            except queue.Empty:
+                break
+            if item is not None and not item._future.done():
+                item._future.set_exception(exc)
 
     def _dispatch(self, batch: list[Submission]) -> None:
         try:

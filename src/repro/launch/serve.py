@@ -247,9 +247,62 @@ def serve_streaming(num_streams: int = 6, rounds: int = 5, size: int = 150,
     return records, summary
 
 
+def serve_tenants(num_tenants: int = 16, rounds: int = 3,
+                  size: int = 120, avg_degree: float = 5.0,
+                  delta_edges: int = 4, backend: str = "auto",
+                  max_batch: int = 8, batch_timeout_ms: float = 2.0,
+                  queue_capacity: int = 32, warm_budget: str = "256KB",
+                  client_threads: int = 8, seed: int = 0,
+                  snapshot_dir: str | None = None):
+    """Drive K concurrent tenants through the multi-tenant service tier.
+
+    Each tenant is one evolving graph served by a per-tenant
+    :class:`~repro.launch.stream.StreamSession`, all multiplexed over
+    **one** shared Engine through **one** shared MicroBatcher behind the
+    bounded admission queue (:mod:`repro.serve`).  Traffic is the mixed
+    cold/warm/delta trace from :mod:`repro.serve.loadgen`: cold
+    registers, warm delta updates with frontier seeds, periodic cold
+    refreshes — clients back off and retry on explicit ``Rejected``
+    backpressure.  Prints the SLO surface (aggregate edges/s, p50/p99
+    latency, queue depth, rejection rate, warm-ledger peak) and, with
+    ``snapshot_dir``, writes the tenants' warm state as an atomic
+    checkpoint a restarted service can resume warm from.
+    """
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.engine import Engine, EngineConfig
+    from repro.serve import ServiceConfig, TenantService
+    from repro.serve.loadgen import LoadConfig, build_traces, run_load
+
+    cfg = LoadConfig(tenants=num_tenants, rounds=rounds, size=size,
+                     avg_degree=avg_degree, delta_edges=delta_edges,
+                     client_threads=client_threads, seed=seed)
+    eng = Engine(EngineConfig(backend=backend))
+    service = TenantService(eng, ServiceConfig(
+        queue_capacity=queue_capacity, warm_budget=warm_budget,
+        max_batch=max_batch, batch_timeout_ms=batch_timeout_ms))
+    records, summary = run_load(service, build_traces(cfg), cfg)
+    if snapshot_dir is not None:
+        manifest = service.snapshot(CheckpointManager(snapshot_dir))
+        print(f"[serve-tenants] snapshot step {manifest['step']}: "
+              f"{len(manifest['tenants'])} tenants -> {snapshot_dir}",
+              flush=True)
+    service.close()
+    print(f"[serve-tenants] {summary['tenants']} tenants x "
+          f"{summary['rounds']} rounds: {summary['completed']} requests "
+          f"({summary['stranded']} stranded, {summary['rejections']} "
+          f"rejected, rate {summary['rejection_rate']:.1%}), latency p50 "
+          f"{summary['p50_ms']:.0f}ms p99 {summary['p99_ms']:.0f}ms, queue "
+          f"peak {summary['queue_depth_peak']}, warm bytes peak "
+          f"{summary['warm_bytes_peak']} <= budget "
+          f"{summary['warm_budget']}, {summary['edges_per_s']:.0f} edges/s "
+          f"aggregate", flush=True)
+    return records, summary
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=("lm", "communities", "streaming"),
+    ap.add_argument("--mode",
+                    choices=("lm", "communities", "streaming", "tenants"),
                     default="lm")
     ap.add_argument("--arch")
     ap.add_argument("--batch", type=int, default=4)
@@ -268,11 +321,28 @@ def main() -> None:
     ap.add_argument("--streams", type=int, default=6,
                     help="streaming mode: number of evolving graphs")
     ap.add_argument("--rounds", type=int, default=5,
-                    help="streaming mode: delta rounds per stream")
+                    help="streaming/tenants mode: delta rounds per stream")
     ap.add_argument("--delta-edges", type=int, default=4,
-                    help="streaming mode: edges churned per delta")
+                    help="streaming/tenants mode: edges churned per delta")
+    ap.add_argument("--tenants", type=int, default=16,
+                    help="tenants mode: number of concurrent tenants")
+    ap.add_argument("--queue-capacity", type=int, default=32,
+                    help="tenants mode: global admission bound")
+    ap.add_argument("--warm-budget", default="256KB",
+                    help="tenants mode: global warm-labels byte budget")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="tenants mode: write a warm-state checkpoint "
+                         "after the load (restore resumes warm)")
     a = ap.parse_args()
-    if a.mode == "communities":
+    if a.mode == "tenants":
+        serve_tenants(num_tenants=a.tenants, rounds=a.rounds,
+                      delta_edges=a.delta_edges, backend=a.backend,
+                      max_batch=a.max_batch,
+                      batch_timeout_ms=a.batch_timeout_ms,
+                      queue_capacity=a.queue_capacity,
+                      warm_budget=a.warm_budget,
+                      snapshot_dir=a.snapshot_dir)
+    elif a.mode == "communities":
         serve_communities(num_requests=a.requests, backend=a.backend,
                           max_batch=a.max_batch,
                           batch_timeout_ms=a.batch_timeout_ms,

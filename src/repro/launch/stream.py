@@ -44,6 +44,40 @@ class StreamState:
     version: int = 0                  # number of deltas applied so far
 
 
+@dataclasses.dataclass
+class PreparedUpdate:
+    """One stream's post-delta graph + resolved warm state, not yet
+    dispatched or committed.  ``StreamSession.prepare_update`` builds it;
+    ``commit_update`` applies it after the fit succeeds.  The serving
+    tier drives these two halves from different threads (prepare on the
+    dispatcher, commit from a result callback); ``update_many`` runs
+    them back to back."""
+    graph: Graph
+    init_labels: np.ndarray | None
+    init_active: np.ndarray | None
+    frontier_frac: float | None  # None when no frontier seed was built
+
+
+class StreamUpdateError(RuntimeError):
+    """Some members of an ``update_many`` batch failed.
+
+    Successful members are fully committed (graph, labels, counters)
+    before this raises; failed streams keep their pre-delta state so a
+    retry re-applies the same delta.  ``results`` holds the committed
+    ``{stream_id: DetectionResult}``, ``errors`` the per-stream
+    exceptions — one member's failure never poisons its siblings.
+    """
+
+    def __init__(self, errors: dict, results: dict):
+        self.errors = errors
+        self.results = results
+        detail = "; ".join(f"{sid!r}: {type(e).__name__}: {e}"
+                           for sid, e in errors.items())
+        super().__init__(
+            f"{len(errors)} of {len(errors) + len(results)} stream "
+            f"updates failed ({detail}); {len(results)} committed")
+
+
 class StreamSession:
     """Batched warm re-detection over named evolving-graph streams.
 
@@ -120,54 +154,88 @@ class StreamSession:
         per member from each stream's previous labels, with the delta's
         affected frontier seeded unprocessed.  Returns ``{stream_id:
         DetectionResult}``.
+
+        Settlement is per-stream: a member whose fit failed raises
+        :class:`StreamUpdateError` *after* every successful sibling has
+        been committed (post-delta graph, labels, counters).  Failed
+        streams keep their pre-delta state — nothing is half-applied,
+        and session accounting only ever counts fits that landed.
         """
-        graphs, warm_state = {}, {}
-        churn_threshold = self.engine.config.patch_churn_threshold
-        for sid, delta in deltas.items():
-            st = self.streams[sid]
-            # Tiny deltas (the streaming norm) take the splice patch —
-            # bit-identical to the rebuild, without the O(m log m) sort;
-            # heavy churn falls back to the vectorized rebuild, which
-            # wins once most rows need touching anyway.  The crossover
-            # is EngineConfig.patch_churn_threshold, defaulted from the
-            # measured sweep in bench_streaming_deltas.py.
-            small = len(delta.touched_vertices()) \
-                < churn_threshold * max(st.graph.n, 1)
-            post = (apply_delta_patch if small else apply_delta)(
-                st.graph, delta)
-            init = act = None
-            if self.warm and st.labels is not None:
-                init = st.labels
-                if post.n > len(init):  # grown: new vertices start singleton
-                    init = np.concatenate([
-                        init, np.arange(len(init), post.n, dtype=np.int32)])
-                if self.frontier:
-                    act = affected_frontier(delta, post.n)
-                    self._frontier_fracs.append(
-                        float(act.sum()) / max(post.n, 1))
-            graphs[sid] = post
-            warm_state[sid] = (init, act)
+        preps = {sid: self.prepare_update(sid, delta)
+                 for sid, delta in deltas.items()}
         # Submit as one burst (after all host-side delta work) so the
         # updates coalesce into as few dispatches as possible.
-        subs = {sid: self.batcher.submit(graphs[sid], init_labels=init,
-                                         init_active=act)
-                for sid, (init, act) in warm_state.items()}
-        results = self._settle(graphs, subs)
-        self.updates += len(results)
-        self.warm_updates += sum(r.warm_started for r in results.values())
-        return results
+        subs = {sid: self.batcher.submit(p.graph, init_labels=p.init_labels,
+                                         init_active=p.init_active)
+                for sid, p in preps.items()}
+        return self._settle(preps, subs)
 
-    def _settle(self, graphs: dict, subs: dict[object, Submission]) -> dict:
-        results = {sid: sub.result() for sid, sub in subs.items()}
-        for sid, res in results.items():
-            st = self.streams.get(sid)
-            if st is None:
-                self.streams[sid] = StreamState(graph=graphs[sid],
-                                                labels=res.labels)
-            else:
-                st.graph = graphs[sid]
-                st.labels = res.labels
-                st.version += 1
+    def prepare_update(self, sid, delta: GraphDelta) -> PreparedUpdate:
+        """Build one stream's post-delta graph + warm state without
+        touching session state (commit happens after the fit succeeds)."""
+        st = self.streams[sid]
+        # Tiny deltas (the streaming norm) take the splice patch —
+        # bit-identical to the rebuild, without the O(m log m) sort;
+        # heavy churn falls back to the vectorized rebuild, which
+        # wins once most rows need touching anyway.  The crossover
+        # is EngineConfig.patch_churn_threshold, defaulted from the
+        # measured sweep in bench_streaming_deltas.py.
+        churn_threshold = self.engine.config.patch_churn_threshold
+        small = len(delta.touched_vertices()) \
+            < churn_threshold * max(st.graph.n, 1)
+        post = (apply_delta_patch if small else apply_delta)(st.graph, delta)
+        init = act = None
+        frac = None
+        if self.warm and st.labels is not None:
+            init = st.labels
+            if post.n > len(init):  # grown: new vertices start singleton
+                init = np.concatenate([
+                    init, np.arange(len(init), post.n, dtype=np.int32)])
+            if self.frontier:
+                act = affected_frontier(delta, post.n)
+                frac = float(act.sum()) / max(post.n, 1)
+        return PreparedUpdate(graph=post, init_labels=init, init_active=act,
+                              frontier_frac=frac)
+
+    def commit_update(self, sid, prep: PreparedUpdate, res) -> None:
+        """Commit one successful member: state + counters, atomically
+        per stream.  Accounting happens here — after the fit — so a
+        failed sibling never leaves phantom ``updates`` counts or
+        frontier stats behind."""
+        st = self.streams.get(sid)
+        if st is None:
+            self.streams[sid] = StreamState(graph=prep.graph,
+                                            labels=res.labels)
+        else:
+            st.graph = prep.graph
+            st.labels = res.labels
+            st.version += 1
+        self.updates += 1
+        self.warm_updates += bool(res.warm_started)
+        if prep.frontier_frac is not None:
+            self._frontier_fracs.append(prep.frontier_frac)
+
+    def _settle(self, preps: dict, subs: dict[object, Submission]) -> dict:
+        """Per-stream settlement: commit every success, then surface the
+        failures together.  A raising ``sub.result()`` used to abort this
+        loop mid-way — some streams updated, the rest holding pre-delta
+        graphs with counters unrecorded."""
+        results: dict = {}
+        errors: dict = {}
+        for sid, sub in subs.items():
+            try:
+                res = sub.result()
+            except Exception as e:
+                errors[sid] = e
+                continue
+            prep = preps[sid]
+            if isinstance(prep, PreparedUpdate):
+                self.commit_update(sid, prep, res)
+            else:  # add_many path: initial graph, not a counted update
+                self.streams[sid] = StreamState(graph=prep, labels=res.labels)
+            results[sid] = res
+        if errors:
+            raise StreamUpdateError(errors, results)
         return results
 
     # --- observability ---

@@ -101,6 +101,22 @@ class MemoryLedger:
             self.peak = max(self.peak, self.current)
         return nbytes
 
+    def try_acquire(self, nbytes: int, what: str = "") -> bool:
+        """Non-raising :meth:`acquire`: False when it would not fit.
+
+        For callers with their own eviction policy (the serving tier's
+        cross-tenant warm-cache spill) that loop "evict LRU, retry"
+        instead of treating over-budget as fatal.
+        """
+        nbytes = int(nbytes)
+        with self._lock:
+            if (self.budget is not None
+                    and self.current + nbytes > self.budget):
+                return False
+            self.current += nbytes
+            self.peak = max(self.peak, self.current)
+        return True
+
     def release(self, nbytes: int) -> None:
         with self._lock:
             self.current -= int(nbytes)

@@ -1,0 +1,15 @@
+"""Multi-tenant serving tier: admission, fairness, warm-state budget,
+snapshot/restore — N concurrent tenants over one shared Engine.
+
+    from repro.serve import TenantService, ServiceConfig, Rejected
+"""
+from repro.serve.admission import AdmissionQueue, Rejected
+from repro.serve.service import ServiceConfig, TenantService, TenantTicket
+
+__all__ = [
+    "AdmissionQueue",
+    "Rejected",
+    "ServiceConfig",
+    "TenantService",
+    "TenantTicket",
+]

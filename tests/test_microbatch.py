@@ -56,6 +56,99 @@ def test_worker_exception_propagates_to_waiters():
         sub.result(timeout=30)
 
 
+def test_worker_crash_outside_dispatch_strands_nothing(monkeypatch):
+    """Regression: a crash in the queue loop itself (outside _dispatch's
+    protected engine call) used to exit the worker silently — every
+    pending Submission.result() blocked forever and later submits
+    enqueued into a dead worker.  Now the in-flight batch and all queued
+    futures get the exception, and subsequent submit() raises."""
+    mb = MicroBatcher(fresh_engine(), max_batch=2, batch_timeout_ms=0,
+                      autostart=False)
+    monkeypatch.setattr(MicroBatcher, "_dispatch",
+                        lambda self, batch: (_ for _ in ()).throw(
+                            RuntimeError("loop crash")))
+    subs = [mb.submit(erdos_renyi(20, 3.0, seed=i)) for i in range(5)]
+    mb.start()
+    mb._thread.join(timeout=60)
+    assert not mb._thread.is_alive()
+    for s in subs:   # in-flight batch members AND still-queued submissions
+        with pytest.raises(RuntimeError, match="loop crash"):
+            s.result(timeout=30)
+    with pytest.raises(RuntimeError, match="worker died"):
+        mb.submit(erdos_renyi(20, 3.0, seed=9))
+    mb.close()   # still clean: idempotent, no hang
+
+
+def test_done_callback_fires_on_result_and_exception():
+    """add_done_callback is the serving tier's async-settle hook."""
+    import threading
+    seen, ev = [], threading.Event()
+    eng = fresh_engine(backend="segment")
+    with MicroBatcher(eng, max_batch=2, batch_timeout_ms=5) as mb:
+        sub = mb.submit(erdos_renyi(30, 3.0, seed=0))
+        sub.add_done_callback(lambda s: (seen.append(s), ev.set()))
+        assert ev.wait(timeout=60)
+    assert seen == [sub] and sub.done() and sub.exception() is None
+
+    class Boom:
+        def fit_many(self, graphs, backend=None):
+            raise ValueError("nope")
+
+    ev2 = threading.Event()
+    got: list = []
+    with MicroBatcher(Boom(), max_batch=2) as mb:
+        sub = mb.submit(erdos_renyi(20, 3.0, seed=1))
+        sub.add_done_callback(lambda s: (got.append(s.exception()),
+                                         ev2.set()))
+        assert ev2.wait(timeout=60)
+    assert isinstance(got[0], ValueError)
+
+
+def test_mixed_warm_cold_batch_with_frontier_only_members():
+    """Batches mixing members that carry init_active but no init_labels —
+    the warm-cache auto path resolves their labels (or drops the frontier
+    on a miss) — stay bit-identical to solo fits, member by member."""
+    from repro.core import GraphDelta, affected_frontier, apply_delta
+
+    graphs = [erdos_renyi(n, 4.0, seed=i)
+              for i, n in enumerate((70, 85, 60))]
+    eng = fresh_engine(backend="segment", warm_start="auto")
+    oracle = fresh_engine(backend="segment", warm_start="auto")
+    # populate both warm caches with the base structures
+    for g in graphs:
+        eng.fit(g)
+        oracle.fit(g)
+
+    deltas = [GraphDelta.make(insert=[[0, i + 2], [1, i + 3]])
+              for i in range(3)]
+    posts = [apply_delta(g, d) for g, d in zip(graphs, deltas)]
+    fronts = [affected_frontier(d, g.n) for d, g in zip(deltas, posts)]
+    # make posts[1]'s structure warm-cached so its frontier-only member
+    # resolves labels from the cache inside the batch
+    eng.fit(posts[1])
+    oracle.fit(posts[1])
+
+    with MicroBatcher(eng, max_batch=4, batch_timeout_ms=50,
+                      autostart=False) as mb:
+        subs = [
+            mb.submit(graphs[0]),                       # cache-warm, no kwargs
+            mb.submit(posts[1], init_active=fronts[1]),  # frontier + cache hit
+            mb.submit(posts[2], init_active=fronts[2]),  # frontier + cache MISS
+        ]
+        mb.start()
+        results = [s.result(timeout=300) for s in subs]
+    assert [s.batch_size for s in subs] == [3, 3, 3]
+
+    solo = [oracle.fit(graphs[0]),
+            oracle.fit(posts[1], init_active=fronts[1]),
+            oracle.fit(posts[2], init_active=fronts[2])]
+    for i, (got, want) in enumerate(zip(results, solo)):
+        assert np.array_equal(got.labels, want.labels), i
+        assert got.lpa_iterations == want.lpa_iterations, i
+    assert results[0].warm_started and results[1].warm_started
+    assert not results[2].warm_started   # miss -> frontier dropped, cold
+
+
 def test_context_manager_drains_on_exit():
     eng = fresh_engine(backend="segment")
     with MicroBatcher(eng, max_batch=8, batch_timeout_ms=5) as mb:

@@ -1,0 +1,308 @@
+"""Multi-tenant serving tier: admission fairness + backpressure, the
+shared warm-state budget, snapshot/restore, and the K-tenant acceptance
+run — N concurrent tenants over one Engine with per-member results
+bit-identical to solo warm fits and zero stranded requests."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import affected_frontier, apply_delta
+from repro.engine import CompileCache, Engine, EngineConfig
+from repro.graphgen import evolving_sequence
+from repro.serve import AdmissionQueue, Rejected, ServiceConfig, TenantService
+from repro.serve.loadgen import (
+    LoadConfig,
+    build_traces,
+    replay_parity,
+    run_load,
+)
+
+
+def fresh_engine(**kw):
+    return Engine(EngineConfig(backend="segment", **kw),
+                  cache=CompileCache())
+
+
+def make_service(engine=None, **cfg_kw):
+    return TenantService(engine if engine is not None else fresh_engine(),
+                         ServiceConfig(**cfg_kw))
+
+
+# --- admission queue ---
+
+def test_admission_round_robin_with_one_in_flight_per_tenant():
+    """A tenant flooding its FIFO occupies one slot per rotation; a held
+    tenant's next request waits for release."""
+    q = AdmissionQueue(capacity=16)
+    for i in range(3):
+        q.offer("a", f"a{i}")
+    q.offer("b", "b0")
+    q.offer("c", "c0")
+
+    assert q.take(timeout=1) == ("a", "a0")
+    # "a" is now held: its 2 queued requests are skipped in rotation
+    assert q.take(timeout=1) == ("b", "b0")
+    assert q.take(timeout=1) == ("c", "c0")
+    assert q.take(timeout=0.05) is None          # everyone eligible is held
+    q.release("b")
+    assert q.take(timeout=0.05) is None          # b has nothing queued
+    q.release("a")
+    assert q.take(timeout=1) == ("a", "a1")
+    q.release("a")
+    assert q.take(timeout=1) == ("a", "a2")
+    stats = q.stats()
+    assert stats["served_per_tenant"] == {"a": 3, "b": 1, "c": 1}
+    assert stats["depth"] == 0 and stats["accepted"] == 5
+
+
+def test_admission_backpressure_rejects_and_recovers():
+    q = AdmissionQueue(capacity=2, retry_after_s=0.01)
+    q.offer("a", 1)
+    q.offer("b", 2)
+    with pytest.raises(Rejected) as ei:
+        q.offer("c", 3)
+    rej = ei.value
+    assert rej.depth == 2 and rej.capacity == 2
+    assert rej.retry_after_s == pytest.approx(0.01)
+    # capacity bounds *queued* items: taking one frees a slot even while
+    # the taken tenant is still held
+    assert q.take(timeout=1) == ("a", 1)
+    q.offer("c", 3)
+    stats = q.stats()
+    assert stats["accepted"] == 3 and stats["rejected"] == 1
+    assert stats["peak_depth"] == 2
+
+
+def test_admission_close_drains_then_stops():
+    q = AdmissionQueue(capacity=4)
+    q.offer("a", 1)
+    q.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        q.offer("a", 2)
+    assert q.take(timeout=1) == ("a", 1)         # drain mode: still takeable
+    assert q.take(timeout=1) is None             # closed + drained
+    assert q.drained()
+
+
+def test_admission_take_unblocks_on_concurrent_offer():
+    q = AdmissionQueue(capacity=4)
+    got = []
+    t = threading.Thread(target=lambda: got.append(q.take(timeout=10)))
+    t.start()
+    q.offer("a", "late")
+    t.join(timeout=10)
+    assert got == [("a", "late")]
+
+
+# --- tenant service ---
+
+def _trace(n, rounds, seed):
+    return evolving_sequence(n, 4.0, rounds, 3, seed=seed)
+
+
+def test_service_register_update_refresh_parity():
+    """The full request surface against a solo oracle: register is a
+    cold fit, update a warm frontier-seeded re-detection, refresh a cold
+    re-fit of the current graph — all bit-identical to solo calls."""
+    base, deltas = _trace(80, 2, seed=3)
+    oracle = fresh_engine()
+    with make_service(max_batch=4, queue_capacity=8) as svc:
+        res0 = svc.register("t", base).result(timeout=300)
+        ref0 = oracle.fit(base)
+        assert np.array_equal(res0.labels, ref0.labels)
+        assert not res0.warm_started
+
+        graph, labels = base, ref0.labels
+        for d in deltas:
+            res = svc.update("t", d).result(timeout=300)
+            graph = apply_delta(graph, d)
+            ref = oracle.fit(graph, init_labels=labels,
+                             init_active=affected_frontier(d, graph.n))
+            labels = ref.labels
+            assert res.warm_started
+            assert np.array_equal(res.labels, ref.labels)
+            assert res.lpa_iterations == ref.lpa_iterations
+        assert np.array_equal(svc.labels("t"), labels)
+
+        resf = svc.refresh("t").result(timeout=300)
+        assert not resf.warm_started
+        assert np.array_equal(resf.labels, oracle.fit(graph).labels)
+
+        with pytest.raises(ValueError, match="already registered"):
+            svc.register("t", base)
+        with pytest.raises(KeyError):
+            svc.update("nobody", deltas[0])
+        stats = svc.stats()
+        assert stats["completed"] == 4 and stats["failed"] == 0
+        assert stats["outstanding"] == 0
+
+
+def test_service_rejected_register_can_be_retried():
+    """A register that never got admitted must not leave a phantom
+    session behind (the retry would hit 'already registered')."""
+    base, _ = _trace(50, 1, seed=9)
+    svc = make_service(queue_capacity=2)
+    svc.admission.close()                 # force the admission failure
+    with pytest.raises(RuntimeError):
+        svc.register("t", base)
+    assert svc.tenants() == []            # rolled back, retry possible
+    svc.close()
+
+
+def test_service_warm_budget_spills_lru_tenants():
+    """Commits past the shared budget spill the least-recently-served
+    tenants' warm labels; spilled tenants run cold-but-correct next
+    update; the ledger never exceeds the budget."""
+    traces = {t: _trace(100, 1, seed=i) for i, t in
+              enumerate(("t0", "t1", "t2"))}
+    oracle = fresh_engine()
+    # labels are int32: 400 B/tenant.  1000 B holds exactly 2 tenants.
+    with make_service(warm_budget=1000, max_batch=1,
+                      queue_capacity=8) as svc:
+        for t, (base, _) in traces.items():
+            svc.register(t, base).result(timeout=300)
+        stats = svc.stats()
+        assert stats["spills"] == 1
+        assert stats["warm_cached_tenants"] == 2
+        assert stats["warm_bytes"]["current"] <= 1000
+        assert stats["warm_bytes"]["peak"] <= 1000
+        assert svc.labels("t0") is None          # LRU victim spilled
+        assert svc.labels("t1") is not None
+        assert svc.labels("t2") is not None
+
+        # spilled tenant's next update: cold, still correct
+        base0, deltas0 = traces["t0"]
+        res = svc.update("t0", deltas0[0]).result(timeout=300)
+        post0 = apply_delta(base0, deltas0[0])
+        assert not res.warm_started
+        assert np.array_equal(res.labels, oracle.fit(post0).labels)
+        # ... and its commit spilled the new LRU victim in turn
+        assert svc.labels("t1") is None
+        assert svc.stats()["warm_bytes"]["peak"] <= 1000
+
+        # warm tenant stays warm
+        base2, deltas2 = traces["t2"]
+        res2 = svc.update("t2", deltas2[0]).result(timeout=300)
+        assert res2.warm_started
+
+    # a budget below a single tenant's labels: nothing cacheable at all
+    base, _ = traces["t0"]
+    with make_service(warm_budget=100, queue_capacity=4) as tiny:
+        tiny.register("t", base).result(timeout=300)
+        stats = tiny.stats()
+        assert stats["uncached"] == 1 and stats["warm_cached_tenants"] == 0
+        assert tiny.labels("t") is None
+
+
+def test_service_snapshot_restore_resumes_warm(tmp_path):
+    """Warm labels survive a restart: a restored service re-seeds
+    fingerprint-verified tenants without any fit, and their next update
+    is the exact warm re-detection the original service would have run —
+    strictly cheaper than the cold re-detection storm it replaces."""
+    from repro.checkpoint import CheckpointManager
+
+    tenants = ("alpha", "beta", "gamma")
+    traces = {t: _trace(90 + 10 * i, 2, seed=20 + i)
+              for i, t in enumerate(tenants)}
+    mgr = CheckpointManager(tmp_path / "ckpt")
+
+    with make_service(queue_capacity=8) as svc:
+        for t, (base, _) in traces.items():
+            svc.register(t, base).result(timeout=300)
+        for t, (_, deltas) in traces.items():
+            svc.update(t, deltas[0]).result(timeout=300)
+        saved = svc.snapshot(mgr)
+        pre = {t: (svc.graph(t), np.array(svc.labels(t))) for t in tenants}
+    assert set(saved["tenants"]) == set(tenants)
+    assert all(e["warm"] and e["version"] == 1
+               for e in saved["tenants"].values())
+
+    # "restart": fresh engine, fresh service, graphs re-supplied by
+    # clients; one tenant's graph has drifted -> fingerprint mismatch
+    drifted = apply_delta(pre["gamma"][0], traces["gamma"][1][1])
+    graphs = {"alpha": pre["alpha"][0], "beta": pre["beta"][0],
+              "gamma": drifted, "delta": pre["alpha"][0]}
+    with make_service(queue_capacity=8) as svc2:
+        report = svc2.restore(mgr, graphs)
+        assert sorted(report["restored"]) == ["alpha", "beta"]
+        assert report["mismatched"] == ["gamma"]
+        assert report["unknown"] == ["delta"]
+        assert svc2.stats()["restored"] == 2
+
+        warm_iters = cold_iters = 0
+        for t in ("alpha", "beta"):
+            graph, labels = pre[t]
+            assert np.array_equal(svc2.labels(t), labels)   # bit-identical
+            d = traces[t][1][1]
+            res = svc2.update(t, d).result(timeout=300)
+            post = apply_delta(graph, d)
+            # == the no-restart continuation, member for member
+            ref = fresh_engine().fit(
+                post, init_labels=_extend(labels, post.n),
+                init_active=affected_frontier(d, post.n))
+            assert res.warm_started
+            assert np.array_equal(res.labels, ref.labels)
+            assert res.lpa_iterations == ref.lpa_iterations
+            warm_iters += res.lpa_iterations
+            cold_iters += fresh_engine().fit(post).lpa_iterations
+        # the point of restoring: warm resumption beats re-detection
+        assert warm_iters < cold_iters
+
+
+def _extend(labels, n):
+    if n > len(labels):
+        return np.concatenate(
+            [labels, np.arange(len(labels), n, dtype=np.int32)])
+    return labels
+
+
+# --- the K-tenant acceptance run ---
+
+def test_k32_tenants_mixed_load_zero_stranded_and_bit_parity():
+    """32 concurrent tenants, mixed cold/warm/delta traffic from 8
+    client threads through one shared engine: every admitted request
+    resolves (zero stranded, zero give-ups), parity tenants' final
+    labels are bit-identical to a solo warm replay, and warm bytes never
+    exceed the configured budget."""
+    cfg = LoadConfig(tenants=32, rounds=3, size=96, delta_edges=3,
+                     refresh_every=3, parity_tenants=4, client_threads=8,
+                     seed=7)
+    traces = build_traces(cfg)
+    engine_config = EngineConfig(backend="segment")
+    svc = TenantService(Engine(engine_config, cache=CompileCache()),
+                        ServiceConfig(queue_capacity=16, warm_budget="64KB",
+                                      max_batch=8, retry_after_s=0.002))
+    try:
+        records, summary = run_load(svc, traces, cfg)
+        final = {t: (None if svc.labels(t) is None
+                     else np.array(svc.labels(t)))
+                 for t in svc.tenants()}
+        stats = svc.stats()
+    finally:
+        svc.close()
+
+    assert summary["requests"] == 32 * (1 + 3)
+    assert summary["stranded"] == 0          # every admitted request resolved
+    assert summary["outstanding"] == 0
+    assert summary["give_ups"] == 0 and summary["errors"] == 0
+    assert summary["failed"] == 0
+    assert summary["completed"] == summary["requests"]
+    assert summary["queue_depth_peak"] <= 16
+    # 32 tenants x <=400 B of int32 labels fit 64KB: never spill, and the
+    # ledger's peak proves the budget held at every instant
+    assert summary["spills"] == 0
+    assert summary["warm_bytes_peak"] <= 64_000
+    assert stats["admission"]["held"] == 0
+    # rotation actually served everyone
+    assert len(stats["admission"]["served_per_tenant"]) == 32
+    assert summary["p99_ms"] >= summary["p50_ms"] > 0
+    assert summary["edges_per_s"] > 0
+
+    # bit-parity: multiplexing 32 tenants over one engine changed
+    # latency, not results
+    parity = {t: r for t, r in final.items()
+              if t in list(traces)[: cfg.parity_tenants]}
+    solo = replay_parity(traces, parity, engine_config)
+    for t, labels in solo.items():
+        assert np.array_equal(parity[t], labels), t

@@ -169,6 +169,42 @@ def test_warm_cache_eviction_is_bounded():
         EngineConfig(warm_cache_size=0)
 
 
+def test_engine_shared_across_threads_is_safe():
+    """Regression: one Engine is shared by every session of the serving
+    tier, but the warm-start LRU was an unlocked OrderedDict —
+    ``move_to_end``/``popitem`` racing ``get``/``put`` from the batcher
+    worker, direct ``fit`` callers, and ``stats()`` pollers corrupted it
+    (RuntimeError: dict mutated during iteration / KeyError).  Hammer all
+    three entry points from a thread pool with eviction pressure on."""
+    from concurrent.futures import ThreadPoolExecutor
+
+    eng = fresh_engine(warm_start="auto", warm_cache_size=3,
+                       backend="segment")
+    graphs = [erdos_renyi(60, 4.0, seed=i) for i in range(6)]
+    for g in graphs:          # pay compiles up front, seed the cache
+        eng.fit(g)
+
+    def worker(k: int) -> None:
+        rng = np.random.default_rng(k)
+        for _ in range(10):
+            op = int(rng.integers(3))
+            g = graphs[int(rng.integers(len(graphs)))]
+            if op == 0:
+                res = eng.fit(g)
+                assert len(res.labels) == g.n
+            elif op == 1:
+                h = graphs[int(rng.integers(len(graphs)))]
+                for gr, r in zip((g, h), eng.fit_many([g, h])):
+                    assert len(r.labels) == gr.n
+            else:
+                eng.stats()
+
+    with ThreadPoolExecutor(max_workers=8) as pool:
+        for f in [pool.submit(worker, k) for k in range(8)]:
+            f.result(timeout=600)   # raises on any worker exception
+    assert eng.stats()["warm_entries"] <= 3
+
+
 # --- StreamSession ---
 
 def test_stream_session_update_many_matches_solo_warm_fits():
@@ -253,3 +289,78 @@ def test_stream_session_churn_threshold_routes_patch_vs_rebuild(monkeypatch):
         sess.add("g", base)
         sess.update("g", tiny)
         assert calls == ["rebuild"]
+
+
+class _FlakyEngine:
+    """Engine wrapper that fails any dispatch containing a graph with
+    ``poison_n`` vertices while armed; passes everything else through."""
+
+    def __init__(self, inner, poison_n: int):
+        self._inner = inner
+        self.config = inner.config
+        self.poison_n = poison_n
+        self.armed = True
+
+    def fit_many(self, graphs, backend=None, **kw):
+        if self.armed and any(g.n == self.poison_n for g in graphs):
+            raise RuntimeError("transient fit failure")
+        return self._inner.fit_many(graphs, backend=backend, **kw)
+
+
+def test_update_many_partial_failure_commits_successes_only():
+    """Regression: a member whose fit raised used to abort settlement
+    mid-loop — earlier streams committed, later successful siblings
+    dropped on the floor, and ``updates``/frontier counters recorded for
+    streams whose state never advanced.  Now every success commits, the
+    failed stream keeps its pre-delta state (a retry re-applies the same
+    delta), and the batch raises StreamUpdateError carrying both maps."""
+    from repro.core.graph import graph_fingerprint
+    from repro.launch.stream import StreamUpdateError
+
+    (base_a, deltas_a), (base_b, deltas_b) = make_stream_mix(
+        sizes=(60, 80), rounds=1)
+    flaky = _FlakyEngine(fresh_engine(), poison_n=base_b.n)
+    oracle = fresh_engine()
+
+    # max_batch=1: each stream dispatches alone, so only "b" fails
+    with StreamSession(flaky, max_batch=1) as sess:
+        flaky.armed = False
+        sess.add_many({"a": base_a, "b": base_b})
+        flaky.armed = True
+
+        with pytest.raises(StreamUpdateError) as ei:
+            sess.update_many({"a": deltas_a[0], "b": deltas_b[0]})
+        err = ei.value
+        assert set(err.errors) == {"b"}
+        assert isinstance(err.errors["b"], RuntimeError)
+        assert set(err.results) == {"a"}
+        assert "1 of 2" in str(err) and "1 committed" in str(err)
+
+        # "a" fully committed: post-delta graph + labels match the oracle
+        post_a = apply_delta(base_a, deltas_a[0])
+        ref_a = oracle.fit(post_a,
+                           init_labels=oracle.fit(base_a).labels,
+                           init_active=affected_frontier(deltas_a[0],
+                                                         post_a.n))
+        assert np.array_equal(err.results["a"].labels, ref_a.labels)
+        assert np.array_equal(sess.labels("a"), ref_a.labels)
+        assert sess.streams["a"].version == 1
+
+        # "b" untouched: pre-delta structure, accounting never recorded
+        assert graph_fingerprint(sess.graph("b")) == \
+            graph_fingerprint(base_b)
+        assert sess.streams["b"].version == 0
+        stats = sess.stats()
+        assert stats["updates"] == 1 and stats["warm_updates"] == 1
+
+        # retrying the same delta after the fault clears just works
+        flaky.armed = False
+        res_b = sess.update("b", deltas_b[0])
+        post_b = apply_delta(base_b, deltas_b[0])
+        ref_b = oracle.fit(post_b,
+                           init_labels=oracle.fit(base_b).labels,
+                           init_active=affected_frontier(deltas_b[0],
+                                                         post_b.n))
+        assert np.array_equal(res_b.labels, ref_b.labels)
+        assert sess.streams["b"].version == 1
+        assert sess.stats()["updates"] == 2
