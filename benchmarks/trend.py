@@ -101,6 +101,17 @@ def summarize(name: str, payload) -> str:
                 parts.append(f"restore {rest.get('warm_iters')}/"
                              f"{rest.get('cold_iters')} warm/cold iters")
             return ", ".join(parts)
+    if name == "BENCH_obs_overhead" and isinstance(payload, list):
+        by = {r.get("mode"): r for r in payload if isinstance(r, dict)}
+        conv, full = by.get("convergence"), by.get("full")
+        if conv:
+            parts = [f"convergence {conv.get('overhead_vs_off_pct'):+.2f}% "
+                     f"vs off (limit "
+                     f"{_fmt(conv.get('overhead_limit_pct', 0))}%)"]
+            if full:
+                parts.append(f"full {full.get('overhead_vs_off_pct'):+.2f}%")
+            parts.append(f"{_fmt(conv.get('edges_per_s', 0))} edges/s")
+            return ", ".join(parts)
     if isinstance(payload, dict):
         return _scalars(payload) or "(no scalar fields)"
     if isinstance(payload, list):

@@ -1,10 +1,11 @@
-"""Rule registry: the five hot-path contract rules, in ID order."""
+"""Rule registry: the six hot-path contract rules, in ID order."""
 from repro.analysis.rules.base import ModuleContext, Rule
 from repro.analysis.rules.r001_host_sync import HostSyncRule
 from repro.analysis.rules.r002_retrace import RetraceRule
 from repro.analysis.rules.r003_protocol import ProtocolRule
 from repro.analysis.rules.r004_pallas import PallasRule
 from repro.analysis.rules.r005_ledger import LedgerRule
+from repro.analysis.rules.r006_telemetry import TelemetryRule
 
 
 def all_rules(vmem_ceiling: int | None = None) -> list[Rule]:
@@ -12,8 +13,9 @@ def all_rules(vmem_ceiling: int | None = None) -> list[Rule]:
     pallas = PallasRule() if vmem_ceiling is None \
         else PallasRule(vmem_ceiling)
     return [HostSyncRule(), RetraceRule(), ProtocolRule(), pallas,
-            LedgerRule()]
+            LedgerRule(), TelemetryRule()]
 
 
 __all__ = ["ModuleContext", "Rule", "HostSyncRule", "RetraceRule",
-           "ProtocolRule", "PallasRule", "LedgerRule", "all_rules"]
+           "ProtocolRule", "PallasRule", "LedgerRule", "TelemetryRule",
+           "all_rules"]

@@ -215,7 +215,7 @@ def warm_state_rows(rows: int, voffset, labels0=None, active0=None,
 def lpa_run_batched(graph: Graph, sizes: jnp.ndarray, graph_id: jnp.ndarray,
                     voffset: jnp.ndarray, labels0: jnp.ndarray,
                     active0: jnp.ndarray, *, tau: float, max_iterations: int,
-                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+                    profile: bool = False):
     """Batched propagation over a packed graph (traced; jit by the caller).
 
     graph: packed + bucket-padded super-graph.
@@ -232,6 +232,12 @@ def lpa_run_batched(graph: Graph, sizes: jnp.ndarray, graph_id: jnp.ndarray,
     per-slot iteration counts — each slot stops exactly where its
     standalone ``lpa_run`` would (same threshold arithmetic as the
     traced-``n_real`` path, same hash seeds, same parity classes).
+
+    ``profile``: additionally carry a ``(2 * max_iterations, 2, k1)``
+    int32 buffer with per-slot [candidate count, changed count] rows per
+    sub-sweep (the batched counterpart of ``lpa_run``'s profile buffer;
+    writes never feed back, so labels/iterations stay bit-identical).
+    Returns ``(labels, iterations, buffer)``.
     """
     n = graph.n
     k1 = sizes.shape[0]
@@ -242,11 +248,12 @@ def lpa_run_batched(graph: Graph, sizes: jnp.ndarray, graph_id: jnp.ndarray,
     done0 = sizes <= thr
 
     def cond(s):
-        _labels, _active, it, done, _iters = s
+        _labels, _active, it, done, _iters = s[:5]
         return jnp.any(~done) & (it < max_iterations)
 
     def body(s):
-        labels, active, it, done, iters = s
+        labels, active, it, done, iters = s[:5]
+        buf = s[5] if profile else None
         running = ~done[graph_id]
         dn = jnp.zeros((k1,), jnp.int32)
         for sweep, klass in enumerate((~parity, parity)):
@@ -254,13 +261,24 @@ def lpa_run_batched(graph: Graph, sizes: jnp.ndarray, graph_id: jnp.ndarray,
             labels, changed, _ = lpa_move(graph, labels, cand,
                                           2 * it + sweep)
             active = (active & ~cand) | neighbors_of(graph, changed)
-            dn = dn + jax.ops.segment_sum(changed.astype(jnp.int32),
-                                          graph_id, num_segments=k1)
+            sc = jax.ops.segment_sum(changed.astype(jnp.int32),
+                                     graph_id, num_segments=k1)
+            dn = dn + sc
+            if profile:
+                buf = buf.at[2 * it + sweep].set(jnp.stack(
+                    [jax.ops.segment_sum(cand.astype(jnp.int32), graph_id,
+                                         num_segments=k1), sc]))
         iters = iters + jnp.where(done, 0, 1)
-        return labels, active, it + jnp.int32(1), done | (dn <= thr), iters
+        nxt = (labels, active, it + jnp.int32(1), done | (dn <= thr), iters)
+        return nxt + (buf,) if profile else nxt
 
     state = (labels0.astype(jnp.int32), active0.astype(bool), jnp.int32(0),
              done0, jnp.zeros((k1,), jnp.int32))
+    if profile:
+        state = state + (jnp.full((2 * max_iterations, 2, k1), -1,
+                                  jnp.int32),)
+        labels, _, _, _, iters, buf = jax.lax.while_loop(cond, body, state)
+        return labels, iters, buf
     labels, _, _, _, iters = jax.lax.while_loop(cond, body, state)
     return labels, iters
 
@@ -268,13 +286,18 @@ def lpa_run_batched(graph: Graph, sizes: jnp.ndarray, graph_id: jnp.ndarray,
 def split_lp_batched(graph: Graph, sizes: jnp.ndarray, graph_id: jnp.ndarray,
                      voffset: jnp.ndarray, comm: jnp.ndarray, *,
                      prune: bool = False, shortcut: bool = False,
-                     ) -> tuple[jnp.ndarray, jnp.ndarray]:
+                     profile_rows: int = 0):
     """Batched Split-Last over a packed graph (local-label coordinates).
 
     Min-label sweeps are idempotent at a member's fixpoint, so converged
     members simply stop changing while the loop drains the rest; per-slot
     iteration counts record the sweep at which each member's standalone
     ``split_lp`` would have exited.
+
+    ``profile_rows`` (0 = off): carry a ``(profile_rows, 2, k1)`` int32
+    per-slot [active count, changed count] buffer per sweep (rows past
+    the cap overwrite the last; writes never feed back).  Returns
+    ``(labels, iterations, buffer)``.
     """
     n = graph.n
     k1 = sizes.shape[0]
@@ -282,19 +305,30 @@ def split_lp_batched(graph: Graph, sizes: jnp.ndarray, graph_id: jnp.ndarray,
     done0 = sizes == 0
 
     def cond(s):
-        _labels, _active, done, _iters = s
+        _labels, _active, done, _iters = s[:4]
         return jnp.any(~done)
 
     def body(s):
-        labels, active, done, iters = s
+        labels, active, done, iters = s[:4]
+        buf = s[4] if profile_rows else None
         new, nxt_active, changed, _ = _min_label_sweep(
             graph, comm, labels, active, prune, shortcut, voffset=voffset)
         dn = jax.ops.segment_sum(changed.astype(jnp.int32), graph_id,
                                  num_segments=k1)
+        if profile_rows:
+            row = jnp.minimum(iters.max(), profile_rows - 1)
+            buf = buf.at[row].set(jnp.stack(
+                [jax.ops.segment_sum(active.astype(jnp.int32), graph_id,
+                                     num_segments=k1), dn]))
         iters = iters + jnp.where(done, 0, 1)
-        return new, nxt_active, done | (dn == 0), iters
+        nxt = (new, nxt_active, done | (dn == 0), iters)
+        return nxt + (buf,) if profile_rows else nxt
 
     state = (local, jnp.ones(n, dtype=bool), done0,
              jnp.zeros((k1,), jnp.int32))
+    if profile_rows:
+        state = state + (jnp.full((profile_rows, 2, k1), -1, jnp.int32),)
+        labels, _, _, iters, buf = jax.lax.while_loop(cond, body, state)
+        return labels, iters, buf
     labels, _, _, iters = jax.lax.while_loop(cond, body, state)
     return labels, iters

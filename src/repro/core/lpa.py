@@ -143,11 +143,12 @@ def lpa_move(graph: Graph, labels: jnp.ndarray, active: jnp.ndarray,
     return new_labels, changed, delta_n
 
 
-@partial(jax.jit, static_argnames=("max_iterations",))
+@partial(jax.jit, static_argnames=("max_iterations", "profile"))
 def lpa_run(graph: Graph, tau: float = 0.05, max_iterations: int = 20,
             init_labels: jnp.ndarray | None = None,
             n_real: jnp.ndarray | None = None,
-            init_active: jnp.ndarray | None = None) -> LpaState:
+            init_active: jnp.ndarray | None = None,
+            profile: bool = False):
     """Run LPA to convergence: ``delta_n / n <= tau`` or iteration cap.
 
     Faithful to Algorithm 3 lines 1-6 (the propagation phase of GSL-LPA).
@@ -165,6 +166,14 @@ def lpa_run(graph: Graph, tau: float = 0.05, max_iterations: int = 20,
     frontier) start unprocessed; everything else sleeps until a neighbor
     actually changes label.  Default: all vertices unprocessed (a full
     cold/warm detection sweep).
+
+    ``profile`` (static): additionally carry a ``(2 * max_iterations, 3)``
+    int32 buffer through the loop, writing per sub-sweep at row
+    ``2*it + sweep``: [candidate count, changed count, sub-sweep index].
+    The buffer never feeds back into labels or the convergence test, so
+    profiled runs are bit-identical; the caller fetches it once after
+    convergence (no host sync in here — R001 discipline).  Returns
+    ``(LpaState, buffer)`` instead of the bare state.
     """
     n = graph.n
     labels0 = (jnp.arange(n, dtype=jnp.int32) if init_labels is None
@@ -183,11 +192,17 @@ def lpa_run(graph: Graph, tau: float = 0.05, max_iterations: int = 20,
     # Static hashed parity classes for the semi-synchronous sub-sweeps.
     parity = (_label_hash(jnp.arange(n, dtype=jnp.int32), jnp.int32(-1))
               & 1).astype(bool)
+    # Profile counts describe the *graph's* frontier, not the padded
+    # executable's: mask bucket-padding vertices out of the candidate tally.
+    real = (jnp.ones(n, dtype=bool) if n_real is None
+            else jnp.arange(n, dtype=jnp.int32) < n_real)
 
-    def cond(s: LpaState):
+    def cond(carry):
+        s = carry[0] if profile else carry
         return (s.delta_n > threshold) & (s.iteration < max_iterations)
 
-    def body(s: LpaState):
+    def body(carry):
+        s, buf = carry if profile else (carry, None)
         labels, active = s.labels, s.active
         dn_total = jnp.int32(0)
         for sweep, klass in enumerate((~parity, parity)):
@@ -197,8 +212,16 @@ def lpa_run(graph: Graph, tau: float = 0.05, max_iterations: int = 20,
             # pruning: processed vertices sleep; neighbors of changed wake up
             active = (active & ~cand) | neighbors_of(graph, changed)
             dn_total = dn_total + dn
-        return LpaState(labels, active, s.iteration + 1, dn_total)
+            if profile:
+                row = 2 * s.iteration + sweep
+                buf = buf.at[row].set(jnp.stack(
+                    [jnp.sum((cand & real).astype(jnp.int32)), dn, row]))
+        nxt = LpaState(labels, active, s.iteration + 1, dn_total)
+        return (nxt, buf) if profile else nxt
 
+    if profile:
+        buf0 = jnp.full((2 * max_iterations, 3), -1, jnp.int32)
+        return jax.lax.while_loop(cond, body, (state, buf0))
     return jax.lax.while_loop(cond, body, state)
 
 

@@ -74,29 +74,51 @@ def _min_label_sweep(graph: Graph, comm: jnp.ndarray, labels: jnp.ndarray,
     return new, nxt_active, changed, delta_n
 
 
-@partial(jax.jit, static_argnames=("prune", "shortcut"))
+@partial(jax.jit, static_argnames=("prune", "shortcut", "profile_rows"))
 def split_lp(graph: Graph, comm: jnp.ndarray, prune: bool = False,
-             shortcut: bool = False) -> SplitState:
+             shortcut: bool = False, profile_rows: int = 0,
+             n_real: jnp.ndarray | None = None):
     """Algorithm 1: SL-LP (``prune=False``) / SL-LPP (``prune=True``).
 
     Returns labels where each vertex carries the minimum vertex id reachable
     within (its community x its connected component) — i.e. one unique label
     per component per community, which is exactly the split partition.
+
+    ``profile_rows`` (static, 0 = off): carry a ``(profile_rows, 3)``
+    int32 buffer writing [active count, changed count, sweep index] per
+    sweep (rows past the cap overwrite the last — the caller flags
+    truncation from the iteration count).  Buffer writes never feed back,
+    so profiled runs stay bit-identical; returns ``(SplitState, buffer)``.
+    ``n_real`` (traced, optional) masks bucket-padding vertices out of
+    the recorded active counts — it does not affect the sweep itself.
     """
     n = graph.n
     comm = comm.astype(jnp.int32)
     state = SplitState(labels=jnp.arange(n, dtype=jnp.int32),
                        active=jnp.ones(n, dtype=bool),
                        iterations=jnp.int32(0), delta_n=jnp.int32(n))
+    real = (jnp.ones(n, dtype=bool) if n_real is None
+            else jnp.arange(n, dtype=jnp.int32) < n_real)
 
-    def cond(s: SplitState):
+    def cond(carry):
+        s = carry[0] if profile_rows else carry
         return s.delta_n > 0
 
-    def body(s: SplitState):
+    def body(carry):
+        s, buf = carry if profile_rows else (carry, None)
         new, nxt_active, _, dn = _min_label_sweep(
             graph, comm, s.labels, s.active, prune, shortcut)
-        return SplitState(new, nxt_active, s.iterations + 1, dn)
+        if profile_rows:
+            row = jnp.minimum(s.iterations, profile_rows - 1)
+            buf = buf.at[row].set(jnp.stack(
+                [jnp.sum((s.active & real).astype(jnp.int32)), dn,
+                 s.iterations]))
+        nxt = SplitState(new, nxt_active, s.iterations + 1, dn)
+        return (nxt, buf) if profile_rows else nxt
 
+    if profile_rows:
+        buf0 = jnp.full((profile_rows, 3), -1, jnp.int32)
+        return jax.lax.while_loop(cond, body, (state, buf0))
     return jax.lax.while_loop(cond, body, state)
 
 

@@ -35,6 +35,7 @@ from repro.engine.bucketing import (
 from repro.engine.cache import TRACE_LOG
 from repro.engine.config import EngineConfig
 from repro.engine.registry import BackendRun, BatchBackendRun, register_backend
+from repro.obs.convergence import batch_profiles, solo_profile
 
 
 @register_backend("segment")
@@ -53,21 +54,26 @@ class SegmentBackend:
         do_split = config.split in ("lp", "lpp")
         prune = config.split == "lpp"
         shortcut = config.shortcut
+        profile = config.profile != "off"
+        split_rows = 2 * max_iterations if config.profile == "full" else 0
 
         def _propagate(graph, n_real, labels0, active0):
             TRACE_LOG.record("segment:propagate")
             return lpa_run(graph, tau=tau, max_iterations=max_iterations,
                            init_labels=labels0,
                            n_real=None if exact else n_real,
-                           init_active=active0)
+                           init_active=active0, profile=profile)
 
-        def _split(graph, labels):
+        def _split(graph, labels, n_real):
             TRACE_LOG.record("segment:split")
-            return split_lp(graph, labels, prune=prune, shortcut=shortcut)
+            return split_lp(graph, labels, prune=prune, shortcut=shortcut,
+                            profile_rows=split_rows, n_real=n_real)
 
         return SimpleNamespace(
             propagate=jax.jit(_propagate),
             split=jax.jit(_split) if do_split else None,
+            profile=profile, split_profile_rows=split_rows,
+            max_iterations=max_iterations,
         )
 
     def prepare(self, graph: Graph, bucket: BucketKey,
@@ -83,23 +89,32 @@ class SegmentBackend:
             else init_labels, n_real, g.n))
         active0 = jnp.asarray(pad_active(init_active, n_real, g.n))
 
+        profiling = getattr(plan, "profile", False)
         t0 = time.perf_counter()
-        state = plan.propagate(g, jnp.int32(n_real), labels0, active0)
+        out = plan.propagate(g, jnp.int32(n_real), labels0, active0)
+        state, pbuf = out if profiling else (out, None)
         labels = jax.block_until_ready(state.labels)
         lpa_iters = int(state.iteration)
         t1 = time.perf_counter()
 
         split_iters = 0
+        sbuf = None
         if plan.split is not None:
-            st = plan.split(g, labels)
+            out = plan.split(g, labels, jnp.int32(n_real))
+            st, sbuf = out if plan.split_profile_rows else (out, None)
             labels = jax.block_until_ready(st.labels)
             split_iters = int(st.iterations)
         t2 = time.perf_counter()
 
+        # profile fetch: one host transfer, after the convergence sync
+        profile = solo_profile(pbuf, lpa_iters, sbuf, split_iters,
+                               plan.split_profile_rows,
+                               int(n_real)) if profiling else None
         return BackendRun(labels=np.asarray(labels),
                           lpa_iterations=lpa_iters,
                           split_iterations=split_iters,
-                          lpa_seconds=t1 - t0, split_seconds=t2 - t1)
+                          lpa_seconds=t1 - t0, split_seconds=t2 - t1,
+                          profile=profile)
 
     # --- batched dispatch (GraphBatch disjoint-union packing) ---
 
@@ -108,21 +123,26 @@ class SegmentBackend:
         do_split = config.split in ("lp", "lpp")
         prune = config.split == "lpp"
         shortcut = config.shortcut
+        profile = config.profile != "off"
+        split_rows = 2 * max_iterations if config.profile == "full" else 0
 
         def _propagate(graph, sizes, graph_id, voffset, labels0, active0):
             TRACE_LOG.record("segment:batch_propagate")
             return lpa_run_batched(graph, sizes, graph_id, voffset,
                                    labels0, active0,
-                                   tau=tau, max_iterations=max_iterations)
+                                   tau=tau, max_iterations=max_iterations,
+                                   profile=profile)
 
         def _split(graph, sizes, graph_id, voffset, comm):
             TRACE_LOG.record("segment:batch_split")
             return split_lp_batched(graph, sizes, graph_id, voffset, comm,
-                                    prune=prune, shortcut=shortcut)
+                                    prune=prune, shortcut=shortcut,
+                                    profile_rows=split_rows)
 
         return SimpleNamespace(
             propagate=jax.jit(_propagate),
             split=jax.jit(_split) if do_split else None,
+            profile=profile, split_profile_rows=split_rows,
         )
 
     def prepare_batch(self, batch, bucket: BatchBucketKey,
@@ -299,24 +319,32 @@ class SegmentBackend:
                   init_active: np.ndarray | None = None) -> BatchBackendRun:
         g, sizes, graph_id, voffset = inputs
         k1 = sizes.shape[0]
+        profiling = getattr(plan, "profile", False)
         labels0, active0 = warm_state_rows(g.n, voffset,
                                            init_labels, init_active)
 
         t0 = time.perf_counter()
-        labels, iters = plan.propagate(g, sizes, graph_id, voffset,
-                                       jnp.asarray(labels0),
-                                       jnp.asarray(active0))
+        out = plan.propagate(g, sizes, graph_id, voffset,
+                             jnp.asarray(labels0), jnp.asarray(active0))
+        (labels, iters, pbuf) = out if profiling else (*out, None)
         labels = jax.block_until_ready(labels)
         t1 = time.perf_counter()
 
         split_iters = np.zeros(k1, np.int32)
+        sbuf = None
         if plan.split is not None:
-            labels, siters = plan.split(g, sizes, graph_id, voffset, labels)
+            out = plan.split(g, sizes, graph_id, voffset, labels)
+            (labels, siters, sbuf) = out if plan.split_profile_rows \
+                else (*out, None)
             labels = jax.block_until_ready(labels)
             split_iters = np.asarray(siters)
         t2 = time.perf_counter()
 
+        profiles = batch_profiles(pbuf, np.asarray(iters), sbuf,
+                                  split_iters, plan.split_profile_rows,
+                                  np.asarray(sizes)) if profiling else None
         return BatchBackendRun(labels=np.asarray(labels),
                                lpa_iterations=np.asarray(iters),
                                split_iterations=split_iters,
-                               lpa_seconds=t1 - t0, split_seconds=t2 - t1)
+                               lpa_seconds=t1 - t0, split_seconds=t2 - t1,
+                               profile=profiles)

@@ -46,6 +46,7 @@ from repro.engine.cache import TRACE_LOG
 from repro.engine.config import EngineConfig
 from repro.engine.registry import BackendRun, BatchBackendRun, register_backend
 from repro.kernels import ops
+from repro.obs.convergence import batch_profiles, solo_profile
 
 
 def tile_rows(bucket_n: int) -> int:
@@ -91,6 +92,8 @@ class TileBackend:
         prune = config.split == "lpp"
         shortcut = config.shortcut
         fuse = ops.resolve_fuse(config.fuse_sweeps, config.kernel_mode)
+        profile = config.profile != "off"
+        split_rows = 2 * max_iterations if config.profile == "full" else 0
 
         ids = np.arange(rows, dtype=np.int32)
 
@@ -103,11 +106,12 @@ class TileBackend:
                          * n_real.astype(jnp.float32)).astype(jnp.int32)
 
             def cond(s):
-                labels, active, it, dn = s
+                _labels, _active, it, dn = s[:4]
                 return (dn > threshold) & (it < max_iterations)
 
             def body(s):
-                labels, active, it, _ = s
+                labels, active, it, _ = s[:4]
+                buf = s[4] if profile else None
                 dn = jnp.int32(0)
                 for sweep in range(2):  # semi-synchronous parity sub-sweeps
                     klass = parity if sweep else ~parity
@@ -122,10 +126,20 @@ class TileBackend:
                     wake = jnp.any(changed[nbr] & nmask, axis=1)
                     active = (active & ~cand) | (wake & real)
                     labels = new
-                    dn = dn + jnp.sum(changed.astype(jnp.int32))
-                return labels, active, it + jnp.int32(1), dn
+                    sc = jnp.sum(changed.astype(jnp.int32))
+                    dn = dn + sc
+                    if profile:
+                        buf = buf.at[seed].set(jnp.stack(
+                            [jnp.sum(cand.astype(jnp.int32)), sc, seed]))
+                nxt = (labels, active, it + jnp.int32(1), dn)
+                return nxt + (buf,) if profile else nxt
 
             init = (labels0, active0 & real, jnp.int32(0), jnp.int32(rows))
+            if profile:
+                init = init + (jnp.full((2 * max_iterations, 3), -1,
+                                        jnp.int32),)
+                labels, _, it, _, buf = jax.lax.while_loop(cond, body, init)
+                return labels, it, buf
             labels, _, it, _ = jax.lax.while_loop(cond, body, init)
             return labels, it
 
@@ -138,7 +152,7 @@ class TileBackend:
                          * n_real.astype(jnp.float32)).astype(jnp.int32)
 
             def cond(s):
-                _labels, _active, _chg, _candp, it, dn = s
+                _labels, _active, _chg, _candp, it, dn = s[:6]
                 return (dn > threshold) & (it < max_iterations)
 
             def body(s):
@@ -146,7 +160,8 @@ class TileBackend:
                 # changed mask and candidate set into the fused kernel,
                 # which applies the active refresh before picking this
                 # sub-sweep's candidates — one dispatch per sub-sweep.
-                labels, active, chg, candp, it, _ = s
+                labels, active, chg, candp, it, _ = s[:6]
+                buf = s[6] if profile else None
                 dn = jnp.int32(0)
                 for sweep in range(2):  # semi-synchronous parity sub-sweeps
                     klass = parity if sweep else ~parity
@@ -156,27 +171,43 @@ class TileBackend:
                         candp, klass, real, jnp.asarray(seed, jnp.int32),
                         mode=mode)
                     chg = new != labels
+                    # candp is exactly this sub-sweep's candidate set
+                    # (refreshed-active & klass) — same counts as the
+                    # unfused body's `cand`.
                     candp = active & klass
                     labels = new
-                    dn = dn + jnp.sum(chg.astype(jnp.int32))
-                return labels, active, chg, candp, it + jnp.int32(1), dn
+                    sc = jnp.sum(chg.astype(jnp.int32))
+                    dn = dn + sc
+                    if profile:
+                        buf = buf.at[seed].set(jnp.stack(
+                            [jnp.sum(candp.astype(jnp.int32)), sc, seed]))
+                nxt = (labels, active, chg, candp, it + jnp.int32(1), dn)
+                return nxt + (buf,) if profile else nxt
 
             zeros = jnp.zeros(rows, dtype=bool)
             init = (labels0, active0 & real, zeros, zeros, jnp.int32(0),
                     jnp.int32(rows))
+            if profile:
+                init = init + (jnp.full((2 * max_iterations, 3), -1,
+                                        jnp.int32),)
+                labels, _, _, _, it, _, buf = jax.lax.while_loop(cond, body,
+                                                                 init)
+                return labels, it, buf
             labels, _, _, _, it, _ = jax.lax.while_loop(cond, body, init)
             return labels, it
 
-        def _split(nbr, nmask, comm, labels0):
+        def _split(nbr, nmask, comm, labels0, n_real):
             TRACE_LOG.record("tile:split")
             same = (comm[nbr] == comm[:, None]) & nmask
+            real = jnp.asarray(ids) < n_real
 
             def cond(s):
-                labels, active, it, dn = s
+                _labels, _active, _it, dn = s[:4]
                 return dn > 0
 
             def body(s):
-                labels, active, it, _ = s
+                labels, active, it, _ = s[:4]
+                buf = s[4] if split_rows else None
                 new = ops.min_label(labels[nbr], comm[nbr], nmask, labels,
                                     comm, mode=mode)
                 if prune:
@@ -184,28 +215,40 @@ class TileBackend:
                 if shortcut:
                     new = jnp.minimum(new, new[new])
                 changed = new != labels
+                dn = jnp.sum(changed.astype(jnp.int32))
+                if split_rows:
+                    row = jnp.minimum(it, split_rows - 1)
+                    buf = buf.at[row].set(jnp.stack(
+                        [jnp.sum((active & real).astype(jnp.int32)), dn,
+                         it]))
                 if prune:
                     active = jnp.any(changed[nbr] & same, axis=1)
-                dn = jnp.sum(changed.astype(jnp.int32))
-                return new, active, it + jnp.int32(1), dn
+                nxt = (new, active, it + jnp.int32(1), dn)
+                return nxt + (buf,) if split_rows else nxt
 
             init = (labels0, jnp.ones(rows, dtype=bool), jnp.int32(0),
                     jnp.int32(rows))
+            if split_rows:
+                init = init + (jnp.full((split_rows, 3), -1, jnp.int32),)
+                labels, _, it, _, buf = jax.lax.while_loop(cond, body, init)
+                return labels, it, buf
             labels, _, it, _ = jax.lax.while_loop(cond, body, init)
             return labels, it
 
-        def _split_fused(nbr, nmask, comm, labels0):
+        def _split_fused(nbr, nmask, comm, labels0, n_real):
             TRACE_LOG.record("tile:split_fused")
+            real = jnp.asarray(ids) < n_real
 
             def cond(s):
-                _labels, _chg, _it, dn = s
+                _labels, _chg, _it, dn = s[:4]
                 return dn > 0
 
             def body(s):
                 # chg carries last iteration's changed mask (ones on the
                 # first: rows with no same-community neighbor reduce to
                 # their own label, so the result matches active0 = ones).
-                labels, chg, it, _ = s
+                labels, chg, it, _ = s[:4]
+                buf = s[4] if split_rows else None
                 new = ops.fused_split(labels[nbr], comm[nbr], nmask,
                                       chg[nbr], labels, comm, prune=prune,
                                       mode=mode)
@@ -213,10 +256,22 @@ class TileBackend:
                     new = jnp.minimum(new, new[new])
                 changed = new != labels
                 dn = jnp.sum(changed.astype(jnp.int32))
-                return new, changed, it + jnp.int32(1), dn
+                if split_rows:
+                    # the fused body never materialises the prune
+                    # worklist; the wake source (last sweep's changed
+                    # rows) is the closest observable frontier proxy
+                    row = jnp.minimum(it, split_rows - 1)
+                    buf = buf.at[row].set(jnp.stack(
+                        [jnp.sum((chg & real).astype(jnp.int32)), dn, it]))
+                nxt = (new, changed, it + jnp.int32(1), dn)
+                return nxt + (buf,) if split_rows else nxt
 
             init = (labels0, jnp.ones(rows, dtype=bool), jnp.int32(0),
                     jnp.int32(rows))
+            if split_rows:
+                init = init + (jnp.full((split_rows, 3), -1, jnp.int32),)
+                labels, _, it, _, buf = jax.lax.while_loop(cond, body, init)
+                return labels, it, buf
             labels, _, it, _ = jax.lax.while_loop(cond, body, init)
             return labels, it
 
@@ -225,6 +280,7 @@ class TileBackend:
             propagate=jax.jit(_propagate_fused if fuse else _propagate),
             split=(jax.jit(_split_fused if fuse else _split)
                    if do_split else None),
+            profile=profile, split_profile_rows=split_rows,
         )
 
     def prepare(self, graph: Graph, bucket: BucketKey,
@@ -237,30 +293,40 @@ class TileBackend:
             init_labels: np.ndarray | None,
             init_active: np.ndarray | None = None) -> BackendRun:
         nbr, nw, nmask = inputs
+        profiling = getattr(plan, "profile", False)
         labels0 = jnp.asarray(pad_labels(
             np.arange(n_real, dtype=np.int32) if init_labels is None
             else init_labels, n_real, plan.rows))
         active0 = jnp.asarray(pad_active(init_active, n_real, plan.rows))
 
         t0 = time.perf_counter()
-        labels, it = plan.propagate(nbr, nw, nmask, jnp.int32(n_real),
-                                    labels0, active0)
+        out = plan.propagate(nbr, nw, nmask, jnp.int32(n_real),
+                             labels0, active0)
+        (labels, it, pbuf) = out if profiling else (*out, None)
         labels = jax.block_until_ready(labels)
         lpa_iters = int(it)
         t1 = time.perf_counter()
 
         split_iters = 0
+        sbuf = None
         if plan.split is not None:
             roots0 = jnp.arange(plan.rows, dtype=jnp.int32)
-            labels, sit = plan.split(nbr, nmask, labels, roots0)
+            out = plan.split(nbr, nmask, labels, roots0, jnp.int32(n_real))
+            (labels, sit, sbuf) = out if plan.split_profile_rows \
+                else (*out, None)
             labels = jax.block_until_ready(labels)
             split_iters = int(sit)
         t2 = time.perf_counter()
 
+        # profile fetch: one host transfer, after the convergence sync
+        profile = solo_profile(pbuf, lpa_iters, sbuf, split_iters,
+                               plan.split_profile_rows,
+                               int(n_real)) if profiling else None
         return BackendRun(labels=np.asarray(labels),
                           lpa_iterations=lpa_iters,
                           split_iterations=split_iters,
-                          lpa_seconds=t1 - t0, split_seconds=t2 - t1)
+                          lpa_seconds=t1 - t0, split_seconds=t2 - t1,
+                          profile=profile)
 
     # --- out-of-core partition sweeps (repro.partition.ooc driver) ---
     #
@@ -435,6 +501,8 @@ class TileBackend:
         prune = config.split == "lpp"
         shortcut = config.shortcut
         fuse = ops.resolve_fuse(config.fuse_sweeps, config.kernel_mode)
+        profile = config.profile != "off"
+        split_rows = 2 * max_iterations if config.profile == "full" else 0
 
         ids = np.arange(rows, dtype=np.int32)
 
@@ -450,11 +518,12 @@ class TileBackend:
             done0 = sizes <= thr
 
             def cond(s):
-                _labels, _active, it, done, _iters = s
+                _labels, _active, it, done, _iters = s[:5]
                 return jnp.any(~done) & (it < max_iterations)
 
             def body(s):
-                labels, active, it, done, iters = s
+                labels, active, it, done, iters = s[:5]
+                buf = s[5] if profile else None
                 running = ~done[graph_id]
                 dn = jnp.zeros((k1,), jnp.int32)
                 for sweep in range(2):  # semi-synchronous parity sub-sweeps
@@ -470,14 +539,27 @@ class TileBackend:
                     wake = jnp.any(changed[nbr] & nmask, axis=1)
                     active = (active & ~cand) | (wake & real)
                     labels = new
-                    dn = dn + jax.ops.segment_sum(changed.astype(jnp.int32),
-                                                  graph_id, num_segments=k1)
+                    sc = jax.ops.segment_sum(changed.astype(jnp.int32),
+                                             graph_id, num_segments=k1)
+                    dn = dn + sc
+                    if profile:
+                        buf = buf.at[seed].set(jnp.stack(
+                            [jax.ops.segment_sum(cand.astype(jnp.int32),
+                                                 graph_id, num_segments=k1),
+                             sc]))
                 iters = iters + jnp.where(done, 0, 1)
-                return (labels, active, it + jnp.int32(1),
-                        done | (dn <= thr), iters)
+                nxt = (labels, active, it + jnp.int32(1),
+                       done | (dn <= thr), iters)
+                return nxt + (buf,) if profile else nxt
 
             init = (labels0.astype(jnp.int32), active0 & real, jnp.int32(0),
                     done0, jnp.zeros((k1,), jnp.int32))
+            if profile:
+                init = init + (jnp.full((2 * max_iterations, 2, k1), -1,
+                                        jnp.int32),)
+                labels, _, _, _, iters, buf = jax.lax.while_loop(cond, body,
+                                                                 init)
+                return labels, iters, buf
             labels, _, _, _, iters = jax.lax.while_loop(cond, body, init)
             return labels, iters
 
@@ -493,13 +575,14 @@ class TileBackend:
             done0 = sizes <= thr
 
             def cond(s):
-                _labels, _active, _chg, _candp, it, done, _iters = s
+                _labels, _active, _chg, _candp, it, done, _iters = s[:7]
                 return jnp.any(~done) & (it < max_iterations)
 
             def body(s):
                 # Lazy wake (see the solo fused body); done graphs keep
                 # running=False folded into the candidate class column.
-                labels, active, chg, candp, it, done, iters = s
+                labels, active, chg, candp, it, done, iters = s[:7]
+                buf = s[7] if profile else None
                 running = ~done[graph_id]
                 dn = jnp.zeros((k1,), jnp.int32)
                 for sweep in range(2):  # semi-synchronous parity sub-sweeps
@@ -512,15 +595,29 @@ class TileBackend:
                     chg = new != labels
                     candp = active & klass & running
                     labels = new
-                    dn = dn + jax.ops.segment_sum(chg.astype(jnp.int32),
-                                                  graph_id, num_segments=k1)
+                    sc = jax.ops.segment_sum(chg.astype(jnp.int32),
+                                             graph_id, num_segments=k1)
+                    dn = dn + sc
+                    if profile:
+                        # candp is exactly this sub-sweep's candidate set
+                        buf = buf.at[seed].set(jnp.stack(
+                            [jax.ops.segment_sum(candp.astype(jnp.int32),
+                                                 graph_id, num_segments=k1),
+                             sc]))
                 iters = iters + jnp.where(done, 0, 1)
-                return (labels, active, chg, candp, it + jnp.int32(1),
-                        done | (dn <= thr), iters)
+                nxt = (labels, active, chg, candp, it + jnp.int32(1),
+                       done | (dn <= thr), iters)
+                return nxt + (buf,) if profile else nxt
 
             zeros = jnp.zeros(rows, dtype=bool)
             init = (labels0.astype(jnp.int32), active0 & real, zeros, zeros,
                     jnp.int32(0), done0, jnp.zeros((k1,), jnp.int32))
+            if profile:
+                init = init + (jnp.full((2 * max_iterations, 2, k1), -1,
+                                        jnp.int32),)
+                labels, _, _, _, _, _, iters, buf = jax.lax.while_loop(
+                    cond, body, init)
+                return labels, iters, buf
             labels, _, _, _, _, _, iters = jax.lax.while_loop(cond, body,
                                                               init)
             return labels, iters
@@ -533,11 +630,12 @@ class TileBackend:
             done0 = sizes == 0
 
             def cond(s):
-                _labels, _active, done, _iters = s
+                _labels, _active, done, _iters = s[:4]
                 return jnp.any(~done)
 
             def body(s):
-                labels, active, done, iters = s
+                labels, active, done, iters = s[:4]
+                buf = s[4] if split_rows else None
                 new = ops.min_label(labels[nbr], comm[nbr], nmask, labels,
                                     comm, mode=mode)
                 if prune:
@@ -545,15 +643,32 @@ class TileBackend:
                 if shortcut:
                     new = jnp.minimum(new, new[new + voffset])
                 changed = new != labels
-                if prune:
-                    active = jnp.any(changed[nbr] & same, axis=1)
                 dn = jax.ops.segment_sum(changed.astype(jnp.int32),
                                          graph_id, num_segments=k1)
+                if split_rows:
+                    # iters.max() is the global sweep index: a not-yet-done
+                    # slot increments every sweep, so its count equals the
+                    # body-execution count.  Rows past the cap overwrite
+                    # the last row (flagged truncated at fetch time).
+                    row = jnp.minimum(iters.max(), split_rows - 1)
+                    buf = buf.at[row].set(jnp.stack(
+                        [jax.ops.segment_sum(active.astype(jnp.int32),
+                                             graph_id, num_segments=k1),
+                         dn]))
+                if prune:
+                    active = jnp.any(changed[nbr] & same, axis=1)
                 iters = iters + jnp.where(done, 0, 1)
-                return new, active, done | (dn == 0), iters
+                nxt = (new, active, done | (dn == 0), iters)
+                return nxt + (buf,) if split_rows else nxt
 
             init = (local, jnp.ones(rows, dtype=bool), done0,
                     jnp.zeros((k1,), jnp.int32))
+            if split_rows:
+                init = init + (jnp.full((split_rows, 2, k1), -1,
+                                        jnp.int32),)
+                labels, _, _, iters, buf = jax.lax.while_loop(cond, body,
+                                                              init)
+                return labels, iters, buf
             labels, _, _, iters = jax.lax.while_loop(cond, body, init)
             return labels, iters
 
@@ -564,11 +679,12 @@ class TileBackend:
             done0 = sizes == 0
 
             def cond(s):
-                _labels, _chg, done, _iters = s
+                _labels, _chg, done, _iters = s[:4]
                 return jnp.any(~done)
 
             def body(s):
-                labels, chg, done, iters = s
+                labels, chg, done, iters = s[:4]
+                buf = s[4] if split_rows else None
                 new = ops.fused_split(labels[nbr], comm[nbr], nmask,
                                       chg[nbr], labels, comm, prune=prune,
                                       mode=mode)
@@ -577,11 +693,26 @@ class TileBackend:
                 changed = new != labels
                 dn = jax.ops.segment_sum(changed.astype(jnp.int32),
                                          graph_id, num_segments=k1)
+                if split_rows:
+                    # Fused bodies fold the prune worklist into the kernel,
+                    # so last sweep's changed set stands in as the frontier.
+                    row = jnp.minimum(iters.max(), split_rows - 1)
+                    buf = buf.at[row].set(jnp.stack(
+                        [jax.ops.segment_sum(chg.astype(jnp.int32),
+                                             graph_id, num_segments=k1),
+                         dn]))
                 iters = iters + jnp.where(done, 0, 1)
-                return new, changed, done | (dn == 0), iters
+                nxt = (new, changed, done | (dn == 0), iters)
+                return nxt + (buf,) if split_rows else nxt
 
             init = (local, jnp.ones(rows, dtype=bool), done0,
                     jnp.zeros((k1,), jnp.int32))
+            if split_rows:
+                init = init + (jnp.full((split_rows, 2, k1), -1,
+                                        jnp.int32),)
+                labels, _, _, iters, buf = jax.lax.while_loop(cond, body,
+                                                              init)
+                return labels, iters, buf
             labels, _, _, iters = jax.lax.while_loop(cond, body, init)
             return labels, iters
 
@@ -590,6 +721,8 @@ class TileBackend:
             propagate=jax.jit(_propagate_fused if fuse else _propagate),
             split=(jax.jit(_split_fused if fuse else _split)
                    if do_split else None),
+            profile=profile,
+            split_profile_rows=split_rows if do_split else 0,
         )
 
     def prepare_batch(self, batch, bucket: BatchBucketKey,
@@ -609,24 +742,36 @@ class TileBackend:
         k1 = sizes.shape[0]
         labels0, active0 = warm_state_rows(plan.rows, voffset,
                                            init_labels, init_active)
+        profiling = getattr(plan, "profile", False)
 
         t0 = time.perf_counter()
-        labels, iters = plan.propagate(nbr, nw, nmask, sizes, graph_id,
-                                       voffset, n_total,
-                                       jnp.asarray(labels0),
-                                       jnp.asarray(active0))
+        out = plan.propagate(nbr, nw, nmask, sizes, graph_id,
+                             voffset, n_total,
+                             jnp.asarray(labels0),
+                             jnp.asarray(active0))
+        (labels, iters, pbuf) = out if profiling else (*out, None)
         labels = jax.block_until_ready(labels)
         t1 = time.perf_counter()
 
         split_iters = np.zeros(k1, np.int32)
+        sbuf = None
         if plan.split is not None:
-            labels, siters = plan.split(nbr, nmask, sizes, graph_id,
-                                        voffset, labels)
+            out = plan.split(nbr, nmask, sizes, graph_id, voffset, labels)
+            (labels, siters, sbuf) = (out if plan.split_profile_rows
+                                      else (*out, None))
             labels = jax.block_until_ready(labels)
             split_iters = np.asarray(siters)
         t2 = time.perf_counter()
 
+        profiles = None
+        if profiling:
+            profiles = batch_profiles(pbuf, np.asarray(iters), sbuf,
+                                      split_iters,
+                                      plan.split_profile_rows,
+                                      np.asarray(sizes))
+
         return BatchBackendRun(labels=np.asarray(labels),
                                lpa_iterations=np.asarray(iters),
                                split_iterations=split_iters,
-                               lpa_seconds=t1 - t0, split_seconds=t2 - t1)
+                               lpa_seconds=t1 - t0, split_seconds=t2 - t1,
+                               profile=profiles)

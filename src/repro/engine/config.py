@@ -16,6 +16,7 @@ SPLIT_METHODS = ("none", "lp", "lpp", "bfs_host")
 BUCKETING = ("pow2", "exact")
 WARM_START = ("off", "auto")
 FUSE_SWEEPS = ("auto", "on", "off")
+PROFILE = ("off", "convergence", "full")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,6 +75,15 @@ class EngineConfig:
       asserts this).
     mesh: sharded backend — a ``jax.sharding.Mesh``; defaults to one flat
       axis over every visible device.
+    profile: per-fit convergence profiling depth.  ``"convergence"``
+      captures the propagation phase's per-sub-sweep frontier/changed
+      curve; ``"full"`` adds the Split-Last phase.  Counts are recorded
+      device-side into a preallocated buffer carried through the sweep
+      loop and fetched once after convergence — labels and iteration
+      counts stay bit-identical to ``"off"`` (the parity suite asserts
+      it), and no host sync enters the hot loop.  The flag is a plan
+      static (part of ``algo_key()``), so ``"off"`` keeps today's exact
+      executables.  Results surface as ``DetectionResult.profile``.
     """
     backend: str = "auto"
     tau: float = 0.05
@@ -96,6 +106,7 @@ class EngineConfig:
     kernel_mode: str = "auto"
     fuse_sweeps: str = "auto"
     mesh: Any = None
+    profile: str = "off"
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -113,6 +124,9 @@ class EngineConfig:
         if self.fuse_sweeps not in FUSE_SWEEPS:
             raise ValueError(f"fuse_sweeps must be one of {FUSE_SWEEPS}, "
                              f"got {self.fuse_sweeps!r}")
+        if self.profile not in PROFILE:
+            raise ValueError(f"profile must be one of {PROFILE}, "
+                             f"got {self.profile!r}")
         if self.exchange_every < 1:
             raise ValueError("exchange_every must be >= 1")
         if self.warm_cache_size < 1:
@@ -129,7 +143,8 @@ class EngineConfig:
     def algo_key(self) -> tuple:
         """The hashable algorithm statics a compiled plan specialises on."""
         return (self.tau, self.max_iterations, self.split, self.shortcut,
-                self.exchange_every, self.kernel_mode, self.fuse_sweeps)
+                self.exchange_every, self.kernel_mode, self.fuse_sweeps,
+                self.profile)
 
 
 @dataclasses.dataclass
@@ -147,8 +162,10 @@ class DetectionResult:
     modularity: float | None = None
     disconnected_fraction: float | None = None
     # Batched dispatch provenance (``Engine.fit_many``): how many graphs
-    # shared the launch and this graph's position in the pack.  Timings
-    # above are the batch totals attributed pro rata by work share.
+    # shared the launch and this graph's position in the pack.  Batch-
+    # level stage timings appear as ``"prorated_*"`` keys — work-share
+    # estimates, not measurements; the real per-stage spans are recorded
+    # once at batch level (see ``repro.obs.trace``).
     batch_size: int = 1
     batch_index: int = 0
     # Out-of-core provenance: partition count of the fit (1 = in-core)
@@ -156,6 +173,10 @@ class DetectionResult:
     # exchange volume, partition loads) when it ran partitioned.
     partitions: int = 1
     ooc: dict | None = None
+    # Per-fit convergence profile (``EngineConfig.profile != "off"``):
+    # a :class:`repro.obs.ConvergenceProfile` with the per-sub-sweep
+    # frontier/changed curves.  None when profiling is off.
+    profile: Any = None
 
     def check_connected(self, graph) -> float:
         """Disconnected-community fraction, computed lazily and cached.
@@ -177,11 +198,15 @@ class DetectionResult:
 
     @property
     def lpa_seconds(self) -> float:
-        return self.timings.get("propagation", 0.0)
+        # Solo fits measure "propagation" directly; batched members carry
+        # an explicitly-labeled work-share estimate instead.
+        return (self.timings.get("propagation", 0.0)
+                + self.timings.get("prorated_propagation", 0.0))
 
     @property
     def split_seconds(self) -> float:
         return (self.timings.get("split", 0.0)
+                + self.timings.get("prorated_split", 0.0)
                 + self.timings.get("compact", 0.0))
 
     @property

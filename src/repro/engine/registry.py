@@ -50,6 +50,9 @@ class BackendRun(NamedTuple):
     split_iterations: int
     lpa_seconds: float
     split_seconds: float
+    # ConvergenceProfile when the plan was built with profiling on
+    # (EngineConfig.profile != "off"); None otherwise.
+    profile: object | None = None
 
 
 class BatchBackendRun(NamedTuple):
@@ -59,6 +62,8 @@ class BatchBackendRun(NamedTuple):
     split_iterations: np.ndarray  # (k_bucket + 1,) int32 per slot
     lpa_seconds: float
     split_seconds: float
+    # per-slot list of ConvergenceProfile under profiling; None otherwise.
+    profile: list | None = None
 
 
 class Backend(Protocol):

@@ -24,7 +24,7 @@ from pathlib import Path
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.launch.lint",
-        description="JAX-aware hot-path lint (R001-R005)")
+        description="JAX-aware hot-path lint (R001-R006)")
     ap.add_argument("paths", nargs="*", type=Path,
                     help="files/dirs to lint (default: the repro package)")
     ap.add_argument("--json", action="store_true", dest="as_json",

@@ -26,6 +26,12 @@ from concurrent.futures import Future
 
 import numpy as np
 
+from repro.obs import REGISTRY, span
+
+# Histogram bucket bounds (cumulative upper edges, Prometheus-style).
+_BATCH_BUCKETS = (1, 2, 4, 8, 16, 32, 64)
+_LATENCY_MS_BUCKETS = (0.5, 1, 2, 5, 10, 25, 50, 100, 250, 1000, 5000)
+
 
 class Submission:
     """Handle for one enqueued request; resolves to a DetectionResult."""
@@ -74,7 +80,7 @@ class MicroBatcher:
 
     def __init__(self, engine, max_batch: int = 8,
                  batch_timeout_ms: float = 2.0, backend: str | None = None,
-                 autostart: bool = True):
+                 autostart: bool = True, scope=None):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         self.engine = engine
@@ -83,6 +89,16 @@ class MicroBatcher:
         self.backend = backend
         self.batch_sizes: list[int] = []   # one entry per dispatched batch
         self._latencies: list[float] = []  # one entry per completed request
+        # Registry write-through.  A standalone batcher claims its own
+        # "batcher" scope (released in close()); the serving tier passes
+        # a child of its scope so the hierarchy reads serve.batcher.*.
+        self._own_scope = scope is None
+        self._obs = REGISTRY.scope("batcher") if scope is None else scope
+        self._m_requests = self._obs.counter("requests")
+        self._m_batches = self._obs.counter("batches")
+        self._h_batch = self._obs.histogram("batch_size", _BATCH_BUCKETS)
+        self._h_latency = self._obs.histogram("latency_ms",
+                                              _LATENCY_MS_BUCKETS)
         self._q: "queue.Queue[Submission | None]" = queue.Queue()
         self._lock = threading.Lock()  # orders submits against the sentinel
         self._closed = False
@@ -114,11 +130,15 @@ class MicroBatcher:
         if already:
             if wait and self._started:
                 self._thread.join()
+                if self._own_scope:
+                    self._obs.release()
             return
         if not self._started:
             self.start()
         if wait:
             self._thread.join()
+            if self._own_scope:
+                self._obs.release()
 
     def __enter__(self) -> "MicroBatcher":
         return self.start()
@@ -150,6 +170,7 @@ class MicroBatcher:
             if self._closed:
                 raise RuntimeError("MicroBatcher is closed")
             self._q.put(sub)
+        self._m_requests.inc()
         return sub
 
     # --- worker ---
@@ -218,18 +239,23 @@ class MicroBatcher:
                 kwargs["init_labels"] = [s.init_labels for s in batch]
             if any(s.init_active is not None for s in batch):
                 kwargs["init_active"] = [s.init_active for s in batch]
-            results = self.engine.fit_many([s.graph for s in batch],
-                                           backend=self.backend, **kwargs)
+            with span("batch.dispatch", size=len(batch)):
+                results = self.engine.fit_many([s.graph for s in batch],
+                                               backend=self.backend,
+                                               **kwargs)
         except BaseException as e:  # propagate to every waiter
             for s in batch:
                 s._future.set_exception(e)
             return
         now = time.perf_counter()
         self.batch_sizes.append(len(batch))
+        self._m_batches.inc()
+        self._h_batch.observe(len(batch))
         for s, res in zip(batch, results):
             s.latency_s = now - s.submitted
             s.batch_size = len(batch)
             self._latencies.append(s.latency_s)
+            self._h_latency.observe(s.latency_s * 1e3)
             s._future.set_result(res)
 
     # --- observability ---

@@ -1,0 +1,112 @@
+"""Observability CLI: run a workload, dump the unified metrics
+registry, export spans as a Chrome trace, print convergence profiles.
+
+    python -m repro.launch.obs                      # quick fit + registry dump
+    python -m repro.launch.obs --profile full       # + split-phase curve
+    python -m repro.launch.obs --graph web.mtx      # profile a real graph
+    python -m repro.launch.obs --workload audit     # every dispatch family
+    python -m repro.launch.obs --trace trace.json   # chrome://tracing / Perfetto
+    python -m repro.launch.obs --json obs.json      # machine-readable snapshot
+
+The trace JSON loads directly into ``chrome://tracing`` or
+https://ui.perfetto.dev; the registry dump is the same ``snapshot()``
+surface every component's ``stats()`` dict is a view of.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.obs import REGISTRY, TRACER
+
+
+def _print_profile(profile) -> None:
+    for phase in (profile.propagation, profile.split):
+        if phase is None:
+            continue
+        print(f"[obs] {phase.phase} curve ({phase.num_sub_sweeps} sub-sweeps "
+              f"over n={profile.n}):")
+        print(f"  {'sweep':>5} {'active':>8} {'changed':>8} {'decay':>7}")
+        for s, a, c in zip(phase.sweep, phase.active, phase.changed):
+            decay = a / profile.n if profile.n else 0.0
+            print(f"  {int(s):>5} {int(a):>8} {int(c):>8} {decay:>7.3f}")
+
+
+def _fit_workload(a) -> dict:
+    from repro.engine import CompileCache, Engine, EngineConfig
+
+    if a.graph:
+        from repro.io import load_graph
+        graph = load_graph(a.graph)
+    else:
+        from repro.graphgen import erdos_renyi
+        graph = erdos_renyi(a.n, a.degree, seed=a.seed)
+    eng = Engine(EngineConfig(backend=a.backend, split=a.split,
+                              profile=a.profile), cache=CompileCache())
+    r = eng.fit(graph)
+    print(f"[obs] fit n={graph.n} m={graph.num_edges} backend={r.backend} "
+          f"split={a.split}: {r.num_communities} communities in "
+          f"{r.lpa_iterations} lpa + {r.split_iterations} split iterations")
+    if r.profile is not None:
+        _print_profile(r.profile)
+    return {"profile": r.profile.to_dict() if r.profile else None}
+
+
+def _audit_workload(a) -> dict:
+    from repro.analysis.workload import run_workload
+    coverage = run_workload()
+    print(f"[obs] audit workload coverage: "
+          + " ".join(f"{k}={v}" for k, v in sorted(coverage.items())))
+    return {"coverage": coverage}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.obs",
+        description=__doc__.splitlines()[0])
+    ap.add_argument("--workload", choices=("fit", "audit"), default="fit",
+                    help="fit: one profiled detection; audit: the full "
+                         "dispatch-family sweep from repro.analysis.workload")
+    ap.add_argument("--graph", default=None, metavar="PATH",
+                    help="fit workload: real graph file (.mtx / SNAP edge "
+                         "list) instead of a synthetic one")
+    ap.add_argument("--n", type=int, default=600,
+                    help="fit workload: synthetic graph size")
+    ap.add_argument("--degree", type=float, default=6.0,
+                    help="fit workload: synthetic average degree")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", default="auto")
+    ap.add_argument("--split", default="lp",
+                    choices=("none", "lp", "lpp", "bfs_host"))
+    ap.add_argument("--profile", default="full",
+                    choices=("off", "convergence", "full"),
+                    help="fit workload: convergence-profile mode")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write spans as Chrome-trace JSON")
+    ap.add_argument("--json", dest="json_out", default=None, metavar="PATH",
+                    help="write registry snapshot (+ profile) as JSON")
+    a = ap.parse_args(argv)
+
+    extra = _audit_workload(a) if a.workload == "audit" else _fit_workload(a)
+
+    text = REGISTRY.render_text()
+    print("[obs] metrics registry:")
+    print(text if text.strip() else "  (empty)")
+    spans = TRACER.spans()
+    print(f"[obs] {len(spans)} spans recorded "
+          f"({len({s.name for s in spans})} distinct names)")
+    if a.trace:
+        n = TRACER.export_chrome(a.trace)
+        print(f"[obs] wrote {n} trace events -> {a.trace}")
+    if a.json_out:
+        payload = {"metrics": REGISTRY.snapshot(),
+                   "num_spans": len(spans), **extra}
+        with open(a.json_out, "w") as fh:
+            json.dump(payload, fh, indent=2, default=str)
+        print(f"[obs] wrote {a.json_out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -19,6 +19,8 @@ Two workloads share this entry point:
 from __future__ import annotations
 
 import argparse
+import contextlib
+import threading
 import time
 
 import jax
@@ -299,6 +301,41 @@ def serve_tenants(num_tenants: int = 16, rounds: int = 3,
     return records, summary
 
 
+class _PeriodicStats(contextlib.AbstractContextManager):
+    """Background reporter: prints the unified metrics registry every
+    ``every_s`` seconds while a serving workload runs, plus one final
+    snapshot on exit (``--stats-every-s``)."""
+
+    def __init__(self, every_s: float):
+        self._every = every_s
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="stats-reporter")
+
+    def _dump(self, tag: str) -> None:
+        from repro.obs import REGISTRY
+        text = REGISTRY.render_text()
+        body = "\n".join("  " + line for line in text.splitlines()) \
+            if text.strip() else "  (empty)"
+        print(f"[stats {tag}]\n{body}", flush=True)
+
+    def _run(self) -> None:
+        tick = 0
+        while not self._stop.wait(self._every):
+            tick += 1
+            self._dump(f"t+{tick * self._every:g}s")
+
+    def __enter__(self):
+        self._thread.start()
+        return self
+
+    def __exit__(self, *exc):
+        self._stop.set()
+        self._thread.join(timeout=5.0)
+        self._dump("final")
+        return False
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode",
@@ -333,29 +370,36 @@ def main() -> None:
     ap.add_argument("--snapshot-dir", default=None,
                     help="tenants mode: write a warm-state checkpoint "
                          "after the load (restore resumes warm)")
+    ap.add_argument("--stats-every-s", type=float, default=None,
+                    metavar="S",
+                    help="print the unified metrics registry every S "
+                         "seconds while serving (+ a final snapshot)")
     a = ap.parse_args()
-    if a.mode == "tenants":
-        serve_tenants(num_tenants=a.tenants, rounds=a.rounds,
-                      delta_edges=a.delta_edges, backend=a.backend,
-                      max_batch=a.max_batch,
-                      batch_timeout_ms=a.batch_timeout_ms,
-                      queue_capacity=a.queue_capacity,
-                      warm_budget=a.warm_budget,
-                      snapshot_dir=a.snapshot_dir)
-    elif a.mode == "communities":
-        serve_communities(num_requests=a.requests, backend=a.backend,
+    reporter = _PeriodicStats(a.stats_every_s) if a.stats_every_s \
+        else contextlib.nullcontext()
+    with reporter:
+        if a.mode == "tenants":
+            serve_tenants(num_tenants=a.tenants, rounds=a.rounds,
+                          delta_edges=a.delta_edges, backend=a.backend,
                           max_batch=a.max_batch,
                           batch_timeout_ms=a.batch_timeout_ms,
-                          graph_path=a.graph)
-    elif a.mode == "streaming":
-        serve_streaming(num_streams=a.streams, rounds=a.rounds,
-                        delta_edges=a.delta_edges, backend=a.backend,
-                        max_batch=a.max_batch,
-                        batch_timeout_ms=a.batch_timeout_ms)
-    else:
-        if not a.arch:
-            ap.error("--arch is required for --mode lm")
-        serve(a.arch, batch=a.batch, max_new=a.max_new)
+                          queue_capacity=a.queue_capacity,
+                          warm_budget=a.warm_budget,
+                          snapshot_dir=a.snapshot_dir)
+        elif a.mode == "communities":
+            serve_communities(num_requests=a.requests, backend=a.backend,
+                              max_batch=a.max_batch,
+                              batch_timeout_ms=a.batch_timeout_ms,
+                              graph_path=a.graph)
+        elif a.mode == "streaming":
+            serve_streaming(num_streams=a.streams, rounds=a.rounds,
+                            delta_edges=a.delta_edges, backend=a.backend,
+                            max_batch=a.max_batch,
+                            batch_timeout_ms=a.batch_timeout_ms)
+        else:
+            if not a.arch:
+                ap.error("--arch is required for --mode lm")
+            serve(a.arch, batch=a.batch, max_new=a.max_new)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,45 @@
+"""Unified runtime observability: metrics registry, span tracer,
+per-fit convergence profiles.
+
+Three surfaces, one import point:
+
+* :class:`MetricsRegistry` / :data:`REGISTRY` — process-global named
+  counters / gauges / histograms with scoped child views; the single
+  ``snapshot()`` behind every component's legacy ``stats()`` dict.
+* :class:`Tracer` / :data:`TRACER` / :func:`span` — contextvar-nested
+  wall-time spans over host-side stage boundaries, exported as a
+  Chrome-trace (``chrome://tracing`` / Perfetto) JSON array.
+* :class:`ConvergenceProfile` — per-sub-sweep frontier/changed curves
+  captured device-side (in-core) or at existing host sync points (ooc),
+  surfaced as ``DetectionResult.profile`` behind
+  ``EngineConfig.profile``.
+
+``python -m repro.launch.obs`` dumps the registry and exports traces
+for a standard workload.
+"""
+from repro.obs.convergence import (
+    ConvergenceProfile,
+    PhaseProfile,
+    empty_batch_profile_buffer,
+    empty_profile_buffer,
+    phase_from_batch_buffer,
+    phase_from_buffer,
+    phase_from_rows,
+)
+from repro.obs.registry import (
+    REGISTRY,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    Scope,
+)
+from repro.obs.trace import TRACER, Span, Tracer, span
+
+__all__ = [
+    "REGISTRY", "MetricsRegistry", "Scope", "Counter", "Gauge", "Histogram",
+    "TRACER", "Tracer", "Span", "span",
+    "ConvergenceProfile", "PhaseProfile",
+    "empty_profile_buffer", "empty_batch_profile_buffer",
+    "phase_from_buffer", "phase_from_batch_buffer", "phase_from_rows",
+]

@@ -1,0 +1,156 @@
+"""Per-fit convergence profiles: the frontier-decay curve of one run.
+
+FLPA (Traag & Šubelj, arXiv 2209.13338) wins or loses on exactly one
+curve: how fast the active frontier decays per sweep.  A
+``ConvergenceProfile`` captures that curve for every fit — per sub-sweep
+candidate (active-frontier) size, labels-changed count, and the
+sub-sweep index — without touching the hot loop's host-sync discipline:
+
+* **In-core paths** record **device-side** into a preallocated
+  ``(2 * max_iterations, 3)`` int32 buffer carried through the
+  ``lax.while_loop`` state (row ``2*it + sweep`` per parity sub-sweep)
+  and fetched **once** after the existing post-convergence
+  ``block_until_ready`` — zero new host syncs, so the R001 lint gate
+  stays clean.  The buffer write never feeds back into labels or the
+  convergence test, so profiled runs are bit-identical to unprofiled
+  ones by construction (and the parity suite asserts it).
+* **The out-of-core driver** already reduces per-sub-sweep changed
+  counts on the host (they drive its convergence loop), so it records
+  rows host-side at those existing sync points — again zero new syncs.
+
+``EngineConfig.profile`` selects depth: ``"off"`` (no buffer in the
+executable at all — the flag joins ``algo_key()``), ``"convergence"``
+(propagation phase), ``"full"`` (propagation + Split-Last phase).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class PhaseProfile:
+    """Per-sub-sweep counters for one phase of one fit."""
+    phase: str            # "propagation" | "split"
+    sweep: np.ndarray     # (S,) int32 sub-sweep index (2*it + parity)
+    active: np.ndarray    # (S,) candidate-vertex count entering the sweep
+    changed: np.ndarray   # (S,) vertices that changed label in the sweep
+    truncated: bool = False  # phase outran the preallocated buffer
+
+    @property
+    def num_sub_sweeps(self) -> int:
+        return int(len(self.sweep))
+
+    def to_dict(self) -> dict:
+        return {"phase": self.phase, "sweep": self.sweep.tolist(),
+                "active": self.active.tolist(),
+                "changed": self.changed.tolist(),
+                "truncated": self.truncated}
+
+
+@dataclasses.dataclass
+class ConvergenceProfile:
+    """Full profile of one fit: propagation always, split under "full"."""
+    propagation: PhaseProfile
+    split: PhaseProfile | None = None
+    n: int = 0            # real vertex count (frontier fractions)
+
+    def frontier_decay(self) -> np.ndarray:
+        """Active-frontier fraction per propagation sub-sweep — the FLPA
+        comparison curve (active[t] / n)."""
+        if not self.n:
+            return np.zeros(0, np.float64)
+        return self.propagation.active.astype(np.float64) / float(self.n)
+
+    def to_dict(self) -> dict:
+        return {"n": self.n, "propagation": self.propagation.to_dict(),
+                "split": self.split.to_dict() if self.split else None}
+
+
+def empty_profile_buffer(rows: int):
+    """Device-side preallocation: (rows, 3) int32, -1 marks unwritten."""
+    import jax.numpy as jnp
+    return jnp.full((rows, 3), -1, jnp.int32)
+
+
+def empty_batch_profile_buffer(rows: int, k1: int):
+    """Batched preallocation: (rows, 2, k1) int32 [active, changed]."""
+    import jax.numpy as jnp
+    return jnp.full((rows, 2, k1), -1, jnp.int32)
+
+
+def phase_from_buffer(phase: str, buf, rows: int,
+                      truncated: bool = False) -> PhaseProfile:
+    """Trim a fetched (cap, 3) [active, changed, sweep] buffer to the
+    ``rows`` sub-sweeps that actually ran."""
+    arr = np.asarray(buf)
+    rows = max(0, min(int(rows), arr.shape[0]))
+    return PhaseProfile(phase=phase,
+                        sweep=arr[:rows, 2].astype(np.int32),
+                        active=arr[:rows, 0].astype(np.int64),
+                        changed=arr[:rows, 1].astype(np.int64),
+                        truncated=truncated)
+
+
+def phase_from_batch_buffer(phase: str, buf, slot: int,
+                            rows: int, truncated: bool = False,
+                            ) -> PhaseProfile:
+    """Slice one member's curve out of a fetched (cap, 2, k1) buffer."""
+    arr = np.asarray(buf)
+    rows = max(0, min(int(rows), arr.shape[0]))
+    return PhaseProfile(phase=phase,
+                        sweep=np.arange(rows, dtype=np.int32),
+                        active=arr[:rows, 0, slot].astype(np.int64),
+                        changed=arr[:rows, 1, slot].astype(np.int64),
+                        truncated=truncated)
+
+
+def solo_profile(pbuf, lpa_iters: int, sbuf, split_iters: int,
+                 split_cap: int, n: int) -> ConvergenceProfile:
+    """Assemble a solo fit's profile from fetched device buffers.
+
+    ``pbuf``: propagation (cap, 3) buffer, valid rows = ``2 * lpa_iters``.
+    ``sbuf``: optional split buffer capped at ``split_cap`` sweeps — a
+    split that outran the cap overwrote the last row (flagged truncated).
+    """
+    prop = phase_from_buffer("propagation", pbuf, 2 * lpa_iters)
+    split = None
+    if sbuf is not None:
+        split = phase_from_buffer("split", sbuf,
+                                  min(split_iters, split_cap),
+                                  truncated=split_iters > split_cap)
+    return ConvergenceProfile(propagation=prop, split=split, n=n)
+
+
+def batch_profiles(pbuf, lpa_iters, sbuf, split_iters, split_cap: int,
+                   sizes) -> list[ConvergenceProfile]:
+    """Per-slot profiles from a batched run's fetched (cap, 2, k1)
+    buffers.  Each slot's curve is trimmed to the sub-sweeps *its*
+    standalone run would have executed (frozen slots stop counting)."""
+    pb = np.asarray(pbuf)
+    sb = None if sbuf is None else np.asarray(sbuf)
+    lpa_iters = np.asarray(lpa_iters)
+    split_iters = None if split_iters is None else np.asarray(split_iters)
+    out = []
+    for i, n_i in enumerate(np.asarray(sizes)):
+        prop = phase_from_batch_buffer("propagation", pb, i,
+                                       2 * int(lpa_iters[i]))
+        split = None
+        if sb is not None:
+            si = int(split_iters[i])
+            split = phase_from_batch_buffer("split", sb, i,
+                                            min(si, split_cap),
+                                            truncated=si > split_cap)
+        out.append(ConvergenceProfile(propagation=prop, split=split,
+                                      n=int(n_i)))
+    return out
+
+
+def phase_from_rows(phase: str, rows: list[tuple[int, int, int]],
+                    ) -> PhaseProfile:
+    """Host-side accumulation (the out-of-core driver): a list of
+    (sweep_index, active_count, changed_count) rows."""
+    arr = np.asarray(rows, dtype=np.int64).reshape(-1, 3)
+    return PhaseProfile(phase=phase, sweep=arr[:, 0].astype(np.int32),
+                        active=arr[:, 1], changed=arr[:, 2])

@@ -1,0 +1,251 @@
+"""Process-wide metrics registry: counters, gauges, histograms.
+
+One namespace for every runtime surface that used to keep its own ad-hoc
+``stats()`` dict (engine warm cache, micro-batcher, admission queue,
+slice loader, memory ledger).  Components claim a *scope* — a child view
+whose metric names are prefixed and stored in the shared root — write
+through plain ``Counter``/``Gauge``/``Histogram`` handles, and keep their
+old ``stats()`` methods as thin reads over the same handles.
+
+Design constraints, in order:
+
+* **Thread-safe.**  The serving tier mutates metrics from client
+  threads, the dispatcher, and the batcher worker at once.  One root
+  lock guards the name table; each metric instance carries its own lock
+  so hot counters don't serialize against unrelated scopes.
+* **Multi-instance.**  Tests build many engines/services per process.
+  ``scope()`` hands out the bare prefix to the first claimant and
+  ``prefix#N`` to later ones, so per-instance reads never alias another
+  instance's numbers; ``Scope.release()`` frees the label and drops the
+  metrics (wired into ``close()`` where components have one).
+* **No device work.**  Everything here is host-side bookkeeping; the
+  R006 lint rule keeps these calls out of jitted / per-sweep code.
+"""
+from __future__ import annotations
+
+import bisect
+import threading
+from collections import deque
+from typing import Any, Callable, Iterable
+
+_RESERVOIR = 4096  # raw samples kept per histogram for exact small-N quantiles
+
+
+class Counter:
+    """Monotonic event count."""
+
+    __slots__ = ("_lock", "_value")
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._value = 0
+
+    def inc(self, n: int = 1) -> None:
+        with self._lock:
+            self._value += n
+
+    @property
+    def value(self) -> int:
+        with self._lock:
+            return self._value
+
+
+class Gauge:
+    """Point-in-time level (queue depth, resident bytes, cache entries)."""
+
+    __slots__ = ("_lock", "_value")
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._value = 0
+
+    def set(self, v) -> None:
+        with self._lock:
+            self._value = v
+
+    def add(self, n) -> None:
+        with self._lock:
+            self._value += n
+
+    @property
+    def value(self):
+        with self._lock:
+            return self._value
+
+
+class Histogram:
+    """Fixed-bucket distribution with a bounded raw-sample reservoir.
+
+    Buckets are cumulative upper bounds (Prometheus-style ``le``); the
+    reservoir keeps the most recent ``_RESERVOIR`` observations so small
+    runs get *exact* quantiles — the thin-view ``stats()`` methods that
+    used to hold their own latency lists read them from here instead.
+    """
+
+    __slots__ = ("_lock", "buckets", "_counts", "_sum", "_count", "_samples")
+
+    def __init__(self, buckets: Iterable[float]):
+        self.buckets = tuple(sorted(float(b) for b in buckets))
+        if not self.buckets:
+            raise ValueError("histogram needs at least one bucket bound")
+        self._lock = threading.Lock()
+        self._counts = [0] * (len(self.buckets) + 1)  # +1 = overflow
+        self._sum = 0.0
+        self._count = 0
+        self._samples: deque[float] = deque(maxlen=_RESERVOIR)
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        idx = bisect.bisect_left(self.buckets, v)
+        with self._lock:
+            self._counts[idx] += 1
+            self._sum += v
+            self._count += 1
+            self._samples.append(v)
+
+    @property
+    def count(self) -> int:
+        with self._lock:
+            return self._count
+
+    @property
+    def sum(self) -> float:
+        with self._lock:
+            return self._sum
+
+    @property
+    def mean(self) -> float:
+        with self._lock:
+            return self._sum / self._count if self._count else 0.0
+
+    def quantile(self, q: float) -> float:
+        """Exact over the reservoir (the full stream while it fits)."""
+        with self._lock:
+            if not self._samples:
+                return 0.0
+            xs = sorted(self._samples)
+        return xs[min(int(q * len(xs)), len(xs) - 1)]
+
+    def summary(self) -> dict[str, Any]:
+        with self._lock:
+            counts = list(self._counts)
+            total, s = self._count, self._sum
+            xs = sorted(self._samples)
+
+        def _q(q: float) -> float:
+            return xs[min(int(q * len(xs)), len(xs) - 1)] if xs else 0.0
+        return {"count": total, "sum": s,
+                "mean": (s / total if total else 0.0),
+                "p50": _q(0.50), "p95": _q(0.95), "p99": _q(0.99),
+                "buckets": {f"le_{b:g}": c
+                            for b, c in zip(self.buckets, counts)}
+                | {"overflow": counts[-1]}}
+
+
+class Scope:
+    """Child view of a registry: names are prefixed into the shared root."""
+
+    def __init__(self, root: "MetricsRegistry", label: str):
+        self._root = root
+        self.label = label
+        self._released = False
+
+    def counter(self, name: str) -> Counter:
+        return self._root._get(f"{self.label}.{name}", Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._root._get(f"{self.label}.{name}", Gauge)
+
+    def histogram(self, name: str, buckets: Iterable[float]) -> Histogram:
+        return self._root._get(f"{self.label}.{name}", Histogram, buckets)
+
+    def scope(self, prefix: str) -> "Scope":
+        return self._root.scope(f"{self.label}.{prefix}")
+
+    def release(self) -> None:
+        """Free this scope's label and drop its metrics from the root."""
+        if not self._released:
+            self._released = True
+            self._root._release(self.label)
+
+
+class MetricsRegistry:
+    """Thread-safe named-metric store with scoped child views."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._metrics: dict[str, Any] = {}
+        self._labels: set[str] = set()
+
+    def _get(self, name: str, kind: Callable, *args):
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is None:
+                m = self._metrics[name] = kind(*args)
+            elif not isinstance(m, kind):
+                raise TypeError(f"metric {name!r} already registered as "
+                                f"{type(m).__name__}, not {kind.__name__}")
+            return m
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def histogram(self, name: str, buckets: Iterable[float]) -> Histogram:
+        return self._get(name, Histogram, buckets)
+
+    def scope(self, prefix: str) -> Scope:
+        """Claim a child namespace.  The first claimant of ``prefix``
+        gets the bare label; later ones get ``prefix#1``, ``prefix#2``…
+        so per-instance metrics never alias across instances."""
+        with self._lock:
+            label, i = prefix, 0
+            while label in self._labels:
+                i += 1
+                label = f"{prefix}#{i}"
+            self._labels.add(label)
+        return Scope(self, label)
+
+    def _release(self, label: str) -> None:
+        with self._lock:
+            self._labels.discard(label)
+            dead = [k for k in self._metrics
+                    if k == label or k.startswith(label + ".")]
+            for k in dead:
+                del self._metrics[k]
+
+    def snapshot(self) -> dict[str, Any]:
+        """Flat ``name -> value`` dict; histograms expand to summaries."""
+        with self._lock:
+            items = sorted(self._metrics.items())
+        out: dict[str, Any] = {}
+        for name, m in items:
+            out[name] = m.summary() if isinstance(m, Histogram) else m.value
+        return out
+
+    def render_text(self) -> str:
+        """Human-readable one-metric-per-line dump (for CLIs / logs)."""
+        lines = []
+        for name, v in self.snapshot().items():
+            if isinstance(v, dict):  # histogram summary
+                lines.append(
+                    f"{name}  count={v['count']} mean={v['mean']:.4g} "
+                    f"p50={v['p50']:.4g} p95={v['p95']:.4g} "
+                    f"p99={v['p99']:.4g}")
+            elif isinstance(v, float):
+                lines.append(f"{name}  {v:.6g}")
+            else:
+                lines.append(f"{name}  {v}")
+        return "\n".join(lines)
+
+    def reset(self) -> None:
+        with self._lock:
+            self._metrics.clear()
+            self._labels.clear()
+
+
+# The process-global root every component defaults to.  Tests that need
+# isolation construct their own MetricsRegistry and inject it.
+REGISTRY = MetricsRegistry()

@@ -42,6 +42,8 @@ import numpy as np
 from repro.core.lpa import _label_hash
 from repro.engine.cache import trace_context
 from repro.engine.config import EngineConfig
+from repro.obs import REGISTRY, span
+from repro.obs.convergence import ConvergenceProfile, phase_from_rows
 from repro.partition.plan import (
     PartitionPlan,
     attach_halos,
@@ -59,6 +61,14 @@ from repro.partition.slices import (
 
 # In-core residency of one directed edge slot: src + dst + wgt + mask.
 IN_CORE_EDGE_BYTES = 13
+
+# Shared registry scope for all out-of-core fits in this process: ooc
+# infrastructure counters are cumulative across fits (like the engine's
+# warm-cache counters), so one scope serves every ``fit_out_of_core``
+# call instead of leaking a labeled child scope per fit.
+_OOC = REGISTRY.scope("ooc")
+_M_FITS = _OOC.counter("fits")
+_M_EXCHANGE = _OOC.counter("exchange_bytes")
 
 
 @dataclasses.dataclass
@@ -84,6 +94,7 @@ class OocRun:
     prefetch_hits: int = 0        # loads served by a staged window
     halo_cache_bytes_saved: int = 0  # gather bytes skipped via label cache
     halo_cache_hits: int = 0      # partition visits with zero re-upload
+    profile: object | None = None  # ConvergenceProfile when cfg.profile on
 
     def stats(self) -> dict:
         return {
@@ -237,28 +248,33 @@ def fit_out_of_core(source, config: EngineConfig | None = None, *,
         raise ValueError(f"backend {name!r} has no partition sweeps; "
                          "out-of-core fits support segment and tile")
 
-    if num_partitions is not None:
-        plan = plan_partitions(row_ptr, num_partitions=num_partitions)
-    else:
-        max_edges, max_vertices = be.partition_caps(budget, d_bucket)
-        plan = plan_partitions(row_ptr, max_edges=max_edges,
-                               max_vertices=max_vertices)
-    plan = attach_halos(plan, lambda lo, hi: source.window("dst", lo, hi))
-    shapes = _shapes_for(plan, cfg.bucketing)
+    with span("ooc.plan", n=n, backend=name) as sp_plan:
+        if num_partitions is not None:
+            plan = plan_partitions(row_ptr, num_partitions=num_partitions)
+        else:
+            max_edges, max_vertices = be.partition_caps(budget, d_bucket)
+            plan = plan_partitions(row_ptr, max_edges=max_edges,
+                                   max_vertices=max_vertices)
+        plan = attach_halos(plan,
+                            lambda lo, hi: source.window("dst", lo, hi))
+        shapes = _shapes_for(plan, cfg.bucketing)
 
-    if cache is not None:
-        key = ("partition", name, cfg.algo_key(), be.plan_key(cfg))
-        sweeps, cache_hit = cache.get_or_build(
-            key, lambda: be.build_partition(cfg))
-    else:
-        sweeps, cache_hit = be.build_partition(cfg), False
+        if cache is not None:
+            key = ("partition", name, cfg.algo_key(), be.plan_key(cfg))
+            sweeps, cache_hit = cache.get_or_build(
+                key, lambda: be.build_partition(cfg))
+        else:
+            sweeps, cache_hit = be.build_partition(cfg), False
+        sp_plan.set(partitions=plan.num_partitions,
+                    halo_vertices=plan.halo_vertices, cache_hit=cache_hit)
 
     fused = bool(getattr(be, "supports_fused_partition", False)
                  and getattr(sweeps, "fuse", False))
 
-    ledger = MemoryLedger(budget)
+    ledger = MemoryLedger(budget, scope=_OOC)
     loader = SliceLoader(source, plan, ledger,
-                         prefetch=prefetch and plan.num_partitions > 1)
+                         prefetch=prefetch and plan.num_partitions > 1,
+                         scope=_OOC)
     prepare = _Prepare(be, shapes, cfg)
 
     # Device-resident halo-label caches, one per global array so epochs
@@ -306,11 +322,18 @@ def fit_out_of_core(source, config: EngineConfig | None = None, *,
     ones_loc = np.ones(shapes.n_loc, dtype=bool)
 
     # --- propagation: Algorithm 3 lines 1-6, partitioned ---
+    # Profile rows accumulate host-side at the driver's existing sync
+    # points (the per-sub-sweep changed reductions already drive the
+    # convergence loop), so cfg.profile adds zero new host syncs here.
+    do_profile = cfg.profile != "off"
+    prop_rows: list[tuple[int, int, int]] = []
+    split_rows: list[tuple[int, int, int]] = []
     t0 = time.perf_counter()
     changed_prev: np.ndarray | None = None
     klass_prev: np.ndarray | None = None
     it, delta = 0, n
-    with trace_context(name, part_ctx):
+    with trace_context(name, part_ctx), \
+            span("ooc.propagation", backend=name) as sp_lpa:
         while delta > threshold and it < cfg.max_iterations:
             delta = 0
             for sweep in (0, 1):
@@ -318,6 +341,8 @@ def fit_out_of_core(source, config: EngineConfig | None = None, *,
                 seed = 2 * it + sweep
                 labels_next = labels.copy()
                 changed_next = np.zeros(n, dtype=bool)
+                sweep_delta = 0
+                cand_count = 0
                 for i in range(plan.num_partitions):
                     res = visit(i)
                     part, rng = res.part, slice(res.part.lo, res.part.hi)
@@ -337,6 +362,12 @@ def fit_out_of_core(source, config: EngineConfig | None = None, *,
                             active[rng], candp, klass[rng], seed, bound)
                         active[rng] = act[: part.size]
                         new = new[: part.size]
+                        if do_profile:
+                            # the returned act is post-wake, pre-move —
+                            # act & klass is the exact candidate set the
+                            # fused kernel swept (same count as unfused)
+                            cand_count += int(
+                                (active[rng] & klass[rng]).sum())
                     else:
                         if changed_prev is not None:
                             # lazy pruning update: finish the previous
@@ -348,19 +379,25 @@ def fit_out_of_core(source, config: EngineConfig | None = None, *,
                             was_cand = active[rng] & klass_prev[rng]
                             active[rng] = (active[rng] & ~was_cand) | wake
                         cand = active[rng] & klass[rng]
+                        if do_profile:
+                            cand_count += int(cand.sum())
                         new = be.partition_move(
                             sweeps, res.inputs, lab_loc,
                             cand, seed, bound)[: part.size]
                     exchange.scatter(labels_next, rng, new)
                     ch = new != labels[rng]
                     changed_next[rng] = ch
-                    delta += int(ch.sum())
+                    sweep_delta += int(ch.sum())
+                delta += sweep_delta
+                if do_profile:
+                    prop_rows.append((seed, cand_count, sweep_delta))
                 labels = labels_next
                 if lab_cache is not None:
                     lab_cache.advance(changed_next)
                 changed_prev, klass_prev = changed_next, klass
             it += 1
     lpa_iterations = it
+    sp_lpa.set(iterations=it, partitions=plan.num_partitions)
     t_lpa = time.perf_counter() - t0
 
     # --- §3.3 split phase, per-partition with cross-partition
@@ -374,8 +411,15 @@ def fit_out_of_core(source, config: EngineConfig | None = None, *,
         sactive = np.ones(n, dtype=bool)
         changed_prev = None
         delta = 1
-        with trace_context(name, part_ctx):
+        with trace_context(name, part_ctx), \
+                span("ooc.split", backend=name) as sp_split:
             while delta > 0:
+                # frontier proxy: the split worklist is not materialized
+                # host-side (LP sweeps everyone; LPP wakes lazily inside
+                # partition visits), so record n for the first sweep and
+                # the previous sweep's changed count after — the same
+                # proxy the fused in-core split profile uses.
+                active_proxy = n if changed_prev is None else delta
                 slab_next = slab.copy()
                 for i in range(plan.num_partitions):
                     res = visit(i)
@@ -407,11 +451,15 @@ def fit_out_of_core(source, config: EngineConfig | None = None, *,
                     slab_next = np.minimum(slab_next, slab_next[slab_next])
                 changed = slab_next != slab
                 delta = int(changed.sum())
+                if do_profile and cfg.profile == "full":
+                    split_rows.append((split_iterations, active_proxy,
+                                       delta))
                 changed_prev = changed
                 slab = slab_next
                 if slab_cache is not None:
                     slab_cache.advance(changed)
                 split_iterations += 1
+        sp_split.set(iterations=split_iterations)
         labels = slab
     t_split = time.perf_counter() - t0
 
@@ -426,6 +474,15 @@ def fit_out_of_core(source, config: EngineConfig | None = None, *,
     for c in caches:
         c.drop()
     loader.clear()
+    profile = None
+    if do_profile:
+        profile = ConvergenceProfile(
+            propagation=phase_from_rows("propagation", prop_rows),
+            split=(phase_from_rows("split", split_rows)
+                   if split_rows else None),
+            n=n)
+    _M_FITS.inc()
+    _M_EXCHANGE.inc(exchange_bytes)
     return OocRun(
         labels=labels, backend=name, lpa_iterations=lpa_iterations,
         split_iterations=split_iterations, lpa_seconds=t_lpa,
@@ -437,6 +494,7 @@ def fit_out_of_core(source, config: EngineConfig | None = None, *,
         fused=fused, prefetches=loader.prefetches,
         prefetch_hits=loader.prefetch_hits,
         halo_cache_bytes_saved=saved, halo_cache_hits=hits,
+        profile=profile,
     )
 
 

@@ -82,11 +82,23 @@ class MemoryLedger:
     keeps the invariant airtight if callers ever account from both.
     """
 
-    def __init__(self, budget: int | None):
+    def __init__(self, budget: int | None, scope=None):
         self.budget = None if budget is None else int(budget)
         self.current = 0
         self.peak = 0
         self._lock = threading.Lock()
+        # Optional metrics-registry write-through (``repro.obs``): the
+        # int fields above stay authoritative; ``stats()`` is a thin view
+        # of them, the gauges mirror them for ``REGISTRY.snapshot()``.
+        self._g_current = scope.gauge("bytes_current") if scope else None
+        self._g_peak = scope.gauge("bytes_peak") if scope else None
+        if scope and self.budget is not None:
+            scope.gauge("bytes_budget").set(self.budget)
+
+    def _publish(self) -> None:
+        if self._g_current is not None:
+            self._g_current.set(self.current)
+            self._g_peak.set(self.peak)
 
     def acquire(self, nbytes: int, what: str = "") -> int:
         nbytes = int(nbytes)
@@ -99,6 +111,7 @@ class MemoryLedger:
                     f"over the {self.budget}-byte budget")
             self.current += nbytes
             self.peak = max(self.peak, self.current)
+        self._publish()
         return nbytes
 
     def try_acquire(self, nbytes: int, what: str = "") -> bool:
@@ -115,11 +128,13 @@ class MemoryLedger:
                 return False
             self.current += nbytes
             self.peak = max(self.peak, self.current)
+        self._publish()
         return True
 
     def release(self, nbytes: int) -> None:
         with self._lock:
             self.current -= int(nbytes)
+        self._publish()
 
     def stats(self) -> dict:
         return {"budget": self.budget, "current": self.current,
@@ -294,7 +309,7 @@ class SliceLoader:
     """
 
     def __init__(self, source, plan: PartitionPlan, ledger: MemoryLedger,
-                 prefetch: bool = False):
+                 prefetch: bool = False, scope=None):
         self.source = source
         self.plan = plan
         self.ledger = ledger
@@ -308,9 +323,17 @@ class SliceLoader:
         self.requests = 0       # load() calls (hits + misses)
         self.prefetches = 0     # prefetches staged on the worker
         self.prefetch_hits = 0  # loads served by joining a staged future
+        # Optional registry write-through; the counters above stay
+        # authoritative and ``stats()`` reads only them.
+        self._m_loads = scope.counter("loads") if scope else None
+        self._m_requests = scope.counter("requests") if scope else None
+        self._m_prefetches = scope.counter("prefetches") if scope else None
+        self._m_pf_hits = scope.counter("prefetch_hits") if scope else None
 
     def load(self, index: int, prepare=None) -> ResidentPartition:
         self.requests += 1
+        if self._m_requests is not None:
+            self._m_requests.inc()
         res = self._resident.get(index)
         if res is None and index in self._staged:
             res = self._adopt_staged(index)
@@ -324,6 +347,8 @@ class SliceLoader:
             self.ledger.acquire(res.nbytes, f"partition {index}")
             self._resident[index] = res
             self.loads += 1
+            if self._m_loads is not None:
+                self._m_loads.inc()
         else:
             self._resident.move_to_end(index)
         if prepare is not None and res.inputs is None:
@@ -372,6 +397,8 @@ class SliceLoader:
 
         self._staged[index] = (self._pool.submit(work), incoming)
         self.prefetches += 1
+        if self._m_prefetches is not None:
+            self._m_prefetches.inc()
         return True
 
     def _adopt_staged(self, index: int) -> ResidentPartition:
@@ -392,6 +419,9 @@ class SliceLoader:
         self._resident[index] = res
         self.loads += 1
         self.prefetch_hits += 1
+        if self._m_loads is not None:
+            self._m_loads.inc()
+            self._m_pf_hits.inc()
         return res
 
     def _drop_staged(self, index: int) -> None:

@@ -51,7 +51,8 @@ class AdmissionQueue:
     retry_after_s: the hint attached to rejections.
     """
 
-    def __init__(self, capacity: int, retry_after_s: float = 0.05):
+    def __init__(self, capacity: int, retry_after_s: float = 0.05,
+                 scope=None):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         self.capacity = int(capacity)
@@ -67,6 +68,15 @@ class AdmissionQueue:
         self.accepted = 0
         self.rejected = 0
         self.served: Counter = Counter()   # tenant -> requests taken
+        # Registry write-through; the fields above stay authoritative
+        # (per-tenant served counts keep to stats() — tenant ids are an
+        # unbounded label space, which registries must never absorb).
+        self._m_accepted = scope.counter("accepted") if scope else None
+        self._m_rejected = scope.counter("rejected") if scope else None
+        self._m_taken = scope.counter("taken") if scope else None
+        self._g_depth = scope.gauge("depth") if scope else None
+        self._g_peak = scope.gauge("peak_depth") if scope else None
+        self._g_held = scope.gauge("held") if scope else None
 
     # --- producer side ---
 
@@ -77,6 +87,8 @@ class AdmissionQueue:
                 raise RuntimeError("admission queue is closed")
             if self.depth >= self.capacity:
                 self.rejected += 1
+                if self._m_rejected is not None:
+                    self._m_rejected.inc()
                 raise Rejected(self.depth, self.capacity, self.retry_after_s)
             fifo = self._fifos.get(tenant)
             if fifo is None:
@@ -85,6 +97,10 @@ class AdmissionQueue:
             self.depth += 1
             self.peak_depth = max(self.peak_depth, self.depth)
             self.accepted += 1
+            if self._m_accepted is not None:
+                self._m_accepted.inc()
+                self._g_depth.set(self.depth)
+                self._g_peak.set(self.peak_depth)
             self._cond.notify()
 
     def close(self) -> None:
@@ -116,6 +132,10 @@ class AdmissionQueue:
                     self._fifos.move_to_end(tenant)
                     if not fifo:
                         del self._fifos[tenant]
+                    if self._m_taken is not None:
+                        self._m_taken.inc()
+                        self._g_depth.set(self.depth)
+                        self._g_held.set(len(self._held))
                     return tenant, item
                 if self._closed and self.depth == 0:
                     return None
@@ -130,6 +150,8 @@ class AdmissionQueue:
         request becomes takeable."""
         with self._cond:
             self._held.discard(tenant)
+            if self._g_held is not None:
+                self._g_held.set(len(self._held))
             self._cond.notify_all()
 
     # --- observability ---

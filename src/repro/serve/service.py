@@ -56,6 +56,7 @@ import numpy as np
 from repro.core.graph import Graph, graph_fingerprint
 from repro.launch.microbatch import MicroBatcher
 from repro.launch.stream import PreparedUpdate, StreamSession, StreamState
+from repro.obs import REGISTRY, span
 from repro.partition.plan import parse_bytes
 from repro.partition.slices import MemoryLedger
 
@@ -128,16 +129,22 @@ class TenantService:
         self.engine = engine
         self.config = config if config is not None else ServiceConfig()
         cfg = self.config
+        # Per-instance registry scope; children hang off it so the
+        # hierarchy reads serve.admission.*, serve.warm.*, serve.batcher.*
+        # (a shared batcher keeps whatever scope its owner gave it).
+        self._obs = REGISTRY.scope("serve")
         self._own_batcher = batcher is None
         self.batcher = batcher if batcher is not None else MicroBatcher(
             engine, max_batch=cfg.max_batch,
-            batch_timeout_ms=cfg.batch_timeout_ms, backend=cfg.backend)
+            batch_timeout_ms=cfg.batch_timeout_ms, backend=cfg.backend,
+            scope=self._obs.scope("batcher"))
         from repro.serve.admission import AdmissionQueue
         self.admission = AdmissionQueue(cfg.queue_capacity,
-                                        retry_after_s=cfg.retry_after_s)
+                                        retry_after_s=cfg.retry_after_s,
+                                        scope=self._obs.scope("admission"))
         budget = None if cfg.warm_budget is None \
             else parse_bytes(cfg.warm_budget)
-        self.ledger = MemoryLedger(budget)
+        self.ledger = MemoryLedger(budget, scope=self._obs.scope("warm"))
 
         self._lock = threading.RLock()
         self._sessions: dict = {}               # tenant -> StreamSession
@@ -150,6 +157,15 @@ class TenantService:
         self.spills = 0       # warm labels dropped to fit the budget
         self.uncached = 0     # commits too large to cache even after spill
         self.restored = 0     # tenants re-seeded warm from a checkpoint
+        self._m_completed = self._obs.counter("completed")
+        self._m_failed = self._obs.counter("failed")
+        self._m_spills = self._obs.counter("spills")
+        self._m_uncached = self._obs.counter("uncached")
+        self._m_restored = self._obs.counter("restored")
+        self._g_outstanding = self._obs.gauge("outstanding")
+        self._g_tenants = self._obs.gauge("tenants")
+        self._h_latency = self._obs.histogram(
+            "latency_ms", (0.5, 1, 2, 5, 10, 25, 50, 100, 250, 1000, 5000))
 
         self._dispatcher = threading.Thread(target=self._dispatch_loop,
                                             daemon=True,
@@ -174,6 +190,8 @@ class TenantService:
         self._dispatcher.join()
         if self._own_batcher:
             self.batcher.close()
+        # drop this instance's metrics (children release by prefix)
+        self._obs.release()
 
     # --- client surface ---
 
@@ -237,16 +255,19 @@ class TenantService:
         return sess.streams.get(self._STREAM)
 
     def _admit(self, req: _Request) -> TenantTicket:
-        try:
-            self.admission.offer(req.tenant, req)
-        except BaseException:
-            if req.kind == "register":
-                # a rejected register never happened: allow the retry
-                with self._lock:
-                    self._sessions.pop(req.tenant, None)
-            raise
+        with span("serve.admit", kind=req.kind):
+            try:
+                self.admission.offer(req.tenant, req)
+            except BaseException:
+                if req.kind == "register":
+                    # a rejected register never happened: allow the retry
+                    with self._lock:
+                        self._sessions.pop(req.tenant, None)
+                raise
         with self._lock:
             self._outstanding += 1
+            self._g_outstanding.set(self._outstanding)
+            self._g_tenants.set(len(self._sessions))
         return req.ticket
 
     def _dispatch_loop(self) -> None:
@@ -267,21 +288,22 @@ class TenantService:
 
     def _launch(self, req: _Request) -> None:
         sess = self._sessions[req.tenant]
-        if req.kind == "register":
-            prep: object = req.payload        # the initial Graph
-            sub = self.batcher.submit(req.payload)
-        elif req.kind == "update":
-            # prepare under the service lock: a concurrent commit may
-            # spill *this* tenant's labels mid-prepare otherwise
-            with self._lock:
-                prep = sess.prepare_update(self._STREAM, req.payload)
-            sub = self.batcher.submit(prep.graph,
-                                      init_labels=prep.init_labels,
-                                      init_active=prep.init_active)
-        else:  # refresh: cold re-fit of the committed graph
-            with self._lock:
-                prep = sess.streams[self._STREAM].graph
-            sub = self.batcher.submit(prep)
+        with span("serve.launch", kind=req.kind):
+            if req.kind == "register":
+                prep: object = req.payload        # the initial Graph
+                sub = self.batcher.submit(req.payload)
+            elif req.kind == "update":
+                # prepare under the service lock: a concurrent commit may
+                # spill *this* tenant's labels mid-prepare otherwise
+                with self._lock:
+                    prep = sess.prepare_update(self._STREAM, req.payload)
+                sub = self.batcher.submit(prep.graph,
+                                          init_labels=prep.init_labels,
+                                          init_active=prep.init_active)
+            else:  # refresh: cold re-fit of the committed graph
+                with self._lock:
+                    prep = sess.streams[self._STREAM].graph
+                sub = self.batcher.submit(prep)
         sub.add_done_callback(
             lambda s, req=req, prep=prep: self._settle(req, prep, s))
 
@@ -291,23 +313,24 @@ class TenantService:
         bone — any exception here must land in the ticket, never strand
         it."""
         try:
-            exc = sub.exception()
-            if exc is not None:
-                self._finish(req, None, exc)
-                return
-            res = sub.result()
-            with self._lock:
-                sess = self._sessions[req.tenant]
-                if isinstance(prep, PreparedUpdate):
-                    sess.commit_update(self._STREAM, prep, res)
-                elif req.kind == "register":
-                    sess.streams[self._STREAM] = StreamState(
-                        graph=prep, labels=res.labels)
-                else:  # refresh: same graph, fresh cold labels
-                    st = sess.streams[self._STREAM]
-                    st.labels = res.labels
-                self._account_warm(req.tenant)
-            self._finish(req, res, None)
+            with span("serve.settle", kind=req.kind):
+                exc = sub.exception()
+                if exc is not None:
+                    self._finish(req, None, exc)
+                    return
+                res = sub.result()
+                with self._lock:
+                    sess = self._sessions[req.tenant]
+                    if isinstance(prep, PreparedUpdate):
+                        sess.commit_update(self._STREAM, prep, res)
+                    elif req.kind == "register":
+                        sess.streams[self._STREAM] = StreamState(
+                            graph=prep, labels=res.labels)
+                    else:  # refresh: same graph, fresh cold labels
+                        st = sess.streams[self._STREAM]
+                        st.labels = res.labels
+                    self._account_warm(req.tenant)
+                self._finish(req, res, None)
         except BaseException as e:
             self._finish(req, None, e)
 
@@ -318,9 +341,13 @@ class TenantService:
             if exc is None:
                 self.completed += 1
                 self._latencies.append(req.ticket.latency_s)
+                self._m_completed.inc()
+                self._h_latency.observe(req.ticket.latency_s * 1e3)
             else:
                 self.failed += 1
+                self._m_failed.inc()
             self._outstanding -= 1
+            self._g_outstanding.set(self._outstanding)
             self._done_cond.notify_all()
         # release before resolving: the tenant's next queued request can
         # start coalescing into the batch the client's reaction would miss
@@ -348,6 +375,7 @@ class TenantService:
                 # nothing left to spill: this tenant runs cold next time
                 st.labels = None
                 self.uncached += 1
+                self._m_uncached.inc()
                 return
             self._spill(victim)
         self._warm_lru[tenant] = nbytes   # most-recently served
@@ -359,6 +387,7 @@ class TenantService:
         if st is not None:
             st.labels = None              # cold next update; still correct
         self.spills += 1
+        self._m_spills.inc()
 
     # --- snapshot / restore ---
 
@@ -434,6 +463,8 @@ class TenantService:
                 self._sessions[tenant] = sess
                 self._account_warm(tenant)
                 self.restored += 1
+                self._m_restored.inc()
+                self._g_tenants.set(len(self._sessions))
             report["restored"].append(tenant)
         return report
 

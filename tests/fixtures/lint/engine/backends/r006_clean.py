@@ -1,0 +1,33 @@
+"""R006 negative fixture: legal stage-boundary telemetry.
+
+Timing *around* the sweep loop, jax ``.at[...].set`` in traced code, and
+telemetry in plain host helpers are all fine.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def traced_profile_buffer(labels, buf, row):
+    # device-side profile write: .set is the jax update idiom, not a gauge
+    buf = buf.at[row].set(labels.sum())
+    return labels, buf
+
+
+def run_stage_boundary_timing(plan, graph, labels, active):
+    t0 = time.perf_counter()
+    it = 0
+    while it < 10:
+        labels, active, dn = plan.step(graph, labels, active)
+        it += 1
+    lpa_seconds = time.perf_counter() - t0
+    return labels, lpa_seconds
+
+
+def host_helper_metrics(counter, values):
+    # no sweep dispatch in this loop: plain host bookkeeping is legal
+    for v in values:
+        counter.inc()
+    return jnp.asarray(values)

@@ -1,0 +1,37 @@
+"""R006 positive fixture: telemetry inside jitted / per-sweep code.
+
+Never imported — the lint tests feed this file's *source* through the
+analyzer and assert the EXPECT-marked lines are flagged.
+"""
+import time
+
+import jax
+
+
+@jax.jit
+def traced_with_timer(labels, active):
+    t0 = time.perf_counter()  # EXPECT-R006
+    return labels.sum() + active.sum() + t0
+
+
+@jax.jit
+def traced_with_metric(labels, counter):
+    counter.inc()  # EXPECT-R006
+    return labels.sum()
+
+
+def run_with_per_sweep_timing(plan, graph, labels, active):
+    it = 0
+    while it < 10:
+        t0 = time.perf_counter()  # EXPECT-R006
+        labels, active, dn = plan.step(graph, labels, active)
+        sweep_seconds = time.perf_counter() - t0  # EXPECT-R006
+        it += 1
+    return labels, sweep_seconds
+
+
+def run_with_per_sweep_span(plan, graph, labels, active, span):
+    for it in range(10):
+        with span("sweep", it=it):  # EXPECT-R006
+            labels, active, dn = plan.step(graph, labels, active)
+    return labels

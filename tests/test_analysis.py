@@ -62,10 +62,10 @@ def test_negative_fixture_stays_clean(path):
     assert lint_paths([path]) == []
 
 
-def test_all_five_rules_covered_by_fixtures():
+def test_all_rules_covered_by_fixtures():
     seen = {r for p in POSITIVE for r, _ in _expected(p)}
     assert seen == {r.id for r in all_rules()} \
-        == {"R001", "R002", "R003", "R004", "R005"}
+        == {"R001", "R002", "R003", "R004", "R005", "R006"}
 
 
 def test_suppression_reported_not_active():
@@ -150,7 +150,7 @@ def test_cli_exit_codes(tmp_path, capsys):
     payload = json.loads(capsys.readouterr().out)
     assert payload["new"] == len(payload["findings"]) > 0
     rules = {f["rule"] for f in payload["findings"]}
-    assert rules == {"R001", "R002", "R003", "R004", "R005"}
+    assert rules == {"R001", "R002", "R003", "R004", "R005", "R006"}
 
 
 def test_cli_baseline_gates_strict(tmp_path):

@@ -187,10 +187,15 @@ def test_fit_many_pro_rata_timings_and_metrics():
     eng = fresh_engine(compute_metrics=True)
     results = eng.fit_many(graphs)
     for r in results:
-        assert set(r.timings) == {"prepare", "propagation", "split",
-                                  "compact"}
+        # work-share estimates carry explicit prorated_* keys; only the
+        # stages actually run per member (host split, compact) are real
+        assert set(r.timings) == {"prorated_prepare",
+                                  "prorated_propagation", "prorated_split",
+                                  "split", "compact"}
         assert r.modularity is not None
         assert r.disconnected_fraction == 0.0
+        # the aggregate properties fold both kinds in
+        assert r.lpa_seconds == r.timings["prorated_propagation"]
     # pro-rata shares reassemble (approximately) into the batch totals
-    total_prop = sum(r.timings["propagation"] for r in results)
+    total_prop = sum(r.timings["prorated_propagation"] for r in results)
     assert total_prop >= 0.0
