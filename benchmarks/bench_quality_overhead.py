@@ -1,0 +1,136 @@
+"""Quality-telemetry overhead gate: quality="basic" vs quality="off".
+
+``EngineConfig.quality`` is post-fit instrumentation: it reads the
+converged labels once per fit and never touches the sweep loop —
+``quality`` is deliberately absent from ``algo_key``, so all modes share
+one compiled executable.  "basic" is host-only (bincount sizes + churn);
+only "full" pays per-fit device passes (modularity ~ one extra sweep,
+plus the connectivity check).  This benchmark turns those design claims
+into numbers and a CI assert:
+
+  * the same store-cached ~1M-directed-edge RMAT graph as the ooc bench
+    (shared CSR-store CI cache key) is fit in-core with ``quality="off"``
+    and ``quality="basic"``;
+  * timings interleave the modes round-robin and take the per-mode
+    minimum, so drift on a noisy shared runner cancels instead of
+    landing on whichever mode ran last;
+  * asserted: labels + iteration counts bit-identical across modes,
+    the basic report actually materialises (community count matches),
+    and min-time overhead <= OVERHEAD_LIMIT (5%).
+
+A ``quality="full"`` row rides along unasserted-for-time (it adds the
+modularity + connectivity passes) but hard-asserts the paper's headline
+invariant: disconnected-community fraction exactly 0.0 at 1M-edge scale.
+
+    PYTHONPATH=src python benchmarks/bench_quality_overhead.py [BENCH_quality.json]
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+import numpy as np
+
+from bench_ooc_partition import STORE_KEY, ensure_store_entry
+from common import emit
+
+from repro.engine import CompileCache, Engine, EngineConfig
+from repro.io.store import CsrStore
+
+BACKEND = "segment"
+SPLIT = "lp"
+REPEATS = 5
+OVERHEAD_LIMIT = 0.05   # the acceptance bar: <= 5% for "basic"
+
+
+def main() -> None:
+    out_path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_quality.json"
+    store = CsrStore(os.environ.get("REPRO_GRAPH_CACHE"))
+    ensure_store_entry(store)
+    graph, _meta = store.load(STORE_KEY)
+
+    base = EngineConfig(backend=BACKEND, split=SPLIT)
+    modes = ("off", "basic", "full")
+    # one shared compile cache: quality is not in algo_key, so every
+    # mode must hit the same executable (part of what the gate measures)
+    cache = CompileCache()
+    engines = {m: Engine(dataclasses.replace(base, quality=m), cache=cache)
+               for m in modes}
+
+    # warm-up: trace + compile once; later fits are steady-state
+    results = {m: engines[m].fit(graph) for m in modes}
+    n = graph.n
+    print(f"[bench-quality] n={n} directed_edges={graph.num_edges} "
+          f"backend={BACKEND} split={SPLIT} repeats={REPEATS}")
+
+    # interleaved timing: one round = one fit per mode
+    times: dict[str, list[float]] = {m: [] for m in modes}
+    for _ in range(REPEATS):
+        for m in modes:
+            t0 = time.perf_counter()
+            results[m] = engines[m].fit(graph)
+            times[m].append(time.perf_counter() - t0)
+    best = {m: min(times[m]) for m in modes}
+
+    # parity + report-materialisation gates
+    ref = results["off"]
+    for m in ("basic", "full"):
+        r = results[m]
+        assert np.array_equal(r.labels, ref.labels), \
+            f"quality={m} changed labels"
+        assert r.lpa_iterations == ref.lpa_iterations, \
+            f"quality={m} changed iteration count"
+        assert r.quality is not None and \
+            r.quality.num_communities == r.num_communities, m
+    assert ref.quality is None, 'quality="off" must attach nothing'
+    assert results["basic"].quality.modularity is None, \
+        'quality="basic" must stay host-only (no modularity pass)'
+    assert results["full"].quality.modularity is not None
+    # the headline invariant, asserted at scale through the full report
+    disc = results["full"].quality.disconnected_fraction
+    assert disc == 0.0, (
+        f"disconnected-community fraction {disc} != 0.0 on the 1M-edge "
+        f"graph — the paper's invariant broke")
+
+    overhead = best["basic"] / best["off"] - 1.0
+    overhead_full = best["full"] / best["off"] - 1.0
+    print(f"[bench-quality] off={best['off']:.4f}s "
+          f"basic={best['basic']:.4f}s ({overhead:+.2%}) "
+          f"full={best['full']:.4f}s ({overhead_full:+.2%}) "
+          f"Q={results['full'].quality.modularity:.4f} disconnected={disc}")
+    assert overhead <= OVERHEAD_LIMIT, (
+        f'quality="basic" overhead {overhead:.2%} exceeds '
+        f"{OVERHEAD_LIMIT:.0%} (off={best['off']:.4f}s, "
+        f"basic={best['basic']:.4f}s)")
+
+    m_edges = graph.num_edges
+    rows = [
+        {"bench": f"fit_quality_{m}", "mode": m, "seconds": best[m],
+         "backend": BACKEND, "split": SPLIT, "n": n, "edges": m_edges,
+         "edges_per_s": round(m_edges / best[m], 1),
+         "lpa_iterations": results[m].lpa_iterations,
+         "communities": results[m].num_communities,
+         "modularity": (round(results[m].quality.modularity, 6)
+                        if results[m].quality else None),
+         "disconnected_fraction": (
+             results[m].quality.disconnected_fraction
+             if results[m].quality else None),
+         "overhead_vs_off_pct": round(
+             (best[m] / best["off"] - 1.0) * 100, 2),
+         "overhead_limit_pct": OVERHEAD_LIMIT * 100}
+        for m in modes
+    ]
+    emit(rows, "quality")
+    with open(out_path, "w") as fh:
+        json.dump(rows, fh, indent=2)
+    print(f"[bench-quality] wrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

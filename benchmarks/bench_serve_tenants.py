@@ -7,18 +7,28 @@ micro-batcher, bounded admission with per-tenant round-robin fairness —
 and reports the SLO surface: sustained aggregate edges/s, p50/p99
 request latency, queue depth, rejection rate, warm-memory peak.
 
-Three phases, each asserted (JSON artifact joins the bench-trend file):
+The shared engine runs with ``quality="full"``, so every served fit
+feeds the per-tenant health timelines — the headline run also asserts
+the paper's invariant end to end: disconnected-community fraction 0.0
+on every tenant's latest sample.
+
+Four phases, each asserted (JSON artifact joins the bench-trend file):
 
   * ``slo_load``  — the headline K-tenant run.  Hard liveness bar: zero
     stranded requests (every admitted request resolves), zero failures,
     zero client give-ups; warm-cache bytes never exceed the configured
-    budget (the shared ledger's peak is the proof).
+    budget (the shared ledger's peak is the proof); every tenant's
+    quality timeline reads disconnected fraction 0.0.
   * ``spill_pressure`` — same traffic, warm budget sized below the
     tenant set: least-recently-served tenants' warm labels must spill
     (cold-but-correct next update) instead of busting the budget.
   * ``restore_warm`` — snapshot the tenant set, "restart" onto a fresh
     engine, restore, apply one more delta per tenant: restored-warm
     iteration counts must come in strictly under cold re-detection.
+  * ``metrics_endpoint`` — scrape a live :class:`repro.obs.MetricsServer`
+    during a tenant load and run the strict text-format parser over the
+    response: the health disconnected-fraction gauge must read 0.0 and
+    the latency histograms must carry exemplar span ids.
 
     PYTHONPATH=src python benchmarks/bench_serve_tenants.py [out.json]
 """
@@ -73,6 +83,7 @@ def bench_slo_load(engine) -> list[dict]:
     svc = _service(engine)
     try:
         _records, s = run_load(svc, build_traces(cfg), cfg)
+        health = svc.stats()["health"]
     finally:
         svc.close()
 
@@ -86,10 +97,19 @@ def bench_slo_load(engine) -> list[dict]:
         f"warm ledger peaked at {s['warm_bytes_peak']}B over the "
         f"{s['warm_budget']}B budget")
     assert s["spills"] == 0, "headline run is sized to never spill"
+    # the paper's invariant, live across all K tenants' served fits
+    assert len(health["tenants"]) == TENANTS, health.keys()
+    worst_disc = max(t["last"]["disconnected_fraction"]
+                     for t in health["tenants"].values())
+    assert worst_disc == 0.0, (
+        f"disconnected-community fraction {worst_disc} != 0.0 across "
+        f"the {TENANTS}-tenant harness")
+    assert "disconnected" not in health["alert_counts"], health
     print(f"[bench-serve-tenants] {s['tenants']} tenants x "
           f"{1 + s['rounds']} requests: {s['edges_per_s']:.0f} edges/s, "
           f"p50 {s['p50_ms']:.1f}ms p99 {s['p99_ms']:.1f}ms, "
-          f"rejection rate {s['rejection_rate']:.1%}, 0 stranded: OK")
+          f"rejection rate {s['rejection_rate']:.1%}, 0 stranded, "
+          f"disconnected 0.0 on {len(health['tenants'])} timelines: OK")
     return [{
         "bench": "slo_load", "seconds": s["wall_s"],
         "tenants": s["tenants"], "requests": s["requests"],
@@ -104,6 +124,8 @@ def bench_slo_load(engine) -> list[dict]:
         "stranded": s["stranded"], "failed": s["failed"],
         "warm_bytes_peak": s["warm_bytes_peak"],
         "warm_budget": s["warm_budget"],
+        "health_tenants": len(health["tenants"]),
+        "worst_disconnected_fraction": worst_disc,
     }]
 
 
@@ -188,12 +210,67 @@ def bench_restore_warm(engine) -> list[dict]:
     }]
 
 
+def bench_metrics_endpoint(engine) -> list[dict]:
+    """Scrape a live exporter mid-load and gate on the strict parser:
+    the exposition must parse, the health disconnected-fraction gauge
+    must read 0.0, and latency histograms must carry exemplar span ids
+    linking slow buckets back to their trace spans."""
+    import urllib.request
+
+    from repro.obs import MetricsServer, parse_prometheus_text
+
+    cfg = LoadConfig(tenants=8, rounds=2, size=SIZE,
+                     avg_degree=AVG_DEGREE, delta_edges=DELTA_EDGES,
+                     refresh_every=0, parity_tenants=0,
+                     client_threads=4, seed=77)
+    svc = _service(engine)
+    t0 = time.perf_counter()
+    with MetricsServer(port=0) as srv:      # exports the global registry
+        try:
+            _records, s = run_load(svc, build_traces(cfg), cfg)
+            with urllib.request.urlopen(srv.url + "/metrics",
+                                        timeout=30) as resp:
+                assert resp.headers.get("Content-Type",
+                                        "").startswith("text/plain")
+                text = resp.read().decode()
+        finally:
+            svc.close()
+    scrape_s = time.perf_counter() - t0
+    assert s["stranded"] == 0 and s["failed"] == 0
+
+    parsed = parse_prometheus_text(text)    # raises on any grammar drift
+    disc = [samples for name, samples in parsed.items()
+            if name.endswith("health_disconnected_fraction")]
+    assert disc, "health disconnected-fraction gauge missing from scrape"
+    assert all(smp["value"] == 0.0 for samples in disc for smp in samples)
+    exemplars = [smp["exemplar"]
+                 for name, samples in parsed.items()
+                 if name.endswith("latency_ms_bucket")
+                 for smp in samples if smp["exemplar"] is not None]
+    assert exemplars, "no exemplars on any latency histogram bucket"
+    assert all("span_id" in ex["labels"] and int(ex["labels"]["span_id"]) > 0
+               for ex in exemplars)
+    print(f"[bench-serve-tenants] metrics endpoint: {len(parsed)} metric "
+          f"families parsed, disconnected 0.0, {len(exemplars)} latency "
+          f"exemplars with span ids: OK")
+    return [{
+        "bench": "metrics_endpoint", "seconds": scrape_s,
+        "tenants": cfg.tenants, "metric_families": len(parsed),
+        "latency_exemplars": len(exemplars),
+        "worst_disconnected_fraction": 0.0,
+    }]
+
+
 def main() -> None:
     out_path = sys.argv[1] if len(sys.argv) > 1 else "serve_tenants.json"
-    engine = Engine(EngineConfig(backend=BACKEND), cache=CompileCache())
+    # full quality telemetry on the shared engine: the harness doubles as
+    # the live end-to-end check of the paper's no-disconnected invariant
+    engine = Engine(EngineConfig(backend=BACKEND, quality="full"),
+                    cache=CompileCache())
     rows = bench_slo_load(engine)
     rows += bench_spill_pressure(engine)
     rows += bench_restore_warm(engine)
+    rows += bench_metrics_endpoint(engine)
     emit(rows, "serve_tenants")
     with open(out_path, "w") as f:
         json.dump(rows, f, indent=2)

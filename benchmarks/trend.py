@@ -100,6 +100,24 @@ def summarize(name: str, payload) -> str:
             if rest:
                 parts.append(f"restore {rest.get('warm_iters')}/"
                              f"{rest.get('cold_iters')} warm/cold iters")
+            ep = by.get("metrics_endpoint")
+            if ep:
+                parts.append(f"scrape {ep.get('metric_families')} families "
+                             f"{ep.get('latency_exemplars')} exemplars "
+                             f"disc={_fmt(ep.get('worst_disconnected_fraction'))}")
+            return ", ".join(parts)
+    if name == "BENCH_quality" and isinstance(payload, list):
+        by = {r.get("mode"): r for r in payload if isinstance(r, dict)}
+        basic, full = by.get("basic"), by.get("full")
+        if basic:
+            parts = [f"basic {basic.get('overhead_vs_off_pct'):+.2f}% "
+                     f"vs off (limit "
+                     f"{_fmt(basic.get('overhead_limit_pct', 0))}%)"]
+            if full:
+                parts.append(f"full {full.get('overhead_vs_off_pct'):+.2f}% "
+                             f"Q={_fmt(full.get('modularity', 0))} "
+                             f"disc={_fmt(full.get('disconnected_fraction'))}")
+            parts.append(f"{_fmt(basic.get('edges_per_s', 0))} edges/s")
             return ", ".join(parts)
     if name == "BENCH_obs_overhead" and isinstance(payload, list):
         by = {r.get("mode"): r for r in payload if isinstance(r, dict)}

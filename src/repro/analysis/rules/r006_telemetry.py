@@ -47,6 +47,14 @@ _METRIC_METHODS = {"inc", "observe"}
 # Registry roots: REGISTRY.counter(...), scope.histogram(...), etc.
 _REGISTRY_ROOTS = {"REGISTRY", "registry"}
 _REGISTRY_METHODS = {"counter", "gauge", "histogram", "scope"}
+# Quality hooks (repro.obs.quality + DetectionResult.check_connected):
+# host-side reductions over the *final* labels by contract — inside a
+# traced function they burn a trace-time device pass into the
+# executable; inside a sweep loop they pay a full modularity /
+# connectivity pass per sweep.  They run once, post-convergence, at the
+# stage boundary the engine already owns.
+_QUALITY_CALLS = {"compute_quality", "record_report", "label_churn",
+                  "check_connected"}
 
 
 def _telemetry_call(node: ast.Call) -> str | None:
@@ -56,8 +64,12 @@ def _telemetry_call(node: ast.Call) -> str | None:
         return f"host timer {name}()"
     if name in _SPAN_CALLS:
         return f"tracer span {name}()"
+    if name in _QUALITY_CALLS:
+        return f"quality hook {name}()"
     if isinstance(node.func, ast.Attribute):
         attr = node.func.attr
+        if attr in _QUALITY_CALLS:
+            return f"quality hook .{attr}()"
         if attr in _METRIC_METHODS:
             return f"metric write .{attr}()"
         root = dotted_name(node.func.value)

@@ -17,6 +17,7 @@ BUCKETING = ("pow2", "exact")
 WARM_START = ("off", "auto")
 FUSE_SWEEPS = ("auto", "on", "off")
 PROFILE = ("off", "convergence", "full")
+QUALITY = ("off", "basic", "full")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,6 +85,18 @@ class EngineConfig:
       it), and no host sync enters the hot loop.  The flag is a plan
       static (part of ``algo_key()``), so ``"off"`` keeps today's exact
       executables.  Results surface as ``DetectionResult.profile``.
+    quality: per-fit result-quality telemetry depth (``repro.obs.quality``).
+      ``"basic"`` reports modularity (one device segment-sum pass over the
+      final labels), community count, a community-size summary, and label
+      churn vs the warm-start assignment; ``"full"`` adds the
+      disconnected-community fraction (reuses ``check_connected``'s cached
+      pass — the paper's headline invariant, live).  All of it runs *after*
+      convergence on the final labels, so — unlike ``profile`` — the knob is
+      NOT part of ``algo_key()``: every quality mode shares the ``"off"``
+      executables and labels/iteration counts are bit-identical by
+      construction (the parity suite pins it).  Reports land on
+      ``DetectionResult.quality`` and in the metrics registry under the
+      engine scope's ``quality.*`` names.
     """
     backend: str = "auto"
     tau: float = 0.05
@@ -107,6 +120,7 @@ class EngineConfig:
     fuse_sweeps: str = "auto"
     mesh: Any = None
     profile: str = "off"
+    quality: str = "off"
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -127,6 +141,9 @@ class EngineConfig:
         if self.profile not in PROFILE:
             raise ValueError(f"profile must be one of {PROFILE}, "
                              f"got {self.profile!r}")
+        if self.quality not in QUALITY:
+            raise ValueError(f"quality must be one of {QUALITY}, "
+                             f"got {self.quality!r}")
         if self.exchange_every < 1:
             raise ValueError("exchange_every must be >= 1")
         if self.warm_cache_size < 1:
@@ -177,6 +194,14 @@ class DetectionResult:
     # a :class:`repro.obs.ConvergenceProfile` with the per-sub-sweep
     # frontier/changed curves.  None when profiling is off.
     profile: Any = None
+    # Per-fit quality report (``EngineConfig.quality != "off"``): a
+    # :class:`repro.obs.QualityReport` — modularity, community sizes,
+    # churn vs the warm-start assignment, disconnected fraction ("full").
+    quality: Any = None
+    # Fingerprint of the graph the cached ``disconnected_fraction``
+    # was computed against (see ``check_connected``).
+    _connected_fp: Any = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def check_connected(self, graph) -> float:
         """Disconnected-community fraction, computed lazily and cached.
@@ -187,13 +212,22 @@ class DetectionResult:
         (``compute_metrics=True`` also reports modularity).  ``graph``
         must be the graph this result was fitted on — the result itself
         only holds labels.
+
+        The cache keys on the graph's structural fingerprint: repeated
+        calls with the same graph (invariant suites, ``quality="full"``
+        telemetry, serving health checks) pay the device pass once, and
+        a call with a *different* graph recomputes instead of returning
+        a stale fraction.
         """
-        if self.disconnected_fraction is None:
+        from repro.core.graph import graph_fingerprint
+        fp = graph_fingerprint(graph)
+        if self.disconnected_fraction is None or self._connected_fp != fp:
             import jax.numpy as jnp
 
             from repro.core.detect import disconnected_fraction
             self.disconnected_fraction = float(
                 disconnected_fraction(graph, jnp.asarray(self.labels)))
+            self._connected_fp = fp
         return self.disconnected_fraction
 
     @property

@@ -172,6 +172,10 @@ class Engine:
                                 scope=self._obs)
         self._m_fits = self._obs.counter("fits")
         self._m_batch_fits = self._obs.counter("batch_fits")
+        # Quality telemetry scope ("engine.quality.*") — claimed eagerly
+        # so concurrent fits never race a lazy scope() call.
+        self._q_obs = self._obs.scope("quality") \
+            if self.config.quality != "off" else None
 
     # --- warm-start resolution ---
 
@@ -304,6 +308,11 @@ class Engine:
             partitions=run.num_partitions, ooc=run.stats(),
             profile=getattr(run, "profile", None),
         )
+        if cfg.quality != "off":
+            # Host-only report: the full graph never sits on the device
+            # out-of-core, so modularity and the disconnected fraction
+            # stay None here; sizes / count / churn still flow.
+            self._attach_quality(result, None, init_labels)
         if fp is not None:
             self._warm.put(fp, result.labels)
         return result
@@ -362,6 +371,8 @@ class Engine:
         )
         if cfg.compute_metrics:
             self._attach_metrics(result, graph)
+        if cfg.quality != "off":
+            self._attach_quality(result, graph, init_labels)
         return result
 
     def _attach_metrics(self, result: DetectionResult, graph: Graph) -> None:
@@ -369,6 +380,42 @@ class Engine:
         result.modularity = float(
             modularity(graph, jnp.asarray(result.labels)))
         result.check_connected(graph)
+
+    def _attach_quality(self, result: DetectionResult, graph,
+                        prev_labels) -> None:
+        """Post-fit quality telemetry (``EngineConfig.quality != "off"``).
+
+        Runs strictly *after* convergence, on the final labels at a host
+        stage boundary — it can never perturb the sweep loop, which is
+        why ``quality`` stays out of ``algo_key()`` and labels/iteration
+        counts are bit-identical across modes.  ``prev_labels`` is the
+        resolved warm-start assignment (the previous fit of this
+        fingerprint/tenant in steady state) — the churn baseline.
+        ``graph=None`` produces the host-only report of the out-of-core
+        path.
+
+        Cost tiering: "basic" is host-only (bincount sizes + churn —
+        negligible next to a fit, the <=5% CI gate measures it); only
+        "full" pays the per-fit device passes (modularity ~ one extra
+        sweep, connectivity via the fingerprint-cached
+        ``check_connected``).
+        """
+        cfg = self.config
+        from repro.obs.quality import compute_quality, record_report
+        with span("engine.quality", mode=cfg.quality):
+            full = cfg.quality == "full"
+            if full and graph is not None:
+                result.check_connected(graph)  # fingerprint-cached pass
+            result.quality = compute_quality(
+                result.labels, mode=cfg.quality,
+                graph=graph if full else None,
+                prev_labels=prev_labels,
+                num_communities=result.num_communities,
+                modularity=result.modularity,
+                disconnected_fraction=result.disconnected_fraction)
+            if result.modularity is None:
+                result.modularity = result.quality.modularity
+            record_report(self._q_obs, result.quality)
 
     # --- batched fit ---
 
@@ -520,6 +567,8 @@ class Engine:
                 )
                 if cfg.compute_metrics:
                     self._attach_metrics(result, graph)
+                if cfg.quality != "off":
+                    self._attach_quality(result, graph, labels_r[i])
                 results.append(result)
         self._m_batch_fits.inc()
         self._m_fits.inc(len(graphs))

@@ -248,15 +248,19 @@ class MicroBatcher:
                 s._future.set_exception(e)
             return
         now = time.perf_counter()
-        self.batch_sizes.append(len(batch))
-        self._m_batches.inc()
-        self._h_batch.observe(len(batch))
-        for s, res in zip(batch, results):
-            s.latency_s = now - s.submitted
-            s.batch_size = len(batch)
-            self._latencies.append(s.latency_s)
-            self._h_latency.observe(s.latency_s * 1e3)
-            s._future.set_result(res)
+        # Settlement under its own span so the latency histogram's
+        # exemplars carry a span id (done-callbacks — e.g. the serving
+        # tier's settle path — run inside it, on this worker thread).
+        with span("batch.settle", size=len(batch)):
+            self.batch_sizes.append(len(batch))
+            self._m_batches.inc()
+            self._h_batch.observe(len(batch))
+            for s, res in zip(batch, results):
+                s.latency_s = now - s.submitted
+                s.batch_size = len(batch)
+                self._latencies.append(s.latency_s)
+                self._h_latency.observe(s.latency_s * 1e3)
+                s._future.set_result(res)
 
     # --- observability ---
 

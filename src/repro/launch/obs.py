@@ -1,5 +1,6 @@
 """Observability CLI: run a workload, dump the unified metrics
-registry, export spans as a Chrome trace, print convergence profiles.
+registry, export spans as a Chrome trace, print convergence profiles,
+or watch a live metrics endpoint top-style.
 
     python -m repro.launch.obs                      # quick fit + registry dump
     python -m repro.launch.obs --profile full       # + split-phase curve
@@ -7,16 +8,23 @@ registry, export spans as a Chrome trace, print convergence profiles.
     python -m repro.launch.obs --workload audit     # every dispatch family
     python -m repro.launch.obs --trace trace.json   # chrome://tracing / Perfetto
     python -m repro.launch.obs --json obs.json      # machine-readable snapshot
+    python -m repro.launch.obs --workload top \\
+        --endpoint http://127.0.0.1:9100            # live snapshot loop
 
 The trace JSON loads directly into ``chrome://tracing`` or
 https://ui.perfetto.dev; the registry dump is the same ``snapshot()``
-surface every component's ``stats()`` dict is a view of.
+surface every component's ``stats()`` dict is a view of.  The ``top``
+workload polls a ``serve --metrics-port`` endpoint's ``/metrics.json``
+(or the in-process registry, for tests) and renders the busiest metrics
+sorted by activity — histograms by observation count, counters/gauges by
+value.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import sys
+import time
 
 from repro.obs import REGISTRY, TRACER
 
@@ -61,13 +69,75 @@ def _audit_workload(a) -> dict:
     return {"coverage": coverage}
 
 
+def _activity(value) -> float:
+    """Sort key for top mode: histograms by count, scalars by magnitude."""
+    if isinstance(value, dict):
+        return float(value.get("count", 0))
+    try:
+        return abs(float(value))
+    except (TypeError, ValueError):
+        return 0.0
+
+
+def render_top(snapshot: dict, limit: int = 20) -> str:
+    """One top-style frame over a registry snapshot dict."""
+    rows = sorted(snapshot.items(), key=lambda kv: (-_activity(kv[1]), kv[0]))
+    lines = [f"{'metric':<48} {'value/count':>12} {'mean':>10} {'p99':>10}"]
+    for name, v in rows[:limit]:
+        if isinstance(v, dict):  # histogram summary
+            lines.append(f"{name:<48} {v['count']:>12} "
+                         f"{v['mean']:>10.4g} {v['p99']:>10.4g}")
+        else:
+            sv = f"{v:.6g}" if isinstance(v, float) else str(v)
+            lines.append(f"{name:<48} {sv:>12} {'-':>10} {'-':>10}")
+    if len(rows) > limit:
+        lines.append(f"... {len(rows) - limit} more metrics")
+    return "\n".join(lines)
+
+
+def run_top(endpoint: str | None = None, every_s: float = 2.0,
+            iterations: int = 0, limit: int = 20, registry=None,
+            out=print) -> int:
+    """Live snapshot loop (``--workload top``).
+
+    ``endpoint`` polls a :class:`repro.obs.MetricsServer`'s
+    ``/metrics.json`` route; without one the in-process registry is
+    rendered (what a test or an embedded run wants).  ``iterations=0``
+    loops until interrupted.  Returns the number of frames rendered.
+    """
+    frames = 0
+    while True:
+        if endpoint is not None:
+            import urllib.request
+            with urllib.request.urlopen(
+                    endpoint.rstrip("/") + "/metrics.json",
+                    timeout=10) as resp:
+                snapshot = json.loads(resp.read().decode())
+        else:
+            snapshot = (registry if registry is not None
+                        else REGISTRY).snapshot()
+        frames += 1
+        src = endpoint or "in-process registry"
+        out(f"[obs top] frame {frames} ({src}, {len(snapshot)} metrics)")
+        out(render_top(snapshot, limit))
+        if iterations and frames >= iterations:
+            return frames
+        try:
+            time.sleep(every_s)
+        except KeyboardInterrupt:
+            return frames
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.launch.obs",
         description=__doc__.splitlines()[0])
-    ap.add_argument("--workload", choices=("fit", "audit"), default="fit",
+    ap.add_argument("--workload", choices=("fit", "audit", "top"),
+                    default="fit",
                     help="fit: one profiled detection; audit: the full "
-                         "dispatch-family sweep from repro.analysis.workload")
+                         "dispatch-family sweep from repro.analysis.workload; "
+                         "top: live metric snapshots from --endpoint (or "
+                         "the in-process registry)")
     ap.add_argument("--graph", default=None, metavar="PATH",
                     help="fit workload: real graph file (.mtx / SNAP edge "
                          "list) instead of a synthetic one")
@@ -86,7 +156,22 @@ def main(argv=None) -> int:
                     help="write spans as Chrome-trace JSON")
     ap.add_argument("--json", dest="json_out", default=None, metavar="PATH",
                     help="write registry snapshot (+ profile) as JSON")
+    ap.add_argument("--endpoint", default=None, metavar="URL",
+                    help="top workload: serve --metrics-port base URL "
+                         "(polls /metrics.json); default: the in-process "
+                         "registry")
+    ap.add_argument("--every-s", type=float, default=2.0,
+                    help="top workload: refresh interval")
+    ap.add_argument("--iterations", type=int, default=0,
+                    help="top workload: frames to render (0 = until ^C)")
+    ap.add_argument("--limit", type=int, default=20,
+                    help="top workload: rows per frame")
     a = ap.parse_args(argv)
+
+    if a.workload == "top":
+        run_top(endpoint=a.endpoint, every_s=a.every_s,
+                iterations=a.iterations, limit=a.limit)
+        return 0
 
     extra = _audit_workload(a) if a.workload == "audit" else _fit_workload(a)
 

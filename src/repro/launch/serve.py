@@ -255,7 +255,8 @@ def serve_tenants(num_tenants: int = 16, rounds: int = 3,
                   max_batch: int = 8, batch_timeout_ms: float = 2.0,
                   queue_capacity: int = 32, warm_budget: str = "256KB",
                   client_threads: int = 8, seed: int = 0,
-                  snapshot_dir: str | None = None):
+                  snapshot_dir: str | None = None,
+                  quality: str = "off", slo_p99_ms: float | None = None):
     """Drive K concurrent tenants through the multi-tenant service tier.
 
     Each tenant is one evolving graph served by a per-tenant
@@ -269,26 +270,42 @@ def serve_tenants(num_tenants: int = 16, rounds: int = 3,
     latency, queue depth, rejection rate, warm-ledger peak) and, with
     ``snapshot_dir``, writes the tenants' warm state as an atomic
     checkpoint a restarted service can resume warm from.
+
+    ``quality`` wires :attr:`repro.engine.EngineConfig.quality` into the
+    shared engine, so every completed fit feeds the per-tenant quality
+    timelines (modularity / disconnected-fraction / churn drift alerts —
+    ``stats()["health"]``) on top of latency; ``slo_p99_ms`` arms the
+    p99-latency burn alert.
     """
     from repro.checkpoint.manager import CheckpointManager
     from repro.engine import Engine, EngineConfig
-    from repro.serve import ServiceConfig, TenantService
+    from repro.serve import HealthConfig, ServiceConfig, TenantService
     from repro.serve.loadgen import LoadConfig, build_traces, run_load
 
     cfg = LoadConfig(tenants=num_tenants, rounds=rounds, size=size,
                      avg_degree=avg_degree, delta_edges=delta_edges,
                      client_threads=client_threads, seed=seed)
-    eng = Engine(EngineConfig(backend=backend))
+    eng = Engine(EngineConfig(backend=backend, quality=quality))
     service = TenantService(eng, ServiceConfig(
         queue_capacity=queue_capacity, warm_budget=warm_budget,
-        max_batch=max_batch, batch_timeout_ms=batch_timeout_ms))
+        max_batch=max_batch, batch_timeout_ms=batch_timeout_ms,
+        health=HealthConfig(slo_p99_ms=slo_p99_ms)))
     records, summary = run_load(service, build_traces(cfg), cfg)
+    health = service.stats()["health"]
     if snapshot_dir is not None:
         manifest = service.snapshot(CheckpointManager(snapshot_dir))
         print(f"[serve-tenants] snapshot step {manifest['step']}: "
               f"{len(manifest['tenants'])} tenants -> {snapshot_dir}",
               flush=True)
     service.close()
+    summary["health"] = health
+    if quality != "off" or slo_p99_ms is not None:
+        lasts = [t["last"] for t in health["tenants"].values() if t["last"]]
+        worst_disc = max((s["disconnected_fraction"] or 0.0 for s in lasts),
+                         default=0.0)
+        print(f"[serve-tenants] health: {len(health['tenants'])} timelines, "
+              f"alerts {health['alert_counts'] or '{}'}, worst "
+              f"disconnected fraction {worst_disc:g}", flush=True)
     print(f"[serve-tenants] {summary['tenants']} tenants x "
           f"{summary['rounds']} rounds: {summary['completed']} requests "
           f"({summary['stranded']} stranded, {summary['rejections']} "
@@ -304,10 +321,15 @@ def serve_tenants(num_tenants: int = 16, rounds: int = 3,
 class _PeriodicStats(contextlib.AbstractContextManager):
     """Background reporter: prints the unified metrics registry every
     ``every_s`` seconds while a serving workload runs, plus one final
-    snapshot on exit (``--stats-every-s``)."""
+    snapshot on exit (``--stats-every-s``).  The final flush happens on
+    ``__exit__`` — after the workload completes — so it carries whatever
+    quality gauges the run populated.  An optional
+    :class:`repro.obs.JsonlSink` mirrors every dump as one machine-
+    readable line (``--metrics-jsonl``)."""
 
-    def __init__(self, every_s: float):
+    def __init__(self, every_s: float, sink=None):
         self._every = every_s
+        self._sink = sink
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._run, daemon=True,
                                         name="stats-reporter")
@@ -318,6 +340,8 @@ class _PeriodicStats(contextlib.AbstractContextManager):
         body = "\n".join("  " + line for line in text.splitlines()) \
             if text.strip() else "  (empty)"
         print(f"[stats {tag}]\n{body}", flush=True)
+        if self._sink is not None:
+            self._sink.emit(tag=tag)
 
     def _run(self) -> None:
         tick = 0
@@ -374,10 +398,32 @@ def main() -> None:
                     metavar="S",
                     help="print the unified metrics registry every S "
                          "seconds while serving (+ a final snapshot)")
+    ap.add_argument("--quality", default="off",
+                    choices=("off", "basic", "full"),
+                    help="tenants mode: per-fit quality telemetry depth "
+                         "(EngineConfig.quality) feeding the per-tenant "
+                         "drift timelines")
+    ap.add_argument("--slo-p99-ms", type=float, default=None,
+                    help="tenants mode: p99 latency SLO; burns raise "
+                         "health alerts")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve Prometheus text metrics over HTTP on this "
+                         "port while the workload runs (0 = ephemeral; "
+                         "also /metrics.json and /healthz)")
+    ap.add_argument("--metrics-jsonl", default=None, metavar="PATH",
+                    help="append registry snapshots as JSONL (one line per "
+                         "--stats-every-s tick + a final one)")
     a = ap.parse_args()
-    reporter = _PeriodicStats(a.stats_every_s) if a.stats_every_s \
-        else contextlib.nullcontext()
-    with reporter:
+
+    from repro.obs import JsonlSink, MetricsServer
+    sink = JsonlSink(a.metrics_jsonl) if a.metrics_jsonl else None
+    server = contextlib.nullcontext()
+    if a.metrics_port is not None:
+        server = MetricsServer(port=a.metrics_port)
+        print(f"[serve] metrics endpoint: {server.url}/metrics", flush=True)
+    reporter = _PeriodicStats(a.stats_every_s, sink=sink) \
+        if a.stats_every_s else contextlib.nullcontext()
+    with server, reporter:
         if a.mode == "tenants":
             serve_tenants(num_tenants=a.tenants, rounds=a.rounds,
                           delta_edges=a.delta_edges, backend=a.backend,
@@ -385,7 +431,8 @@ def main() -> None:
                           batch_timeout_ms=a.batch_timeout_ms,
                           queue_capacity=a.queue_capacity,
                           warm_budget=a.warm_budget,
-                          snapshot_dir=a.snapshot_dir)
+                          snapshot_dir=a.snapshot_dir,
+                          quality=a.quality, slo_p99_ms=a.slo_p99_ms)
         elif a.mode == "communities":
             serve_communities(num_requests=a.requests, backend=a.backend,
                               max_batch=a.max_batch,
@@ -400,6 +447,12 @@ def main() -> None:
             if not a.arch:
                 ap.error("--arch is required for --mode lm")
             serve(a.arch, batch=a.batch, max_new=a.max_new)
+    if sink is not None:
+        # guaranteed final flush, with or without --stats-every-s:
+        # everything the run recorded, quality gauges included
+        sink.emit(tag="shutdown")
+        sink.close()
+        print(f"[serve] metrics jsonl -> {a.metrics_jsonl}", flush=True)
 
 
 if __name__ == "__main__":

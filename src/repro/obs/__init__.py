@@ -13,6 +13,14 @@ Three surfaces, one import point:
   captured device-side (in-core) or at existing host sync points (ooc),
   surfaced as ``DetectionResult.profile`` behind
   ``EngineConfig.profile``.
+* :class:`QualityReport` / :func:`compute_quality` — per-fit result
+  quality (modularity, disconnected fraction, community sizes, label
+  churn) behind ``EngineConfig.quality``; host-side, post-convergence,
+  bit-parity-preserving.
+* :func:`prometheus_text` / :class:`MetricsServer` / :class:`JsonlSink`
+  — exporters: Prometheus text format (with span-id exemplars on
+  latency histograms), a stdlib HTTP scrape endpoint, and a JSONL file
+  sink.
 
 ``python -m repro.launch.obs`` dumps the registry and exports traces
 for a standard workload.
@@ -26,8 +34,22 @@ from repro.obs.convergence import (
     phase_from_buffer,
     phase_from_rows,
 )
+from repro.obs.export import (
+    JsonlSink,
+    MetricsServer,
+    parse_prometheus_text,
+    prometheus_text,
+)
+from repro.obs.quality import (
+    QualityReport,
+    canonical_labels,
+    compute_quality,
+    label_churn,
+    record_report,
+)
 from repro.obs.registry import (
     REGISTRY,
+    CappedCounterSet,
     Counter,
     Gauge,
     Histogram,
@@ -38,8 +60,12 @@ from repro.obs.trace import TRACER, Span, Tracer, span
 
 __all__ = [
     "REGISTRY", "MetricsRegistry", "Scope", "Counter", "Gauge", "Histogram",
+    "CappedCounterSet",
     "TRACER", "Tracer", "Span", "span",
     "ConvergenceProfile", "PhaseProfile",
     "empty_profile_buffer", "empty_batch_profile_buffer",
     "phase_from_buffer", "phase_from_batch_buffer", "phase_from_rows",
+    "QualityReport", "compute_quality", "label_churn", "canonical_labels",
+    "record_report",
+    "prometheus_text", "parse_prometheus_text", "MetricsServer", "JsonlSink",
 ]

@@ -24,6 +24,7 @@ Design constraints, in order:
 from __future__ import annotations
 
 import bisect
+import re
 import threading
 from collections import deque
 from typing import Any, Callable, Iterable
@@ -82,7 +83,8 @@ class Histogram:
     used to hold their own latency lists read them from here instead.
     """
 
-    __slots__ = ("_lock", "buckets", "_counts", "_sum", "_count", "_samples")
+    __slots__ = ("_lock", "buckets", "_counts", "_sum", "_count", "_samples",
+                 "_exemplars")
 
     def __init__(self, buckets: Iterable[float]):
         self.buckets = tuple(sorted(float(b) for b in buckets))
@@ -93,15 +95,32 @@ class Histogram:
         self._sum = 0.0
         self._count = 0
         self._samples: deque[float] = deque(maxlen=_RESERVOIR)
+        # Last (value, span_id) observed per bucket (incl. overflow) —
+        # OpenMetrics exemplars linking a latency bucket to the trace
+        # span that produced it.  Only kept when observe() ran inside a
+        # tracer span.
+        self._exemplars: list[tuple[float, int] | None] = \
+            [None] * (len(self.buckets) + 1)
 
     def observe(self, v: float) -> None:
         v = float(v)
         idx = bisect.bisect_left(self.buckets, v)
+        # Exemplar capture: one contextvar read; the tracer never calls
+        # back into the registry, so no lock-order hazard.
+        from repro.obs.trace import TRACER
+        cur = TRACER.current()
         with self._lock:
             self._counts[idx] += 1
             self._sum += v
             self._count += 1
             self._samples.append(v)
+            if cur is not None:
+                self._exemplars[idx] = (v, cur.span_id)
+
+    def exemplars(self) -> list[tuple[float, int] | None]:
+        """Per-bucket ``(value, span_id)`` exemplars (overflow last)."""
+        with self._lock:
+            return list(self._exemplars)
 
     @property
     def count(self) -> int:
@@ -209,12 +228,22 @@ class MetricsRegistry:
         return Scope(self, label)
 
     def _release(self, label: str) -> None:
+        # Child labels ("serve.admission" under "serve") go too — else the
+        # next instance gets the bare parent label but "#1"-suffixed
+        # children, and absolute child-metric names silently alias.
         with self._lock:
-            self._labels.discard(label)
+            self._labels = {l for l in self._labels
+                            if l != label and not l.startswith(label + ".")}
             dead = [k for k in self._metrics
                     if k == label or k.startswith(label + ".")]
             for k in dead:
                 del self._metrics[k]
+
+    def metrics(self) -> dict[str, Any]:
+        """Shallow copy of ``name -> metric instance`` (exporters read the
+        live handles for bucket counts and exemplars the summary drops)."""
+        with self._lock:
+            return dict(self._metrics)
 
     def snapshot(self) -> dict[str, Any]:
         """Flat ``name -> value`` dict; histograms expand to summaries."""
@@ -244,6 +273,57 @@ class MetricsRegistry:
         with self._lock:
             self._metrics.clear()
             self._labels.clear()
+
+
+class CappedCounterSet:
+    """Bounded per-key counter family over an unbounded id space.
+
+    The first ``max_labels`` distinct keys each get their own counter
+    (``<scope>.<name>.<key>``); every later key shares one
+    ``<scope>.<name>.other`` overflow counter.  This is how per-tenant
+    counts enter the registry without per-tenant cardinality: tenant ids
+    are caller-chosen strings, and a registry must never absorb an
+    unbounded label space (the Prometheus exporter renders every name).
+    Exact per-key numbers stay available from the owning component's
+    ``stats()`` dict.
+    """
+
+    def __init__(self, scope: "Scope", name: str, max_labels: int = 16):
+        if max_labels < 1:
+            raise ValueError("max_labels must be >= 1")
+        self._scope = scope
+        self._name = name
+        self._max = max_labels
+        self._lock = threading.Lock()
+        self._handles: dict[str, Counter] = {}
+        self._other: Counter | None = None
+
+    def counter(self, key: Any) -> Counter:
+        k = str(key)
+        with self._lock:
+            h = self._handles.get(k)
+            if h is None:
+                if len(self._handles) < self._max:
+                    # Keys are metric-name segments: no dots (fake
+                    # hierarchy) or whitespace.
+                    safe = re.sub(r"[^A-Za-z0-9_\-]", "_", k)
+                    h = self._scope.counter(f"{self._name}.{safe}")
+                    self._handles[k] = h
+                else:
+                    if self._other is None:
+                        self._other = self._scope.counter(
+                            f"{self._name}.other")
+                    h = self._other
+            return h
+
+    def inc(self, key: Any, n: int = 1) -> None:
+        self.counter(key).inc(n)
+
+    @property
+    def tracked(self) -> tuple[str, ...]:
+        """Keys that own a dedicated counter (≤ ``max_labels``)."""
+        with self._lock:
+            return tuple(self._handles)
 
 
 # The process-global root every component defaults to.  Tests that need

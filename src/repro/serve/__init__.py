@@ -1,9 +1,17 @@
 """Multi-tenant serving tier: admission, fairness, warm-state budget,
-snapshot/restore — N concurrent tenants over one shared Engine.
+snapshot/restore, per-tenant quality/SLO health — N concurrent tenants
+over one shared Engine.
 
     from repro.serve import TenantService, ServiceConfig, Rejected
 """
 from repro.serve.admission import AdmissionQueue, Rejected
+from repro.serve.health import (
+    Alert,
+    HealthConfig,
+    HealthMonitor,
+    QualitySample,
+    TenantTimeline,
+)
 from repro.serve.service import ServiceConfig, TenantService, TenantTicket
 
 __all__ = [
@@ -12,4 +20,9 @@ __all__ = [
     "ServiceConfig",
     "TenantService",
     "TenantTicket",
+    "Alert",
+    "HealthConfig",
+    "HealthMonitor",
+    "QualitySample",
+    "TenantTimeline",
 ]

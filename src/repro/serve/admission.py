@@ -49,10 +49,13 @@ class AdmissionQueue:
     capacity: hard bound on queued (not yet taken) requests across all
       tenants; ``offer`` past it raises :class:`Rejected`.
     retry_after_s: the hint attached to rejections.
+    served_label_cap: how many tenants get a dedicated
+      ``served.<tenant>`` registry counter; later tenants share
+      ``served.other`` (see :class:`repro.obs.CappedCounterSet`).
     """
 
     def __init__(self, capacity: int, retry_after_s: float = 0.05,
-                 scope=None):
+                 scope=None, served_label_cap: int = 16):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         self.capacity = int(capacity)
@@ -68,9 +71,15 @@ class AdmissionQueue:
         self.accepted = 0
         self.rejected = 0
         self.served: Counter = Counter()   # tenant -> requests taken
-        # Registry write-through; the fields above stay authoritative
-        # (per-tenant served counts keep to stats() — tenant ids are an
-        # unbounded label space, which registries must never absorb).
+        # Registry write-through; the fields above stay authoritative.
+        # Per-tenant served counts enter the registry through a *capped*
+        # label space (first ``served_label_cap`` tenants get their own
+        # ``served.<tenant>`` counter, the rest share ``served.other``) —
+        # tenant ids are unbounded, registry cardinality must not be.
+        # Exact per-tenant numbers stay in ``stats()``.
+        from repro.obs import CappedCounterSet
+        self._served_metrics = CappedCounterSet(
+            scope, "served", max_labels=served_label_cap) if scope else None
         self._m_accepted = scope.counter("accepted") if scope else None
         self._m_rejected = scope.counter("rejected") if scope else None
         self._m_taken = scope.counter("taken") if scope else None
@@ -136,6 +145,8 @@ class AdmissionQueue:
                         self._m_taken.inc()
                         self._g_depth.set(self.depth)
                         self._g_held.set(len(self._held))
+                    if self._served_metrics is not None:
+                        self._served_metrics.inc(tenant)
                     return tenant, item
                 if self._closed and self.depth == 0:
                     return None

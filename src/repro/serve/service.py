@@ -59,6 +59,7 @@ from repro.launch.stream import PreparedUpdate, StreamSession, StreamState
 from repro.obs import REGISTRY, span
 from repro.partition.plan import parse_bytes
 from repro.partition.slices import MemoryLedger
+from repro.serve.health import HealthConfig, HealthMonitor, sample_from_result
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,6 +74,15 @@ class ServiceConfig:
     max_batch / batch_timeout_ms / backend: shared micro-batcher knobs.
     warm / frontier: per-tenant session semantics (see
       :class:`~repro.launch.stream.StreamSession`).
+    health: drift/SLO thresholds for the per-tenant quality timelines
+      (:class:`~repro.serve.health.HealthMonitor`).  Samples carry
+      quality fields only when the shared engine runs with
+      ``EngineConfig.quality != "off"``; latency SLO burn works either
+      way.
+    served_label_cap: how many tenants get a dedicated
+      ``admission.served.<tenant>`` registry counter before the rest
+      share ``admission.served.other`` (cardinality bound; exact
+      per-tenant counts stay in ``stats()``).
     """
     queue_capacity: int = 64
     retry_after_s: float = 0.05
@@ -82,6 +92,8 @@ class ServiceConfig:
     backend: str | None = None
     warm: bool = True
     frontier: bool = True
+    health: "HealthConfig | None" = None
+    served_label_cap: int = 16
 
 
 class TenantTicket:
@@ -141,7 +153,10 @@ class TenantService:
         from repro.serve.admission import AdmissionQueue
         self.admission = AdmissionQueue(cfg.queue_capacity,
                                         retry_after_s=cfg.retry_after_s,
-                                        scope=self._obs.scope("admission"))
+                                        scope=self._obs.scope("admission"),
+                                        served_label_cap=cfg.served_label_cap)
+        self.health = HealthMonitor(cfg.health or HealthConfig(),
+                                    scope=self._obs.scope("health"))
         budget = None if cfg.warm_budget is None \
             else parse_bytes(cfg.warm_budget)
         self.ledger = MemoryLedger(budget, scope=self._obs.scope("warm"))
@@ -349,6 +364,12 @@ class TenantService:
             self._outstanding -= 1
             self._g_outstanding.set(self._outstanding)
             self._done_cond.notify_all()
+        if exc is None:
+            # Feed the tenant's quality/SLO timeline (drift detection);
+            # outside self._lock — the monitor has its own, and per-tenant
+            # ordering holds because one request per tenant is in flight.
+            self.health.record(req.tenant, sample_from_result(
+                res, kind=req.kind, latency_ms=req.ticket.latency_s * 1e3))
         # release before resolving: the tenant's next queued request can
         # start coalescing into the batch the client's reaction would miss
         self.admission.release(req.tenant)
@@ -493,4 +514,5 @@ class TenantService:
             out.update(p50_ms=0.0, p99_ms=0.0, mean_ms=0.0)
         out["admission"] = self.admission.stats()
         out["batcher"] = self.batcher.stats()
+        out["health"] = self.health.stats()
         return out

@@ -31,3 +31,16 @@ def host_helper_metrics(counter, values):
     for v in values:
         counter.inc()
     return jnp.asarray(values)
+
+
+def run_quality_at_stage_boundary(plan, graph, labels, active,
+                                  compute_quality, record_report, scope):
+    # quality hooks *after* the sweep loop converges are the contract:
+    # one device pass over the final labels, at the engine's sync point
+    it = 0
+    while it < 10:
+        labels, active, dn = plan.step(graph, labels, active)
+        it += 1
+    report = compute_quality(labels, mode="basic", graph=graph)
+    record_report(scope, report)
+    return labels, report

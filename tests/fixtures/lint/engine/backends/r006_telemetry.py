@@ -35,3 +35,27 @@ def run_with_per_sweep_span(plan, graph, labels, active, span):
         with span("sweep", it=it):  # EXPECT-R006
             labels, active, dn = plan.step(graph, labels, active)
     return labels
+
+
+@jax.jit
+def traced_with_quality(labels, graph, compute_quality):
+    report = compute_quality(labels, mode="basic", graph=graph)  # EXPECT-R006
+    return labels.sum(), report
+
+
+def run_with_per_sweep_quality(plan, graph, labels, active, result):
+    it = 0
+    while it < 10:
+        labels, active, dn = plan.step(graph, labels, active)
+        result.check_connected(graph)  # EXPECT-R006
+        it += 1
+    return labels
+
+
+def run_with_per_sweep_churn(plan, graph, labels, active, prev):
+    from repro.obs.quality import label_churn
+    for it in range(10):
+        labels, active, dn = plan.step(graph, labels, active)
+        churn, k = label_churn(prev, labels)  # EXPECT-R006
+        prev = labels
+    return labels, churn, k

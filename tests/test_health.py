@@ -1,0 +1,246 @@
+"""Per-tenant health plane: quality timelines, drift/SLO alerts, and the
+bounded per-tenant registry counters.
+
+The alerts under test: ``modularity_drop`` (quality regressed faster
+than streaming drift explains), ``disconnected`` (the paper's headline
+invariant broke — must never fire on real fits, pinned at 0.0 through
+the live service below), and ``slo_burn`` (edge-triggered p99 latency
+excursions).  Tenant ids are an unbounded label space, so everything
+per-tenant enters the metrics registry only through
+:class:`repro.obs.CappedCounterSet` — the cap is tested here too.
+"""
+import numpy as np
+import pytest
+
+from repro.engine import CompileCache, Engine, EngineConfig
+from repro.graphgen import erdos_renyi
+from repro.obs import REGISTRY, CappedCounterSet, MetricsRegistry
+from repro.serve import (
+    HealthConfig,
+    HealthMonitor,
+    QualitySample,
+    ServiceConfig,
+    TenantService,
+    TenantTimeline,
+)
+from repro.serve.health import sample_from_result
+
+
+def sample(ts=0.0, kind="update", latency_ms=1.0, **kw):
+    return QualitySample(ts=ts, kind=kind, latency_ms=latency_ms, **kw)
+
+
+def fresh_engine(**kw):
+    return Engine(EngineConfig(**kw), cache=CompileCache())
+
+
+# --- config & timeline ---
+
+def test_health_config_validation():
+    HealthConfig()  # defaults are legal
+    with pytest.raises(ValueError):
+        HealthConfig(timeline_len=0)
+    with pytest.raises(ValueError):
+        HealthConfig(modularity_drop=0.0)
+    with pytest.raises(ValueError):
+        HealthConfig(slo_p99_ms=-1.0)
+    with pytest.raises(ValueError):
+        HealthConfig(latency_window=0)
+
+
+def test_timeline_ring_is_bounded():
+    tl = TenantTimeline(maxlen=4)
+    for i in range(10):
+        tl.append(sample(ts=float(i), latency_ms=float(i)))
+    assert tl.total == 10 and len(tl.samples) == 4
+    assert tl.last.ts == 9.0
+    d = tl.to_dict()
+    assert d["samples"] == 10 and d["window"] == 4
+    assert d["last"]["latency_ms"] == 9.0
+
+
+def test_timeline_p99_latency_window():
+    tl = TenantTimeline(maxlen=64)
+    for ms in (1.0,) * 20 + (100.0,):
+        tl.append(sample(latency_ms=ms))
+    assert tl.p99_latency(window=32) == 100.0
+    # a window that excludes the spike never sees it
+    for _ in range(40):
+        tl.append(sample(latency_ms=2.0))
+    assert tl.p99_latency(window=8) == 2.0
+
+
+# --- alerts ---
+
+def test_modularity_drop_alert_fires_on_threshold():
+    mon = HealthMonitor(HealthConfig(modularity_drop=0.05))
+    assert mon.record("t", sample(modularity=0.60)) == []
+    assert mon.record("t", sample(modularity=0.57)) == []   # within budget
+    fired = mon.record("t", sample(modularity=0.40))
+    assert [a.kind for a in fired] == ["modularity_drop"]
+    assert fired[0].value == pytest.approx(0.17)
+    # drop is measured against the *previous* sample, not the peak
+    assert mon.record("t", sample(modularity=0.39)) == []
+
+
+def test_disconnected_alert_fires_on_nonzero():
+    mon = HealthMonitor()
+    assert mon.record("t", sample(disconnected_fraction=0.0)) == []
+    fired = mon.record("t", sample(disconnected_fraction=0.25))
+    assert [a.kind for a in fired] == ["disconnected"]
+    assert fired[0].threshold == 0.0
+    assert "invariant" in fired[0].message
+
+
+def test_slo_burn_is_edge_triggered():
+    mon = HealthMonitor(HealthConfig(slo_p99_ms=10.0, latency_window=4))
+    assert mon.record("t", sample(latency_ms=5.0)) == []
+    burn = mon.record("t", sample(latency_ms=50.0))
+    assert [a.kind for a in burn] == ["slo_burn"]
+    # still burning: no duplicate alert while the excursion lasts
+    assert mon.record("t", sample(latency_ms=60.0)) == []
+    assert "t" in mon.stats()["burning"]
+    # recover (window rolls past the spikes), then burn again: re-armed
+    for _ in range(4):
+        assert mon.record("t", sample(latency_ms=1.0)) == []
+    assert mon.stats()["burning"] == []
+    again = mon.record("t", sample(latency_ms=99.0))
+    assert [a.kind for a in again] == ["slo_burn"]
+
+
+def test_monitor_stats_shape_and_registry_writes():
+    reg = MetricsRegistry()
+    mon = HealthMonitor(HealthConfig(slo_p99_ms=10.0, latency_window=2),
+                        scope=reg.scope("serve.health"))
+    mon.record("a", sample(modularity=0.5, disconnected_fraction=0.0))
+    mon.record("a", sample(modularity=0.2, latency_ms=99.0))
+    mon.record("b", sample(modularity=0.4))
+    st = mon.stats()
+    assert set(st) == {"tenants", "alert_counts", "alerts", "burning"}
+    assert set(st["tenants"]) == {"a", "b"}
+    assert st["tenants"]["a"]["samples"] == 2
+    assert st["alert_counts"] == {"modularity_drop": 1, "slo_burn": 1}
+    assert [a["kind"] for a in st["alerts"]] == ["modularity_drop",
+                                                 "slo_burn"]
+    snap = reg.snapshot()
+    assert snap["serve.health.samples"] == 3
+    assert snap["serve.health.tenants"] == 2
+    assert snap["serve.health.alerts_modularity_drop"] == 1
+    assert snap["serve.health.alerts_slo_burn"] == 1
+    assert snap["serve.health.modularity"] == pytest.approx(0.4)
+    assert snap["serve.health.disconnected_fraction"] == 0.0
+
+
+def test_alert_ring_is_bounded():
+    mon = HealthMonitor(HealthConfig(max_alerts=8))
+    for i in range(20):
+        mon.record(f"t{i}", sample(disconnected_fraction=0.5))
+    assert len(mon.alerts) == 8
+    assert mon.stats()["alert_counts"]["disconnected"] == 20
+
+
+def test_sample_from_result_reads_quality():
+    g = erdos_renyi(120, 5.0, seed=0)
+    res = fresh_engine(quality="full").fit(g)
+    s = sample_from_result(res, kind="register", latency_ms=3.5)
+    assert s.kind == "register" and s.latency_ms == 3.5
+    assert s.communities == res.num_communities
+    assert s.disconnected_fraction == 0.0
+    assert s.modularity == pytest.approx(res.quality.modularity)
+    # quality="off" results degrade to latency-only samples
+    res_off = fresh_engine().fit(g)
+    s_off = sample_from_result(res_off, kind="update", latency_ms=1.0)
+    assert s_off.modularity is None and s_off.communities is None
+
+
+# --- capped per-tenant counters ---
+
+def test_capped_counter_set_overflow_bucket():
+    reg = MetricsRegistry()
+    s = reg.scope("svc.admission")
+    caps = CappedCounterSet(s, "served", max_labels=3)
+    for t in ("a", "b", "c", "d", "e", "a"):
+        caps.inc(t)
+    assert caps.tracked == ("a", "b", "c")
+    snap = reg.snapshot()
+    assert snap["svc.admission.served.a"] == 2
+    assert snap["svc.admission.served.b"] == 1
+    assert snap["svc.admission.served.other"] == 2     # d + e share it
+    assert "svc.admission.served.d" not in snap
+    # keys sanitize into metric-name segments
+    caps2 = CappedCounterSet(s, "kinds", max_labels=2)
+    caps2.inc("ten ant.1")
+    assert "svc.admission.kinds.ten_ant_1" in reg.snapshot()
+    with pytest.raises(ValueError):
+        CappedCounterSet(s, "bad", max_labels=0)
+
+
+def test_service_served_counters_respect_cap():
+    graphs = {f"t{i}": erdos_renyi(60 + 10 * i, 5.0, seed=i)
+              for i in range(5)}
+    with TenantService(fresh_engine(),
+                       ServiceConfig(queue_capacity=16,
+                                     served_label_cap=2)) as svc:
+        label = svc._obs.label
+        for t, g in graphs.items():
+            svc.register(t, g).result()
+        snap = REGISTRY.snapshot()
+        # 2 dedicated counters + everything else pooled in .other
+        assert snap[f"{label}.admission.served.t0"] == 1
+        assert snap[f"{label}.admission.served.t1"] == 1
+        assert snap[f"{label}.admission.served.other"] == 3
+        assert f"{label}.admission.served.t2" not in snap
+        # exact per-tenant truth stays on stats()
+        st = svc.stats()
+        assert st["admission"]["served_per_tenant"] == {
+            t: 1 for t in graphs}
+    svc.close()
+
+
+# --- live service integration ---
+
+def test_service_health_timelines_disconnected_zero():
+    from repro.core import GraphDelta
+    rng = np.random.default_rng(7)
+    graphs = {f"t{i}": erdos_renyi(90 + 15 * i, 5.0, seed=10 + i)
+              for i in range(4)}
+    with TenantService(fresh_engine(quality="full"),
+                       ServiceConfig(queue_capacity=16,
+                                     health=HealthConfig())) as svc:
+        label = svc._obs.label
+        for t, g in graphs.items():
+            svc.register(t, g).result()
+        for t, g in graphs.items():
+            d = GraphDelta.make(insert=rng.integers(
+                0, g.n, size=(3, 2)).tolist())
+            svc.update(t, d).result()
+        health = svc.stats()["health"]
+        assert set(health["tenants"]) == set(graphs)
+        for t, tl in health["tenants"].items():
+            assert tl["samples"] == 2
+            last = tl["last"]
+            # headline invariant holds on every served fit
+            assert last["disconnected_fraction"] == 0.0
+            assert last["modularity"] is not None
+            assert last["kind"] == "update"
+        assert "disconnected" not in health["alert_counts"]
+        snap = REGISTRY.snapshot()
+        assert snap[f"{label}.health.samples"] == 8
+        assert snap[f"{label}.health.disconnected_fraction"] == 0.0
+        assert snap[f"{label}.health.tenants"] == 4
+    svc.close()
+
+
+def test_service_health_latency_only_without_quality():
+    g = erdos_renyi(80, 5.0, seed=3)
+    with TenantService(fresh_engine(),   # quality="off"
+                       ServiceConfig(queue_capacity=8)) as svc:
+        svc.register("t", g).result()
+        svc.refresh("t").result()
+        health = svc.stats()["health"]
+        tl = health["tenants"]["t"]
+        assert tl["samples"] == 2
+        assert tl["last"]["latency_ms"] > 0.0
+        assert tl["last"]["modularity"] is None
+        assert health["alert_counts"] == {}
+    svc.close()

@@ -407,4 +407,202 @@ def test_serving_emits_spans():
         svc.refresh("t").result()
     names = {s.name for s in TRACER.spans()}
     assert {"serve.admit", "serve.launch", "serve.settle",
-            "batch.dispatch"} <= names
+            "batch.dispatch", "batch.settle"} <= names
+
+
+def test_scope_release_frees_child_labels():
+    """Releasing a scope must free its children's labels too — a
+    restarted service's sub-scopes get bare names, not #1 suffixes."""
+    reg = MetricsRegistry()
+    s1 = reg.scope("svc")
+    assert s1.scope("inner").label == "svc.inner"
+    s1.release()
+    s2 = reg.scope("svc")
+    assert s2.label == "svc"
+    assert s2.scope("inner").label == "svc.inner"
+
+
+# --- exporters: exemplars, prometheus text, endpoint, jsonl ---
+
+def test_histogram_exemplars_capture_span_ids():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat", (10, 100))
+    h.observe(5)                       # outside any span: no exemplar
+    assert h.exemplars() == [None, None, None]
+    TRACER.reset()
+    with TRACER.span("req") as s:
+        h.observe(50)
+        h.observe(500)                 # overflow bucket
+    ex = h.exemplars()
+    assert ex[0] is None
+    assert ex[1] == (50.0, s.span_id)
+    assert ex[2] == (500.0, s.span_id)
+    # the latest observation in a bucket wins
+    with TRACER.span("req2") as s2:
+        h.observe(60)
+    assert h.exemplars()[1] == (60.0, s2.span_id)
+
+
+def test_prometheus_text_round_trip():
+    from repro.obs import parse_prometheus_text, prometheus_text
+    reg = MetricsRegistry()
+    reg.counter("svc.requests").inc(3)
+    reg.gauge("svc.quality.disconnected_fraction").set(0.0)
+    h = reg.histogram("svc.lat_ms", (1, 10))
+    TRACER.reset()
+    with TRACER.span("s") as sp:
+        h.observe(0.5)
+        h.observe(7.0)
+        h.observe(7.0)
+    text = prometheus_text(reg)
+    assert text.endswith("# EOF\n")
+    parsed = parse_prometheus_text(text)
+    assert parsed["repro_svc_requests_total"][0]["value"] == 3.0
+    assert parsed["repro_svc_quality_disconnected_fraction"][0]["value"] \
+        == 0.0
+    buckets = parsed["repro_svc_lat_ms_bucket"]
+    # cumulative counts, +Inf last
+    assert [b["labels"]["le"] for b in buckets] == ["1", "10", "+Inf"]
+    assert [b["value"] for b in buckets] == [1.0, 3.0, 3.0]
+    # every observation ran inside a span: exemplars carry its id
+    ex = buckets[1]["exemplar"]
+    assert ex["labels"]["span_id"] == str(sp.span_id)
+    assert ex["value"] == 7.0
+    assert parsed["repro_svc_lat_ms_count"][0]["value"] == 3.0
+    assert parsed["repro_svc_lat_ms_sum"][0]["value"] == \
+        pytest.approx(14.5)
+
+
+def test_prometheus_parser_is_strict():
+    from repro.obs import parse_prometheus_text
+    with pytest.raises(ValueError, match="EOF"):
+        parse_prometheus_text("repro_x_total 1\n")
+    with pytest.raises(ValueError, match="malformed sample"):
+        parse_prometheus_text("not a metric line!\n# EOF\n")
+    with pytest.raises(ValueError, match="after # EOF"):
+        parse_prometheus_text("# EOF\nrepro_x_total 1\n")
+    with pytest.raises(ValueError, match="malformed comment"):
+        parse_prometheus_text("# FREeform chatter\n# EOF\n")
+
+
+def test_metrics_server_routes():
+    import urllib.request
+
+    from repro.obs import MetricsServer, parse_prometheus_text
+    reg = MetricsRegistry()
+    reg.counter("hits").inc(2)
+    with MetricsServer(reg, port=0,
+                       health_fn=lambda: {"tenants": 3}) as srv:
+        def get(path):
+            with urllib.request.urlopen(srv.url + path, timeout=10) as r:
+                return r.headers.get("Content-Type"), r.read().decode()
+
+        ctype, text = get("/metrics")
+        assert ctype.startswith("text/plain")
+        assert parse_prometheus_text(text)["repro_hits_total"][0][
+            "value"] == 2.0
+        _, js = get("/metrics.json")
+        assert json.loads(js)["hits"] == 2
+        _, hz = get("/healthz")
+        assert json.loads(hz) == {"ok": True, "tenants": 3}
+        reg.counter("hits").inc()      # scrapes render live values
+        _, text2 = get("/metrics")
+        assert parse_prometheus_text(text2)["repro_hits_total"][0][
+            "value"] == 3.0
+        with pytest.raises(urllib.error.HTTPError):
+            get("/nope")
+
+
+def test_jsonl_sink_appends_snapshots(tmp_path):
+    from repro.obs import JsonlSink
+    reg = MetricsRegistry()
+    reg.counter("n").inc()
+    path = tmp_path / "metrics.jsonl"
+    with JsonlSink(str(path)) as sink:
+        sink.emit(reg, tag="t+1s")
+        reg.counter("n").inc()
+        sink.emit(reg, tag="shutdown")
+    lines = [json.loads(l) for l in path.read_text().splitlines()]
+    assert [l["tag"] for l in lines] == ["t+1s", "shutdown"]
+    assert lines[0]["metrics"]["n"] == 1
+    assert lines[1]["metrics"]["n"] == 2
+    assert lines[1]["ts"] >= lines[0]["ts"]
+
+
+# --- ooc chrome trace / stats reporter / obs top ---
+
+def test_ooc_chrome_trace_export(tmp_path):
+    g = erdos_renyi(150, 5.0, seed=9)
+    TRACER.reset()
+    r = fresh_engine(split="lp").fit(g, memory_budget="4KB")
+    assert r.partitions > 1
+    names = {s.name for s in TRACER.spans()}
+    assert {"ooc.plan", "ooc.propagation", "ooc.split"} <= names
+    out = tmp_path / "ooc_trace.json"
+    n = TRACER.export_chrome(out)
+    events = json.loads(out.read_text())
+    assert n == len(events) >= 3
+    ooc_events = [e for e in events if e["name"].startswith("ooc.")]
+    assert {e["name"] for e in ooc_events} \
+        >= {"ooc.plan", "ooc.propagation", "ooc.split"}
+    for ev in ooc_events:
+        assert ev["ph"] == "X" and ev["dur"] >= 0
+
+
+def test_periodic_stats_reporter_flushes_quality(tmp_path, capsys):
+    """The serve driver's --stats-every-s reporter: periodic ticks while
+    the workload runs, and a final flush on shutdown that carries the
+    quality gauges the run populated (plus the JSONL mirror)."""
+    import time as _time
+
+    from repro.launch.serve import _PeriodicStats
+    from repro.obs import JsonlSink
+    g = karate_club()[0]
+    path = tmp_path / "stats.jsonl"
+    sink = JsonlSink(str(path))
+    with _PeriodicStats(0.05, sink=sink):
+        eng = fresh_engine(quality="full")
+        label = eng._q_obs.label
+        eng.fit(g)
+        _time.sleep(0.15)              # let at least one tick fire
+    sink.emit(tag="shutdown")
+    sink.close()
+    out = capsys.readouterr().out
+    assert "[stats t+" in out          # periodic snapshot emitted
+    assert "[stats final]" in out
+    final = out.split("[stats final]")[1]
+    assert f"{label}.disconnected_fraction" in final
+    assert f"{label}.modularity" in final
+    lines = [json.loads(l) for l in path.read_text().splitlines()]
+    assert lines[-1]["tag"] == "shutdown"
+    assert lines[-1]["metrics"][f"{label}.disconnected_fraction"] == 0.0
+    assert any(l["tag"] == "final" for l in lines)
+
+
+def test_obs_top_renders_frames():
+    from repro.launch.obs import render_top, run_top
+    reg = MetricsRegistry()
+    reg.counter("svc.requests").inc(7)
+    reg.histogram("svc.lat_ms", (1, 10)).observe(3.0)
+    frame = render_top(reg.snapshot(), limit=1)
+    assert "metric" in frame and "... 1 more metrics" in frame
+    outputs = []
+    frames = run_top(every_s=0.0, iterations=2, registry=reg,
+                     out=outputs.append)
+    assert frames == 2
+    joined = "\n".join(outputs)
+    assert "svc.requests" in joined and "svc.lat_ms" in joined
+    assert "[obs top] frame 2" in joined
+
+
+def test_obs_top_polls_endpoint():
+    from repro.launch.obs import run_top
+    from repro.obs import MetricsServer
+    reg = MetricsRegistry()
+    reg.counter("polls").inc(5)
+    outputs = []
+    with MetricsServer(reg, port=0) as srv:
+        frames = run_top(endpoint=srv.url, every_s=0.0, iterations=1,
+                         out=outputs.append)
+    assert frames == 1
+    assert any("polls" in line for line in outputs)

@@ -1,0 +1,291 @@
+"""Quality-of-result telemetry: reports, churn, parity, cached checks.
+
+The load-bearing contract mirrors the profile layer's: the ``quality``
+config knob ("off" | "basic" | "full") is *post-fit* instrumentation —
+it must never change a single label or iteration count, solo, batched,
+out-of-core, or streaming.  Quality is deliberately absent from
+``algo_key`` so parity holds by construction; these tests pin it anyway.
+
+Also pinned: per-mode report field semantics (basic stays host-only —
+sizes, count, churn; only full pays the modularity + connectivity device
+passes; ooc reports are always host-only), label churn as a
+labeling-invariant membership distance, the fingerprint cache behind
+repeated ``check_connected`` calls, and the registry gauge names the
+serving health plane reads.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.engine import CompileCache, Engine, EngineConfig
+from repro.graphgen import erdos_renyi, karate_club
+from repro.obs import MetricsRegistry
+from repro.obs.quality import (
+    QualityReport,
+    canonical_labels,
+    compute_quality,
+    label_churn,
+    record_report,
+)
+
+QUALITY_MODES = ("off", "basic", "full")
+
+
+def fresh_engine(**kw):
+    return Engine(EngineConfig(**kw), cache=CompileCache())
+
+
+# --- canonical labels & churn ---
+
+def test_canonical_labels_first_occurrence():
+    labels = np.array([7, 7, 3, 7, 3, 9])
+    out = canonical_labels(labels)
+    assert np.array_equal(out, [0, 0, 1, 0, 1, 2])
+    # already-canonical input is a fixed point
+    assert np.array_equal(canonical_labels(out), out)
+
+
+def test_churn_zero_for_identical_and_renamed_partitions():
+    labels = np.array([0, 0, 1, 1, 2, 2])
+    assert label_churn(labels, labels) == (0.0, 6)
+    # pure relabeling (5,5,9,9,0,0) is the same partition: churn 0
+    renamed = np.array([5, 5, 9, 9, 0, 0])
+    assert label_churn(labels, renamed) == (0.0, 6)
+
+
+def test_churn_counts_membership_moves():
+    prev = np.array([0, 0, 0, 1, 1, 1])
+    new = np.array([0, 0, 1, 1, 1, 1])   # one vertex switched community
+    churn, k = label_churn(prev, new)
+    assert k == 6 and churn == pytest.approx(1 / 6)
+
+
+def test_churn_none_without_baseline():
+    assert label_churn(None, np.array([0, 1])) == (None, 0)
+    assert label_churn(np.array([]), np.array([0, 1])) == (None, 0)
+
+
+def test_churn_common_prefix_on_grown_graph():
+    prev = np.array([0, 0, 1, 1])
+    new = np.array([0, 0, 1, 1, 2, 2])   # two vertices appended
+    churn, k = label_churn(prev, new)
+    assert k == 4 and churn == 0.0
+
+
+# --- compute_quality report semantics ---
+
+def test_compute_quality_rejects_off_and_unknown():
+    labels = np.zeros(4, dtype=np.int32)
+    with pytest.raises(ValueError):
+        compute_quality(labels, mode="off")
+    with pytest.raises(ValueError):
+        compute_quality(labels, mode="verbose")
+
+
+def test_report_size_distribution():
+    labels = np.array([0, 0, 0, 1, 1, 2])
+    rep = compute_quality(labels, mode="basic")
+    assert rep.n == 6 and rep.num_communities == 3
+    assert rep.size_min == 1 and rep.size_max == 3
+    assert rep.size_mean == pytest.approx(2.0)
+    d = rep.to_dict()
+    assert d["mode"] == "basic" and d["num_communities"] == 3
+
+
+def test_basic_vs_full_modularity_and_disconnected():
+    import jax.numpy as jnp
+
+    from repro.core import modularity
+    g = karate_club()[0]
+    eng = fresh_engine()
+    res = eng.fit(g)
+    basic = compute_quality(res.labels, mode="basic", graph=g)
+    full = compute_quality(res.labels, mode="full", graph=g,
+                           disconnected_fraction=res.check_connected(g))
+    # basic computes modularity (paper Eq. 1) but never echoes connectivity
+    ref_q = float(modularity(g, jnp.asarray(res.labels)))
+    assert basic.modularity == pytest.approx(ref_q)
+    assert basic.disconnected_fraction is None
+    assert full.disconnected_fraction == 0.0
+    assert full.modularity == pytest.approx(basic.modularity)
+
+
+def test_quality_report_without_graph_is_host_only():
+    labels = np.array([0, 1, 0, 1])
+    rep = compute_quality(labels, mode="full",
+                          prev_labels=np.array([0, 1, 1, 1]))
+    assert rep.modularity is None and rep.disconnected_fraction is None
+    assert rep.churn == pytest.approx(0.25) and rep.churn_compared == 4
+
+
+def test_record_report_registry_names():
+    reg = MetricsRegistry()
+    scope = reg.scope("quality")
+    rep = compute_quality(np.array([0, 0, 1]), mode="basic")
+    record_report(scope, rep)
+    record_report(scope, None)   # None-safe: skipped fits don't crash
+    snap = reg.snapshot()
+    assert snap["quality.reports"] == 1
+    assert snap["quality.communities"] == 2
+    assert snap["quality.size_max"] == 2
+
+
+# --- engine config plumbing ---
+
+def test_engine_config_validates_quality():
+    for mode in QUALITY_MODES:
+        assert EngineConfig(quality=mode).quality == mode
+    with pytest.raises(ValueError):
+        EngineConfig(quality="loud")
+
+
+def test_quality_not_in_algo_key():
+    """quality is post-fit: compiled executables must be shared across
+    modes, which algo_key controls."""
+    keys = {EngineConfig(quality=m).algo_key() for m in QUALITY_MODES}
+    assert len(keys) == 1
+
+
+# --- bit parity across quality modes ---
+
+@pytest.mark.parametrize("backend", ("segment", "tile"))
+def test_parity_solo(backend):
+    g = erdos_renyi(240, 6.0, seed=3)
+    runs = {m: fresh_engine(backend=backend, quality=m).fit(g)
+            for m in QUALITY_MODES}
+    ref = runs["off"]
+    for m in ("basic", "full"):
+        r = runs[m]
+        assert np.array_equal(ref.labels, r.labels), m
+        assert ref.lpa_iterations == r.lpa_iterations
+        assert ref.split_iterations == r.split_iterations
+        assert isinstance(r.quality, QualityReport) and r.quality.mode == m
+    assert ref.quality is None
+
+
+def test_parity_batched():
+    graphs = [erdos_renyi(n, 5.0, seed=n) for n in (60, 90, 120)]
+    runs = {m: fresh_engine(quality=m).fit_many(graphs)
+            for m in QUALITY_MODES}
+    for i in range(len(graphs)):
+        ref = runs["off"][i]
+        for m in ("basic", "full"):
+            r = runs[m][i]
+            assert np.array_equal(ref.labels, r.labels)
+            assert ref.lpa_iterations == r.lpa_iterations
+            assert r.quality.num_communities == r.num_communities
+
+
+def test_parity_ooc():
+    g = erdos_renyi(300, 6.0, seed=11)
+    runs = {m: fresh_engine(quality=m).fit(g, memory_budget="4KB")
+            for m in QUALITY_MODES}
+    ref = runs["off"]
+    assert ref.partitions > 1
+    for m in ("basic", "full"):
+        r = runs[m]
+        assert r.partitions == ref.partitions
+        assert np.array_equal(ref.labels, r.labels)
+        assert ref.lpa_iterations == r.lpa_iterations
+        # ooc quality is host-only: no extra device pass over the spilled
+        # graph, so modularity/connectivity stay unset
+        assert r.quality.modularity is None
+        assert r.quality.disconnected_fraction is None
+        assert r.quality.num_communities == r.num_communities
+
+
+def test_parity_streaming_warm_start():
+    from repro.core import GraphDelta, affected_frontier, apply_delta
+    g = erdos_renyi(180, 6.0, seed=5)
+    base = fresh_engine().fit(g).labels
+    d = GraphDelta.make(insert=[[0, 90], [1, 120]])
+    g2 = apply_delta(g, d)
+    frontier = affected_frontier(d, g2.n)
+    runs = {m: fresh_engine(quality=m).fit(g2, init_labels=base,
+                                           init_active=frontier)
+            for m in QUALITY_MODES}
+    ref = runs["off"]
+    assert ref.warm_started
+    for m in ("basic", "full"):
+        r = runs[m]
+        assert np.array_equal(ref.labels, r.labels)
+        assert ref.lpa_iterations == r.lpa_iterations
+        # warm refit has a baseline: churn is a real [0, 1] drift signal
+        assert r.quality.churn is not None
+        assert 0.0 <= r.quality.churn <= 1.0
+        assert r.quality.churn_compared == g2.n
+
+
+def test_engine_basic_mode_is_host_only():
+    """The <=5% overhead gate rests on this: basic never pays a device
+    pass, so modularity and connectivity stay None on its reports."""
+    g = karate_club()[0]
+    r = fresh_engine(quality="basic").fit(g)
+    assert r.quality.mode == "basic"
+    assert r.quality.modularity is None
+    assert r.quality.disconnected_fraction is None
+    assert r.quality.num_communities == r.num_communities
+    assert r.quality.size_max >= r.quality.size_min > 0
+
+
+def test_cold_fit_has_no_churn_baseline():
+    g = karate_club()[0]
+    r = fresh_engine(quality="full").fit(g)
+    assert r.quality.churn is None and r.quality.churn_compared == 0
+    assert r.quality.disconnected_fraction == 0.0
+
+
+def test_engine_quality_writes_registry():
+    from repro.obs import REGISTRY
+    g = karate_club()[0]
+    eng = fresh_engine(quality="full")
+    label = eng._q_obs.label
+    eng.fit(g)
+    snap = REGISTRY.snapshot()
+    assert snap[f"{label}.reports"] == 1
+    assert snap[f"{label}.disconnected_fraction"] == 0.0
+    assert f"{label}.modularity" in snap
+
+
+# --- check_connected fingerprint cache ---
+
+def test_check_connected_caches_on_graph_fingerprint(monkeypatch):
+    import repro.core.detect as detect
+    g1 = erdos_renyi(80, 5.0, seed=1)
+    g2 = erdos_renyi(80, 5.0, seed=2)
+    res = fresh_engine().fit(g1)
+    real = detect.disconnected_fraction
+    calls = []
+
+    def counting(graph, labels):
+        calls.append(graph)
+        return real(graph, labels)
+
+    monkeypatch.setattr(detect, "disconnected_fraction", counting)
+    res.disconnected_fraction = None   # force first compute through cache
+    res._connected_fp = None
+    assert res.check_connected(g1) == 0.0
+    assert res.check_connected(g1) == 0.0   # hit: same fingerprint
+    assert len(calls) == 1
+    res.check_connected(g2)                 # miss: different graph
+    assert len(calls) == 2
+    res.check_connected(g2)                 # hit again on the new key
+    assert len(calls) == 2
+
+
+def test_check_connected_cache_survives_field_reads():
+    g = karate_club()[0]
+    res = fresh_engine(quality="full").fit(g)
+    # full mode already ran the pass during fit; a later explicit call
+    # must reuse it (same fingerprint) rather than re-reduce
+    assert res.disconnected_fraction == 0.0
+    fp = res._connected_fp
+    assert res.check_connected(g) == 0.0
+    assert res._connected_fp == fp
+
+
+def test_detection_result_quality_excluded_from_comparison():
+    fields = {f.name: f for f in dataclasses.fields(
+        fresh_engine(quality="basic").fit(karate_club()[0]))}
+    assert fields["_connected_fp"].compare is False
